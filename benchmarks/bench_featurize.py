@@ -1,0 +1,58 @@
+"""Paper Table 6: the featurization catalog, one benchmark per row —
+dictionary-domain cost (K) for each transform + the device gather path
+through the Pallas kernels (interpret mode on CPU)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.columnar import Dictionary
+from repro.core import AugmentedDictionary
+from repro.kernels.adv_gather import adv_gather
+from repro.kernels.hist import hist
+from benchmarks.common import time_call, emit
+
+N = 1 << 16          # device-path rows (interpret mode is slow; shape-true)
+K = 999
+
+
+def run() -> None:
+    rng = np.random.default_rng(3)
+    ages = rng.integers(0, K, N)
+    d, codes = Dictionary.from_data(ages)
+    aug = AugmentedDictionary(d)
+
+    catalog = [
+        ("float", {}), ("onehot", {"max_cardinality": 4096}),
+        ("minmax", {}), ("mean_norm", {}), ("zscore", {}),
+        ("binarize", {"threshold": 500.0}),
+        ("quantile", {"q": 4}), ("hash_bucket", {"n_buckets": 32}),
+        ("bucketize", {"boundaries": np.linspace(0, K, 7)[1:-1]}),
+        ("embedding", {"dim": 16}),
+    ]
+    for kind, params in catalog:
+        us = time_call(lambda k=kind, p=params:
+                       AugmentedDictionary(d).add(f"b_{k}", k, **p),
+                       repeats=5)
+        emit(f"table6/build_{kind}", us, f"K={d.cardinality}")
+
+    # row-space application = one gather regardless of transform
+    aug.add("zscore", "zscore")
+    us = time_call(aug.featurize, "zscore", codes, repeats=5)
+    emit("table6/apply_gather_host", us, f"N={N}")
+
+    # device path: Pallas adv_gather (interpret) + count-metadata hist build
+    table = jnp.asarray(aug["zscore"].table)
+    jcodes = jnp.asarray(codes)
+    adv_gather(table, jcodes).block_until_ready()
+    us = time_call(lambda: adv_gather(table, jcodes).block_until_ready(),
+                   repeats=3)
+    emit("table6/apply_gather_pallas_interp", us, f"N={N}")
+    hist(jcodes, d.cardinality).block_until_ready()
+    us = time_call(lambda: hist(jcodes, d.cardinality).block_until_ready(),
+                   repeats=3)
+    emit("table6/count_metadata_build_pallas", us, f"K={d.cardinality}")
+
+
+if __name__ == "__main__":
+    run()

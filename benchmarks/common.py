@@ -1,0 +1,25 @@
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, *args, repeats: int = 5, warmup: int = 2,
+              **kwargs) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kwargs)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

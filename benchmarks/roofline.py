@@ -1,0 +1,80 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json and emits, per (arch × shape) on the single-pod
+mesh: the three roofline terms (compute / memory / collective seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS utility ratio, and per-device
+peak HBM. Also usable as a library by EXPERIMENTS tooling.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+N_CHIPS_SINGLE = 256
+
+
+def load_cells(mesh: str = "single", variant: str = "baseline") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS,
+                                           f"*__{mesh}__{variant}.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def row(cell: dict) -> dict | None:
+    if cell.get("status") != "ok" or "roofline" not in cell:
+        return None
+    r = cell["roofline"]
+    ex = cell["extrapolated"]
+    hlo_flops_global = ex["flops"] * cell["n_chips"]
+    util = cell["model_flops"] / hlo_flops_global if hlo_flops_global else 0.0
+    mem = cell["raw"]["memory"]
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "variant": cell.get("variant", "baseline"),
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"], "dominant": r["dominant"],
+        "bound_s": r["bound_s"],
+        "roofline_frac": r["compute_s"] / r["bound_s"] if r["bound_s"] else 0,
+        "model_flops": cell["model_flops"],
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": util,
+        "peak_gb": mem.get("peak_bytes", 0) / 1e9,
+        "fits_16gb": mem.get("peak_bytes", 1e18) <= 16e9,
+    }
+
+
+def table(mesh: str = "single", variant: str = "baseline") -> list[dict]:
+    rows = []
+    for cell in load_cells(mesh, variant):
+        r = row(cell)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def run() -> None:
+    from benchmarks.common import emit
+    for r in table():
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             r["bound_s"] * 1e6,
+             f"dom={r['dominant'].replace('_s','')};"
+             f"compute={r['compute_s']*1e3:.1f}ms;"
+             f"memory={r['memory_s']*1e3:.1f}ms;"
+             f"collective={r['collective_s']*1e3:.1f}ms;"
+             f"frac={r['roofline_frac']:.2f};"
+             f"useful={r['useful_ratio']:.2f};"
+             f"peak={r['peak_gb']:.1f}GB")
+    # skips
+    for cell in load_cells():
+        if cell.get("status", "").startswith("skipped"):
+            emit(f"roofline/{cell['arch']}/{cell['shape']}", 0.0,
+                 cell["status"])
+
+
+if __name__ == "__main__":
+    run()

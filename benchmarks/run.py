@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Output format: ``name,us_per_call,derived`` CSV lines.
+
+  table2  bits-to-encode + compression ratios          (paper Table 2, §5.1)
+  table3  count-metadata stats vs scans                (paper §6.2)
+  table4/5  ADV featurization vs recompute             (paper §6.3)
+  table6  featurization catalog build/apply            (paper §6.1)
+  fig1/2  end-to-end pipeline: traditional vs ADV      (paper Figs 1-2)
+  roofline  dry-run derived terms (if results present) (EXPERIMENTS.md)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_compression, bench_count_stats, bench_adv,
+                            bench_featurize, bench_pipeline)
+    mods = [bench_compression, bench_count_stats, bench_adv,
+            bench_featurize, bench_pipeline]
+    try:
+        from benchmarks import roofline
+        mods.append(roofline)
+    except ImportError:
+        pass
+    failures = 0
+    for mod in mods:
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"# FAILED {mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving: prefill + decode loop with a KV cache (serve_step path).
+
+Uses the xLSTM arch to show the recurrent-state serving path (O(1) state per
+token, the long_500k-capable family); switch --arch for transformer KV-cache
+serving.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or []) + [
+    "--arch", "xlstm-1.3b", "--preset", "small",
+    "--requests", "4", "--prompt-len", "16", "--max-new", "24",
+]
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Columnar storage substrate (paper §5): dictionary encoding, bit-packing,
+RLE, count metadata, and code-domain relational ops.
+
+The layout mirrors an in-memory columnar VLDB: a ``Table`` holds ``Column``s;
+each column is dictionary-encoded into small integer *codes* stored bit-packed
+per IMCU (in-memory compression unit); the ``Dictionary`` carries min/max and
+per-entry counts (paper §6.2) and hosts Augmented Dictionary Values (ADVs,
+paper §6.3) managed by :mod:`repro.core.adv`.
+"""
+from repro.columnar.bitpack import bits_needed, pack_bits, unpack_bits
+from repro.columnar.rle import rle_encode, rle_decode
+from repro.columnar.dictionary import Dictionary
+from repro.columnar.column import Column, IMCU_ROWS
+from repro.columnar.table import Table
+
+__all__ = [
+    "bits_needed", "pack_bits", "unpack_bits",
+    "rle_encode", "rle_decode",
+    "Dictionary", "Column", "Table", "IMCU_ROWS",
+]

@@ -1,0 +1,93 @@
+"""Bit-packing of dictionary codes (paper §5.1).
+
+Codes with cardinality K need ``ceil(log2(K))`` bits each (Table 2 of the
+paper). We pack b-bit codes into little-endian uint32 words, with fields
+allowed to straddle word boundaries — the same consecutive bit-packed layout
+the paper scans with SIMD/DAX. Host-side packing uses numpy; device-side
+unpacking has a Pallas kernel (``repro.kernels.bitunpack``) whose oracle is
+:func:`unpack_bits_jnp`.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def bits_needed(cardinality: int) -> int:
+    """Bits to encode ``cardinality`` distinct values (paper Table 2)."""
+    if cardinality < 1:
+        raise ValueError("cardinality must be >= 1")
+    if cardinality == 1:
+        return 1
+    return int(math.ceil(math.log2(cardinality)))
+
+
+def pack_bits(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Pack ``codes`` (non-negative ints < 2**bits) into a uint32 word stream.
+
+    Fields are little-endian within and across words and may straddle word
+    boundaries, giving the paper's fully-consecutive layout.
+    """
+    if not (1 <= bits <= WORD_BITS):
+        raise ValueError(f"bits must be in [1, {WORD_BITS}], got {bits}")
+    codes = np.asarray(codes, dtype=np.uint64)
+    if codes.ndim != 1:
+        raise ValueError("codes must be 1-D")
+    if codes.size and int(codes.max()) >= (1 << bits):
+        raise ValueError(f"code {int(codes.max())} does not fit in {bits} bits")
+    n = codes.size
+    total_bits = n * bits
+    n_words = (total_bits + WORD_BITS - 1) // WORD_BITS
+    # Accumulate into uint64 words then fold carries; vectorized two-word split.
+    out = np.zeros(n_words + 1, dtype=np.uint64)
+    bit_pos = np.arange(n, dtype=np.uint64) * np.uint64(bits)
+    word_idx = (bit_pos // WORD_BITS).astype(np.int64)
+    bit_off = (bit_pos % WORD_BITS).astype(np.uint64)
+    lo = (codes << bit_off) & np.uint64(0xFFFFFFFF)
+    hi = codes >> (np.uint64(WORD_BITS) - bit_off)  # bit_off==0 -> shift 32 ok on uint64
+    np.bitwise_or.at(out, word_idx, lo)
+    np.bitwise_or.at(out, word_idx + 1, hi)
+    return out[:n_words].astype(np.uint32)
+
+
+def unpack_bits(words: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`; returns int32 codes (host/numpy path)."""
+    words = np.asarray(words, dtype=np.uint64)
+    bit_pos = np.arange(n, dtype=np.uint64) * np.uint64(bits)
+    word_idx = (bit_pos // WORD_BITS).astype(np.int64)
+    bit_off = (bit_pos % WORD_BITS).astype(np.uint64)
+    padded = np.concatenate([words, np.zeros(1, dtype=np.uint64)])
+    lo = padded[word_idx] >> bit_off
+    hi = padded[word_idx + 1] << (np.uint64(WORD_BITS) - bit_off)
+    mask = np.uint64((1 << bits) - 1)
+    vals = np.where(bit_off == 0, lo & mask, (lo | hi) & mask)
+    return vals.astype(np.int32)
+
+
+def unpack_bits_jnp(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Pure-jnp oracle for the device-side unpack (see kernels/bitunpack).
+
+    ``words`` is uint32; returns int32 codes of length ``n``.
+    """
+    w = words.astype(jnp.uint32)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    bit_pos = idx * jnp.uint32(bits)
+    word_idx = (bit_pos // WORD_BITS).astype(jnp.int32)
+    bit_off = bit_pos % WORD_BITS
+    padded = jnp.concatenate([w, jnp.zeros((1,), jnp.uint32)])
+    lo = padded[word_idx] >> bit_off
+    # uint32 shift by 32 is undefined; mask the shift and zero the result instead.
+    shift_hi = (jnp.uint32(WORD_BITS) - bit_off) & jnp.uint32(31)
+    hi_raw = padded[word_idx + 1] << shift_hi
+    hi = jnp.where(bit_off == 0, jnp.uint32(0), hi_raw)
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def packed_nbytes(n: int, bits: int) -> int:
+    """Bytes used by n codes packed at ``bits`` bits each."""
+    return 4 * ((n * bits + WORD_BITS - 1) // WORD_BITS)

@@ -1,0 +1,112 @@
+"""Code-domain relational ops (paper §5/§6: filters, joins, group-bys run on
+small integer codes; values are only decoded at the query tail).
+
+These give the framework the SQL-ish surface the paper assumes data scientists
+use for featurization, while demonstrating the columnar win: every operator
+below works on int32 codes + dictionary metadata.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.columnar.column import Column
+from repro.columnar.dictionary import Dictionary
+from repro.columnar.table import Table
+
+
+# -- predicates -----------------------------------------------------------------
+def codes_matching(d: Dictionary, pred: Callable[[np.ndarray], np.ndarray]) -> np.ndarray:
+    """Evaluate a value-space predicate over the K dictionary values ONCE,
+    returning the matching code set. Row filtering is then `isin` on codes."""
+    mask = pred(d.values)
+    return np.flatnonzero(mask).astype(np.int32)
+
+
+def filter_mask(col: Column, pred: Callable[[np.ndarray], np.ndarray]) -> np.ndarray:
+    """Row mask for a value predicate, via dictionary + IMCU min/max pruning."""
+    match = codes_matching(col.dictionary, pred)
+    if match.size == 0:
+        return np.zeros(col.n_rows, dtype=bool)
+    if match.size == col.dictionary.cardinality:
+        return np.ones(col.n_rows, dtype=bool)
+    lut = np.zeros(col.dictionary.cardinality, dtype=bool)
+    lut[match] = True
+    mask = np.zeros(col.n_rows, dtype=bool)
+    live = set(col.prune_imcus(match))
+    start = 0
+    codes = None
+    for i, imcu in enumerate(col._imcus):
+        if i in live:
+            if codes is None:
+                codes = col.codes()          # decode once, lazily
+            mask[start:start + imcu.n] = lut[codes[start:start + imcu.n]]
+        start += imcu.n
+    return mask
+
+
+def filter_table(t: Table, column: str,
+                 pred: Callable[[np.ndarray], np.ndarray]) -> np.ndarray:
+    return filter_mask(t[column], pred)
+
+
+# -- group-by aggregation ----------------------------------------------------------
+def groupby_count(col: Column) -> tuple[np.ndarray, np.ndarray]:
+    """GROUP BY col COUNT(*) — pure dictionary metadata, zero row access (§6.2)."""
+    d = col.dictionary
+    return d.values, d.counts.copy()
+
+
+def groupby_agg(key: Column, value: Column, agg: str = "sum",
+                mask: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """GROUP BY key AGG(value) over codes; one bincount, no value decode until tail."""
+    kd, vd = key.dictionary, value.dictionary
+    kc, vc = key.codes(), value.codes()
+    if mask is not None:
+        kc, vc = kc[mask], vc[mask]
+    vals = vd.values.astype(np.float64)[vc]     # decode value column at tail
+    if agg == "sum":
+        out = np.bincount(kc, weights=vals, minlength=kd.cardinality)
+    elif agg == "mean":
+        s = np.bincount(kc, weights=vals, minlength=kd.cardinality)
+        n = np.bincount(kc, minlength=kd.cardinality)
+        out = s / np.maximum(n, 1)
+    elif agg == "count":
+        out = np.bincount(kc, minlength=kd.cardinality).astype(np.float64)
+    else:
+        raise ValueError(f"unknown agg {agg!r}")
+    return kd.values, out
+
+
+# -- join -------------------------------------------------------------------------
+def join_codes(left: Column, right: Column) -> tuple[np.ndarray, np.ndarray]:
+    """Inner equi-join on dictionary-encoded key columns.
+
+    Builds a code-translation LUT between the two dictionaries (K_l × lookup),
+    then joins in code space — the paper's 'simple calculations on small
+    integers' join path. Returns (left_row_idx, right_row_idx).
+    """
+    ld, rd = left.dictionary, right.dictionary
+    # translate: left code -> right code (or -1)
+    r_index = {v: i for i, v in enumerate(rd.values.tolist())}
+    trans = np.array([r_index.get(v, -1) for v in ld.values.tolist()],
+                     dtype=np.int64)
+    lc = left.codes()
+    rc = right.codes()
+    lr = trans[lc]                               # right-code per left row
+    # bucket right rows by code
+    order = np.argsort(rc, kind="stable")
+    sorted_rc = rc[order]
+    starts = np.searchsorted(sorted_rc, np.arange(rd.cardinality), side="left")
+    ends = np.searchsorted(sorted_rc, np.arange(rd.cardinality), side="right")
+    li, ri = [], []
+    for i in np.flatnonzero(lr >= 0):
+        code = lr[i]
+        rows = order[starts[code]:ends[code]]
+        if rows.size:
+            li.append(np.full(rows.size, i, dtype=np.int64))
+            ri.append(rows)
+    if not li:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    return np.concatenate(li), np.concatenate(ri)

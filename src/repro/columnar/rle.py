@@ -1,0 +1,47 @@
+"""Run-length encoding on dictionary codes (paper §5.2).
+
+RLE stacks on top of dictionary encoding and shines on sorted/semi-sorted
+columns. Decode is variable-rate and sequential, so per DESIGN.md it is a
+host-side storage codec (numpy); a cumsum-based jnp decode is provided for
+block-aligned device use.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def rle_encode(codes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Return (values, run_lengths), both int32/int64-safe numpy arrays."""
+    codes = np.asarray(codes)
+    if codes.ndim != 1:
+        raise ValueError("codes must be 1-D")
+    n = codes.size
+    if n == 0:
+        return codes[:0].astype(np.int32), np.zeros(0, dtype=np.int64)
+    change = np.empty(n, dtype=bool)
+    change[0] = True
+    np.not_equal(codes[1:], codes[:-1], out=change[1:])
+    starts = np.flatnonzero(change)
+    values = codes[starts].astype(np.int32)
+    lengths = np.diff(np.append(starts, n)).astype(np.int64)
+    return values, lengths
+
+
+def rle_decode(values: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    return np.repeat(np.asarray(values), np.asarray(lengths)).astype(np.int32)
+
+
+def rle_decode_jnp(values: jnp.ndarray, lengths: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Device decode for a fixed output length ``n`` (cumsum + searchsorted)."""
+    ends = jnp.cumsum(lengths)
+    pos = jnp.arange(n)
+    run = jnp.searchsorted(ends, pos, side="right")
+    run = jnp.clip(run, 0, values.shape[0] - 1)
+    return values[run].astype(jnp.int32)
+
+
+def rle_nbytes(values: np.ndarray, lengths: np.ndarray, value_bits: int) -> int:
+    """Storage estimate: value_bits per value + 32-bit run lengths."""
+    n_runs = int(np.asarray(values).size)
+    return (n_runs * value_bits + 7) // 8 + 4 * n_runs

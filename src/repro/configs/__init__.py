@@ -1,0 +1,5 @@
+from repro.configs.registry import get_config, reduced, ARCH_IDS
+from repro.configs.shapes import SHAPES, ShapeSpec, input_specs, applicable
+
+__all__ = ["get_config", "reduced", "ARCH_IDS", "SHAPES", "ShapeSpec",
+           "input_specs", "applicable"]

@@ -1,0 +1,73 @@
+"""Assigned input shapes × per-arch input specs (ShapeDtypeStructs only).
+
+train_*  lowers train_step; prefill_* lowers the prefill pass; decode_* and
+long_*  lower serve_step (one token against a seq_len-deep cache/state).
+long_500k is sub-quadratic-only: skipped for pure full-attention archs
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped). long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "skipped(full-attention)"
+    return True, ""
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For train/prefill this is the token batch (+ stub frontend embeddings);
+    for decode it's the single-token batch (the serve state is built
+    separately via eval_shape of init_serve_state).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _i32((b, s)), "labels": _i32((b, s))}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = _f32((b, cfg.n_patches, cfg.frontend_dim))
+        if cfg.family == "audio":
+            batch["frames"] = _f32((b, s, cfg.frontend_dim))
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _i32((b, s))}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = _f32((b, cfg.n_patches, cfg.frontend_dim))
+        if cfg.family == "audio":
+            batch["frames"] = _f32((b, s, cfg.frontend_dim))
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": _i32((b, 1))}
+    raise ValueError(shape.kind)

@@ -1,0 +1,14 @@
+"""The paper's primary contribution: Augmented Dictionary Values (ADVs).
+
+- :mod:`repro.core.adv` — ADV columns attached to columnar dictionaries
+- :mod:`repro.core.feature_spec` — declarative featurization specs (Table 6)
+- :mod:`repro.core.pipeline` — FeaturePipeline: columnar table -> device
+  feature batches via fused ADV gathers (minimal data movement)
+- :mod:`repro.core.feedback` — analytics-cycle write-back (paper §7)
+"""
+from repro.core.adv import AugmentedDictionary, ADV
+from repro.core.feature_spec import FeatureSpec, FeatureSet
+from repro.core.pipeline import FeaturePipeline
+
+__all__ = ["AugmentedDictionary", "ADV", "FeatureSpec", "FeatureSet",
+           "FeaturePipeline"]

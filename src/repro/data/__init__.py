@@ -1,0 +1,7 @@
+"""Data pipeline: dictionary-encoded, bit-packed token storage (the paper's
+columnar substrate feeding the LM trainer)."""
+from repro.data.tokenstore import TokenStore
+from repro.data.synthetic import synthetic_corpus
+from repro.data.loader import token_batches
+
+__all__ = ["TokenStore", "synthetic_corpus", "token_batches"]

@@ -1,0 +1,41 @@
+"""Batch loader: TokenStore -> (tokens, labels) minibatches.
+
+Deterministic, restart-safe (seeded per step — resuming at step k replays
+the exact batch k would have seen, a fault-tolerance requirement), with
+next-token labels and optional stub frontends for vlm/audio archs.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.tokenstore import TokenStore
+from repro.models.config import ModelConfig
+
+
+def token_batches(store: TokenStore, cfg: ModelConfig, *, batch: int,
+                  seq: int, seed: int = 0, start_step: int = 0
+                  ) -> Iterator[dict]:
+    span = seq + 1
+    max_start = store.n - span
+    step = start_step
+    while True:
+        rng = np.random.default_rng((seed, step))
+        starts = rng.integers(0, max_start, size=batch)
+        windows = np.stack([store.get_span(s, span) for s in starts])
+        out = {"tokens": jnp.asarray(windows[:, :-1], jnp.int32),
+               "labels": jnp.asarray(windows[:, 1:], jnp.int32)}
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.n_patches,
+                                     cfg.frontend_dim)), jnp.float32)
+            # patch positions carry no next-token signal
+            out["labels"] = out["labels"].at[:, :cfg.n_patches].set(-1)
+        if cfg.family == "audio":
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.frontend_dim)),
+                jnp.float32)
+        yield out
+        step += 1

@@ -1,0 +1,3 @@
+"""Distribution layer: sharding rules, compressed collectives, pipeline
+parallelism. pjit/GSPMD does the partitioning; this package decides WHAT
+to shard where (DESIGN.md §4)."""

@@ -1,0 +1,92 @@
+"""Activation-sharding context: lets pure model code emit GSPMD sharding
+constraints without threading a Mesh through every signature.
+
+The residual stream between scanned layer groups is the largest liveness in
+training (the scan carry stack: L × (B,S,D)); constraining it to
+P(batch, 'model', None) — sequence parallelism — shrinks that term by the
+model-axis width and converts per-layer TP all-reduces into
+reduce-scatter/all-gather pairs (Megatron-SP). Enabled by the dry-run and
+the distributed trainer; a no-op when no mesh is active (CPU tests).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE: dict = {"mesh": None}
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    prev = _STATE["mesh"]
+    _STATE["mesh"] = mesh
+    try:
+        yield
+    finally:
+        _STATE["mesh"] = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def _batch_axes_for(mesh: Mesh, b: int):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    import numpy as np
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and b % total == 0:
+        return axes
+    for a in axes:
+        if b % mesh.shape[a] == 0:
+            return (a,)
+    return None
+
+
+def constrain_last(x):
+    """Shard the LAST dim over 'model' when divisible (GLA value/state
+    tensors); batch dim over DP axes when 3+D. No-op without a mesh."""
+    mesh = _STATE["mesh"]
+    if mesh is None or x.ndim < 2:
+        return x
+    m = mesh.shape.get("model", 1)
+    last = "model" if (m > 1 and x.shape[-1] % m == 0) else None
+    if last is None:
+        return x
+    ba = _batch_axes_for(mesh, x.shape[0]) if x.ndim >= 3 else None
+    spec = [ba] + [None] * (x.ndim - 2) + [last]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_residual(x, prefer: str = "seq"):
+    """Residual-stream constraint on (B, S, D); no-op without an active mesh.
+
+    prefer="seq":     P(batch, 'model', None) — Megatron-SP for attention
+                      stacks (full-S ops re-gather per layer).
+    prefer="channel": P(batch, None, 'model') — for SSM/hybrid stacks whose
+                      chunked recurrence is sequential in S; sharding S would
+                      force GSPMD to replicate the whole recurrence (the
+                      xlstm 60GB failure mode), channels shard cleanly.
+    """
+    mesh = _STATE["mesh"]
+    if mesh is None or x.ndim != 3:
+        return x
+    b, s, d = x.shape
+    m = mesh.shape.get("model", 1)
+    if prefer == "dp":
+        import numpy as np
+        axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        ba = axes if b % total == 0 else _batch_axes_for(mesh, b)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(ba, None, None)))
+    ba = _batch_axes_for(mesh, b)
+    if prefer == "channel":
+        da = "model" if (m > 1 and d % m == 0) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(ba, None, da)))
+    sa = "model" if (m > 1 and s > 1 and s % m == 0) else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(ba, sa, None)))

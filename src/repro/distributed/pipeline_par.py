@@ -1,0 +1,75 @@
+"""GPipe-style pipeline parallelism over a 'stage' mesh axis (opt-in).
+
+For fleets beyond 2 pods the data×model mesh runs out of useful width; this
+module adds a third option: layer groups sharded over a 'stage' axis with
+microbatch streaming. Implemented with shard_map + collective_permute (the
+jax-native rendering of the send/recv pipeline schedule) — compute of stage i
+on microbatch j overlaps the (i-1 -> i) activation transfer of microbatch
+j+1 because XLA schedules the ppermute asynchronously.
+
+Schedule: forward-only GPipe loop with S + M - 1 ticks (S stages, M
+microbatches). Bubble fraction = (S-1)/(S+M-1), reported by
+``bubble_fraction`` so configs can size M.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_stages + n_microbatches - 1)
+
+
+def pipelined_forward(stage_fn, mesh: Mesh, axis: str = "stage"):
+    """Build a pipelined forward: (stage_params, x_microbatched) -> y.
+
+    stage_fn(params_slice, x) -> y : one stage's computation.
+    stage_params: pytree with leading dim = n_stages (sharded over ``axis``).
+    x: (M, mb, ...) microbatched input, replicated across stages; stage 0
+    feeds microbatch j at tick j; outputs emerge from the last stage.
+    """
+    n_stages = mesh.shape[axis]
+
+    def per_stage(params, x):
+        # inside shard_map: params has leading dim 1 (this stage's slice)
+        p_local = jax.tree.map(lambda a: a[0], params)
+        stage_id = jax.lax.axis_index(axis)
+        m = x.shape[0]
+        ticks = m + n_stages - 1
+        buf = jnp.zeros_like(x[0])
+        outputs = jnp.zeros_like(x)
+
+        def tick(carry, t):
+            buf, outputs = carry
+            # stage 0 ingests microbatch t (if in range); others take the
+            # ppermuted activation from the previous stage
+            feed = jnp.where(t < m, t, m - 1)
+            x_in = jnp.where(stage_id == 0, x[feed], buf)
+            y = stage_fn(p_local, x_in)
+            # last stage writes its output at slot t - (S-1)
+            out_slot = t - (n_stages - 1)
+            do_write = (stage_id == n_stages - 1) & (out_slot >= 0)
+            outputs = jax.lax.cond(
+                do_write,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(out_slot, 0), 0),
+                lambda o: o, outputs)
+            # shift activations to the next stage
+            buf = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(n_stages - 1)])
+            return (buf, outputs), None
+
+        (_, outputs), _ = jax.lax.scan(tick, (buf, outputs),
+                                       jnp.arange(ticks))
+        # all stages hold zeros except the last; reduce to broadcast result
+        return jax.lax.psum(outputs, axis) if n_stages > 1 else outputs
+
+    in_specs = (P(axis), P())           # params sharded by stage, x replicated
+    out_specs = P()
+    return shard_map(per_stage, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)

@@ -1,0 +1,194 @@
+"""Sharding rules: param / batch / serve-state PartitionSpecs per mesh.
+
+Divisibility-aware: every rule checks the dim size against the mesh axis and
+falls back to replication when it does not divide (e.g. qwen2's 28 heads on a
+16-way model axis shard the fused H·hd dim instead). The paper's dictionaries
+(embedding = learned ADV, vocab head) are row/column-sharded over 'model' —
+dictionary sharding at scale, DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') on multi-pod, ('data',) otherwise."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(size: int, n: int) -> bool:
+    return n > 0 and size % n == 0
+
+
+def _shard_if(mesh: Mesh, size: int, axis: str):
+    return axis if _div(size, _axis_size(mesh, axis)) else None
+
+
+def _batch_spec_axis(mesh: Mesh, b: int):
+    """Largest prefix of the DP axes that divides the batch."""
+    axes = batch_axes(mesh)
+    total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+    if _div(b, total):
+        return axes
+    for a in axes:                       # try single axes
+        if _div(b, _axis_size(mesh, a)):
+            return (a,)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+def param_pspecs(cfg: ModelConfig, params_tree, mesh: Mesh,
+                 fsdp: bool | None = None):
+    """PartitionSpec tree matching params_tree (works on ShapeDtypeStructs).
+
+    ``fsdp``: additionally shard every large param over 'data' (ZeRO-3 /
+    FSDP — GSPMD inserts the per-layer weight all-gather). Auto-enabled when
+    bf16 params exceed ~6 GB/device under model-axis sharding alone (the
+    400B-class MoE cells cannot exist on chip otherwise).
+    """
+    m = _axis_size(mesh, "model")
+    d_ax = _axis_size(mesh, "data")
+    if fsdp is None:
+        fsdp = cfg.force_fsdp or cfg.param_count() * 2 / max(m, 1) > 6e9
+    if cfg.pure_dp:
+        # ZeRO-3 over 'model': params live sharded, gathered per layer;
+        # batch takes every mesh axis (see batch_pspecs)
+        def dp_rule(path, leaf):
+            shape = leaf.shape
+            if int(np.prod(shape)) < (1 << 20):
+                return P(*([None] * len(shape)))
+            entries = [None] * len(shape)
+            best, best_size = -1, 0
+            for i, sz in enumerate(shape):
+                if sz % m == 0 and sz > best_size:
+                    best, best_size = i, sz
+            if best >= 0:
+                entries[best] = "model"
+            return P(*entries)
+        return jax.tree_util.tree_map_with_path(dp_rule, params_tree)
+
+    def fsdp_extend(spec: P, shape) -> P:
+        if not fsdp or d_ax <= 1 or int(np.prod(shape)) < (1 << 20):
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_size = -1, 0
+        for i, (e, sz) in enumerate(zip(entries, shape)):
+            if e is None and sz % d_ax == 0 and sz > best_size:
+                best, best_size = i, sz
+        if best >= 0:
+            entries[best] = "data"
+        return P(*entries)
+
+    COLUMN = {"wq", "wk", "wv", "wu", "wg", "w_up", "w_in", "w", "head",
+              "bq", "bk", "bv", "conv_w"}
+    ROW = {"wo", "wd", "w_down", "w_o_ssm", "w_bc", "w_dt", "wif"}
+    EXPERT = {"we_gate", "we_up", "we_down"}
+    REPLICATED = {"ln", "ln1", "ln2", "ln_x", "ln_heads", "final_norm",
+                  "enc_norm", "norm_attn", "norm_ssm", "router", "a_log",
+                  "b", "r", "vis_proj", "enc_proj"}
+
+    def rule(path, leaf) -> P:
+        leaf_name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+        shape = leaf.shape
+        nd = len(shape)
+
+        def last():
+            return P(*([None] * (nd - 1)), _shard_if(mesh, shape[-1], "model"))
+
+        def at(i):
+            spec = [None] * nd
+            spec[i] = _shard_if(mesh, shape[i], "model")
+            return P(*spec)
+
+        if leaf_name == "embed":
+            return fsdp_extend(at(0), shape)          # vocab rows = dictionary
+        if leaf_name in REPLICATED:
+            return P(*([None] * nd))
+        if leaf_name in EXPERT:
+            return fsdp_extend(at(1), shape)          # expert parallelism
+        if leaf_name in COLUMN:
+            return fsdp_extend(last(), shape)         # column parallel
+        if leaf_name in ROW:
+            return fsdp_extend(at(-2), shape)         # row parallel
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch rules
+# ---------------------------------------------------------------------------
+def batch_pspecs(cfg: ModelConfig, batch_tree, mesh: Mesh):
+    def rule(path, leaf) -> P:
+        shape = leaf.shape
+        if cfg.pure_dp:
+            axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.shape)
+            total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+            ba = axes if _div(shape[0], total) else \
+                _batch_spec_axis(mesh, shape[0])
+        else:
+            ba = _batch_spec_axis(mesh, shape[0])
+        rest = [None] * (len(shape) - 1)
+        return P(ba, *rest)
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# serve-state rules
+# ---------------------------------------------------------------------------
+def state_pspecs(cfg: ModelConfig, state_tree, mesh: Mesh):
+    """Caches: batch over DP axes; cache length / state dims over 'model'.
+
+    Leading dim of every block cache is the scan-group axis (never sharded);
+    second is batch. Attention cache (G,B,T,KV,hd) shards T over 'model'
+    (sequence-sharded decode attention); recurrent states shard their widest
+    state dim.
+    """
+    def rule(path, leaf) -> P:
+        name = ".".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                        for k in path)
+        shape = leaf.shape
+        if name == "pos":
+            return P()
+        if name == "memory":                     # (B, S_enc, D)
+            ba = _batch_spec_axis(mesh, shape[0])
+            return P(ba, _shard_if(mesh, shape[1], "model"), None)
+        nd = len(shape)
+        if nd >= 3:
+            ba = _batch_spec_axis(mesh, shape[1])
+            spec: list[Any] = [None, ba] + [None] * (nd - 2)
+            if name.endswith(".k") or name.endswith(".v") or \
+                    name.endswith(".ks") or name.endswith(".vs"):
+                spec[2] = _shard_if(mesh, shape[2], "model")   # cache length T
+            elif "state" in name:
+                # (G,B,H,dk,dv): shard dk, else dv
+                if _shard_if(mesh, shape[3], "model"):
+                    spec[3] = "model"
+                elif nd > 4 and _shard_if(mesh, shape[4], "model"):
+                    spec[4] = "model"
+            elif "conv" in name:
+                spec[3] = _shard_if(mesh, shape[3], "model")   # d_inner
+            elif name.endswith(".h") or name.endswith(".c"):
+                spec[3] = _shard_if(mesh, shape[3], "model")   # head dim
+            return P(*spec)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, state_tree)
+
+
+def to_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §2).
+
+The paper's hot path is featurization data movement, not FLOPs, so every
+kernel here is a bandwidth-shaped kernel around the dictionary:
+
+- ``bitunpack``  — b-bit packed code words -> int32 codes (DAX-scan analogue)
+- ``adv_gather`` — codes -> ADV feature rows, dictionary pinned in VMEM
+- ``onehot_wide``— fused one-hot(codes) @ W wide-layer (one-hot never
+  materialized in HBM; MXU-shaped accumulation over categorical columns)
+- ``hist``       — count-metadata build (per-block histograms, paper §6.2)
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper), ``ref.py`` (pure-jnp oracle). Tests sweep shapes x
+dtypes against the oracle with ``interpret=True`` (this container is CPU).
+"""

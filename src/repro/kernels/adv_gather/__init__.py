@@ -1,0 +1,4 @@
+from repro.kernels.adv_gather import ops, ref
+from repro.kernels.adv_gather.ops import adv_gather
+
+__all__ = ["ops", "ref", "adv_gather"]

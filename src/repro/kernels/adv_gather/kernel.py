@@ -1,0 +1,64 @@
+"""ADV gather Pallas kernel: out[i, :] = table[codes[i], :] (paper §6.3).
+
+TPU adaptation (DESIGN.md §2): dictionaries are small (K ≤ 2**19 per IMCU,
+typically ≪), so the ADV table is pinned in VMEM while code blocks stream
+from HBM. The gather itself is executed as a one-hot × table matmul on the
+MXU — the one-hot matrix lives only in VREG/VMEM for one (BN × BK) tile and
+is never materialized in HBM, which is exactly the paper's 'look it up,
+don't recompute/materialize it' insight mapped onto systolic hardware.
+
+Grid: (N/BN, K/BK). The K axis is innermost and accumulates into the same
+output tile (out index_map ignores k), the standard Pallas revisiting
+pattern. MXU alignment: BN, BK, F padded to multiples of 128 by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adv_gather_kernel(codes_ref, table_ref, out_ref, *, bk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]                      # (1, BN) int32
+    tbl = table_ref[...]                        # (BK, F) f32
+    bn = codes.shape[1]
+    # one-hot tile for codes that fall in this K block: (BN, BK)
+    local = codes.reshape(bn, 1) - k * bk
+    col = jax.lax.broadcasted_iota(jnp.int32, (bn, tbl.shape[0]), 1)
+    onehot = (local == col).astype(tbl.dtype)
+    out_ref[...] += jnp.dot(onehot, tbl,
+                            preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "interpret"))
+def adv_gather_pallas(codes: jnp.ndarray, table: jnp.ndarray,
+                      bn: int = 256, bk: int = 512,
+                      interpret: bool = True) -> jnp.ndarray:
+    """codes (N,) int32, table (K, F) float -> (N, F).
+
+    Preconditions (enforced by ops.py): N % bn == 0, K % bk == 0,
+    F % 128 == 0 on real TPU.
+    """
+    n = codes.shape[0]
+    k_rows, f = table.shape
+    grid = (n // bn, k_rows // bk)
+    return pl.pallas_call(
+        functools.partial(_adv_gather_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i, k: (0, i)),
+            pl.BlockSpec((bk, f), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, f), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), table.dtype),
+        interpret=interpret,
+    )(codes.reshape(1, n), table)

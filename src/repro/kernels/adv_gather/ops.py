@@ -1,0 +1,40 @@
+"""Public jit'd wrapper for the ADV gather kernel.
+
+Handles padding to MXU-aligned block shapes and falls back to the XLA gather
+(`ref`) for huge-K tables where one-hot tiling is wasteful (K > 64k — e.g.
+full LM vocabularies, which are sharded and gathered natively instead,
+see repro.models.lm).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.adv_gather.kernel import adv_gather_pallas
+from repro.kernels.adv_gather.ref import adv_gather_ref
+
+_MAX_ONEHOT_K = 1 << 16
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def adv_gather(table: jnp.ndarray, codes: jnp.ndarray,
+               bn: int = 256, bk: int = 512,
+               interpret: bool = True) -> jnp.ndarray:
+    """Gather ADV rows for a code vector of any shape; returns (*codes.shape, F)."""
+    shape = codes.shape
+    flat = codes.reshape(-1).astype(jnp.int32)
+    k, f = table.shape
+    if k > _MAX_ONEHOT_K:
+        out = adv_gather_ref(flat, table)
+        return out.reshape(*shape, f)
+    n = flat.shape[0]
+    n_pad = _pad_to(max(n, 1), bn)
+    k_pad = _pad_to(k, bk)
+    f_pad = _pad_to(f, 128)
+    flat_p = jnp.pad(flat, (0, n_pad - n))
+    table_p = jnp.pad(table, ((0, k_pad - k), (0, f_pad - f)))
+    out = adv_gather_pallas(flat_p, table_p, bn=bn, bk=bk,
+                            interpret=interpret)
+    return out[:n, :f].reshape(*shape, f)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for adv_gather."""
+import jax.numpy as jnp
+
+
+def adv_gather_ref(codes: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """out[i, :] = table[codes[i], :]"""
+    return jnp.take(table, codes, axis=0)

@@ -1,0 +1,35 @@
+"""Public wrapper: host-side repack to TPU-friendly width + device unpack."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.columnar.bitpack import pack_bits, packed_nbytes
+from repro.kernels.bitunpack.kernel import bitunpack_pallas, tpu_width
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def repack_for_device(codes: np.ndarray, bits: int) -> tuple[np.ndarray, int]:
+    """Host: pack codes at the TPU-aligned width. Returns (words, device_bits)."""
+    db = tpu_width(bits)
+    return pack_bits(np.asarray(codes), db), db
+
+
+def bitunpack(words: jnp.ndarray, device_bits: int, n: int,
+              bw: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """Unpack ``n`` codes from device-width packed words."""
+    s = 32 // device_bits
+    w_needed = (n + s - 1) // s
+    w_pad = _pad_to(max(w_needed, 1), bw)
+    words_p = jnp.pad(jnp.asarray(words, jnp.uint32),
+                      (0, w_pad - words.shape[0]))
+    out = bitunpack_pallas(words_p, device_bits, bw=bw, interpret=interpret)
+    return out[:n]
+
+
+def device_overhead(bits: int, n: int) -> float:
+    """Bytes-overhead factor of the TPU-aligned width vs exact packing."""
+    return packed_nbytes(n, tpu_width(bits)) / packed_nbytes(n, bits)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for bitunpack (general widths, incl. straddling fields)."""
+from repro.columnar.bitpack import unpack_bits_jnp
+
+
+def bitunpack_ref(words, bits: int, n: int):
+    return unpack_bits_jnp(words, bits, n)

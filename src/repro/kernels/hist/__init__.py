@@ -1,0 +1,4 @@
+from repro.kernels.hist import ops, ref
+from repro.kernels.hist.ops import hist
+
+__all__ = ["ops", "ref", "hist"]

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for hist."""
+import jax.numpy as jnp
+
+
+def hist_ref(codes: jnp.ndarray, k: int) -> jnp.ndarray:
+    return jnp.bincount(codes, length=k).astype(jnp.int32)

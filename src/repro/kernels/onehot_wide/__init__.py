@@ -1,0 +1,4 @@
+from repro.kernels.onehot_wide import ops, ref
+from repro.kernels.onehot_wide.ops import onehot_wide
+
+__all__ = ["ops", "ref", "onehot_wide"]

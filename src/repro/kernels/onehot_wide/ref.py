@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for onehot_wide."""
+import jax
+import jax.numpy as jnp
+
+
+def onehot_wide_ref(codes: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """codes (C, N), w (C, K, F) -> sum_c w[c, codes[c, n], :]  (N, F)."""
+    gathered = jnp.take_along_axis(
+        w, codes[:, :, None].astype(jnp.int32), axis=1)   # (C, N, F)
+    return gathered.sum(axis=0)
+
+
+def onehot_wide_materialized(codes: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """The traditional path: materialize one-hot then matmul (benchmarks)."""
+    k = w.shape[1]
+    oh = jax.nn.one_hot(codes, k, dtype=w.dtype)          # (C, N, K)
+    return jnp.einsum("cnk,ckf->nf", oh, w)

@@ -1,0 +1,449 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract memory / FLOP / byte / collective statistics for the roofline
+(EXPERIMENTS.md §Dry-run, §Roofline).
+
+The two lines above MUST precede any jax import (device count locks on first
+init). Per cell:
+
+1. FULL-depth compile on the target mesh — proves the sharding config is
+   coherent (no mismatch, no unsupported collective), yields
+   memory_analysis() (fits/doesn't) and the collective schedule.
+2. Unrolled depth-1 and depth-2 compiles (single-pod only) — XLA's
+   HloCostAnalysis counts while-loop bodies ONCE, so per-layer-group cost is
+   recovered exactly by differencing two unrolled shallow modules and
+   extrapolating: total(L) = outside + L·per_group. Collective bytes are
+   parsed from the partitioned HLO the same way.
+
+Results go to results/dryrun/<arch>__<shape>__<mesh>[__<variant>].json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, ARCH_IDS, SHAPES, input_specs, applicable
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.blocks import block_pattern
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptConfig, init_opt_state, apply_updates
+from repro.train.trainer import _opt_pspecs
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective result bytes by kind (static count — while-loop
+    bodies counted once; dryrun extrapolates via depth differencing)."""
+    out: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def pick_optimizer(cfg: ModelConfig) -> OptConfig:
+    """adamw8 for the MoE giants (fits 16GB/chip), adamw elsewhere."""
+    if cfg.param_count() > 5e10:
+        return OptConfig(name="adamw8")
+    return OptConfig(name="adamw")
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh):
+    """Returns (fn, example_args, in_shardings, out_shardings, donate)."""
+    shape = SHAPES[shape_name]
+    batch = input_specs(cfg, shape)
+    b_specs = shd.to_shardings(mesh, shd.batch_pspecs(cfg, batch, mesh))
+    p_shape = lm.param_specs(cfg)
+    p_specs = shd.to_shardings(mesh, shd.param_pspecs(cfg, p_shape, mesh))
+
+    if shape.kind == "train":
+        opt = pick_optimizer(cfg)
+        opt_shape = jax.eval_shape(lambda: init_opt_state(opt, p_shape))
+        o_specs = shd.to_shardings(mesh, _opt_pspecs(cfg, opt_shape, mesh))
+
+        accum = max(1, cfg.grad_accum)
+
+        def train_step(params, opt_state, batch, step):
+            if accum > 1:
+                # microbatch gradient accumulation: scan over A splits of the
+                # global batch; activation liveness shrinks by A (identical
+                # math up to CE renormalization across splits)
+                def micro(carry, mb):
+                    g_acc, loss_acc = carry
+                    (loss, metrics), grads = jax.value_and_grad(
+                        lambda p: lm.train_loss(cfg, p, mb),
+                        has_aux=True)(params)
+                    g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                    return (g_acc, loss_acc + loss), None
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:]), batch)
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, p.dtype), params)
+                (grads, loss), _ = jax.lax.scan(micro, (g0, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss / accum
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: lm.train_loss(cfg, p, batch),
+                    has_aux=True)(params)
+            params, opt_state = apply_updates(opt, grads, opt_state, params,
+                                              3e-4)
+            return params, opt_state, loss
+
+        args = (p_shape, opt_shape, batch,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (p_specs, o_specs, b_specs, None)
+        out_sh = (p_specs, o_specs, None)
+        return train_step, args, in_sh, out_sh, (0, 1)
+
+    # serving state (prefill & decode) — int8 dictionary-quantized KV cache
+    # is the production serving default (paper §5 applied to the cache; the
+    # bf16 variant exists for §Perf before/after). pure_dp is a TRAINING
+    # topology (ZeRO-3 weight gathers would dominate decode latency).
+    if cfg.kv_cache_dtype == "bfloat16":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    if cfg.pure_dp and shape.kind == "decode":
+        # ZeRO-3 weight gathers would dominate per-token decode latency;
+        # prefill is throughput-shaped and keeps the DP topology
+        cfg = dataclasses.replace(cfg, pure_dp=False)
+    shape_b = shape.global_batch
+    max_len = shape.seq_len if shape.kind == "prefill" else shape.seq_len
+    enc_len = shape.seq_len if cfg.family == "audio" else 0
+    state_shape = jax.eval_shape(
+        lambda: lm.init_serve_state(cfg, shape_b, max_len=max_len,
+                                    enc_len=enc_len))
+    s_specs = shd.to_shardings(mesh, shd.state_pspecs(cfg, state_shape, mesh))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, state, batch):
+            logits, new_state = lm.prefill(cfg, params, state, batch)
+            # return only last-token logits (serving returns sampled token)
+            return logits[:, -1], new_state
+        args = (p_shape, state_shape, batch)
+        return prefill_step, args, (p_specs, s_specs, b_specs), \
+            (None, s_specs), (1,)
+
+    def serve_step(params, state, batch):
+        # decode against a full cache: state enters at pos = seq_len - 1
+        state = dict(state, pos=jnp.asarray(shape.seq_len - 1, jnp.int32))
+        logits, new_state = lm.decode_step(cfg, params, state,
+                                           batch["tokens"])
+        return logits[:, -1], new_state
+    args = (p_shape, state_shape, batch)
+    return serve_step, args, (p_specs, s_specs, b_specs), \
+        (None, s_specs), (1,)
+
+
+def compile_cell(cfg: ModelConfig, shape_name: str, mesh,
+                 seq_parallel: bool = True):
+    from repro.distributed.context import activation_mesh
+    fn, args, in_sh, out_sh, donate = build_cell(cfg, shape_name, mesh)
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    t0 = time.perf_counter()
+    with activation_mesh(mesh if seq_parallel else None):
+        lowered = jfn.lower(*args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    return lowered, compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+def cell_stats(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {"argument_bytes": int(ma.argument_size_in_bytes),
+               "output_bytes": int(ma.output_size_in_bytes),
+               "temp_bytes": int(ma.temp_size_in_bytes),
+               "alias_bytes": int(ma.alias_size_in_bytes),
+               "code_bytes": int(ma.generated_code_size_in_bytes)}
+        mem["peak_bytes"] = (mem["argument_bytes"] + mem["output_bytes"] +
+                             mem["temp_bytes"] - mem["alias_bytes"])
+    except Exception as e:                       # pragma: no cover
+        mem = {"error": str(e)}
+    colls = parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "memory": mem, "collectives": colls}
+
+
+def _with_depth(cfg: ModelConfig, groups: int, unroll: bool) -> ModelConfig:
+    pat_len = len(block_pattern(cfg))
+    enc = min(cfg.enc_layers, groups) if cfg.enc_layers else 0
+    # grad_accum=1 in probes: the microbatch loop is a while loop whose body
+    # HloCostAnalysis counts once; totals are accum-invariant anyway.
+    return dataclasses.replace(cfg, n_layers=groups * pat_len,
+                               enc_layers=enc, scan_unroll=unroll,
+                               grad_accum=1)
+
+
+def extrapolated_costs(cfg: ModelConfig, shape_name: str, mesh,
+                       seq_parallel: bool = True) -> dict:
+    """Per-layer-exact totals via unrolled depth-1/depth-2 differencing."""
+    from repro.models.blocks import n_groups as ngroups
+    g_full = ngroups(cfg)
+    out = {}
+    stats = {}
+    for g in (1, 2):
+        c1 = _with_depth(cfg, g, unroll=True)
+        _, compiled, _ = compile_cell(c1, shape_name, mesh,
+                                      seq_parallel=seq_parallel)
+        stats[g] = cell_stats(compiled)
+    for key in ("flops", "bytes_accessed"):
+        per_group = stats[2][key] - stats[1][key]
+        outside = stats[1][key] - per_group
+        out[key] = outside + per_group * g_full
+        out[key + "_per_group"] = per_group
+        out[key + "_outside"] = outside
+    # collectives: extrapolate totals and per-kind
+    kinds = set(stats[1]["collectives"]["bytes"]) | \
+        set(stats[2]["collectives"]["bytes"])
+    coll = {}
+    for k in kinds:
+        b1 = stats[1]["collectives"]["bytes"].get(k, 0)
+        b2 = stats[2]["collectives"]["bytes"].get(k, 0)
+        per_group = max(b2 - b1, 0)
+        coll[k] = max((b1 - per_group) + per_group * g_full, 0)
+    out["collective_bytes"] = coll
+    out["collective_total_bytes"] = float(sum(coll.values()))
+    # enc-dec: encoder depth also scaled 1->2; fold into same linear model
+    out["note"] = ("enc+dec depths differenced together"
+                   if cfg.enc_layers else "")
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int) -> dict:
+    t_c = flops / (n_chips * PEAK_FLOPS)
+    t_m = hbm_bytes / (n_chips * HBM_BW)
+    t_n = coll_bytes / ICI_BW       # per-device bytes already
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# variants (perf-iteration knobs; 'baseline' is the production default)
+# ---------------------------------------------------------------------------
+def _v_naive(cfg):
+    return cfg
+
+
+def _v_remat_dots(cfg):
+    return dataclasses.replace(cfg, remat="dots")
+
+
+def _v_no_remat(cfg):
+    return dataclasses.replace(cfg, remat="none")
+
+
+def _v_accum2(cfg):
+    return dataclasses.replace(cfg, grad_accum=2)
+
+
+def _v_accum4(cfg):
+    return dataclasses.replace(cfg, grad_accum=4)
+
+
+def _v_fsdp(cfg):
+    return dataclasses.replace(cfg, force_fsdp=True)
+
+
+def _v_dp(cfg):
+    return dataclasses.replace(cfg, pure_dp=True)
+
+
+def _v_dp_dots(cfg):
+    return dataclasses.replace(cfg, pure_dp=True, remat="dots")
+
+
+def _v_accum4_dots(cfg):
+    return dataclasses.replace(cfg, grad_accum=4, remat="dots")
+
+
+def _v_accum8(cfg):
+    return dataclasses.replace(cfg, grad_accum=8)
+
+
+def _v_fsdp_accum2(cfg):
+    return dataclasses.replace(cfg, force_fsdp=True, grad_accum=2)
+
+
+def _v_cap10(cfg):
+    return dataclasses.replace(cfg, capacity_factor=1.0)
+
+
+def _v_kv_bf16(cfg):
+    # sentinel dtype: skips build_cell's default bf16->int8 upgrade but is
+    # treated as bf16 by init_serve_state (anything != 'int8' is bf16)
+    return dataclasses.replace(cfg, kv_cache_dtype="bf16_forced")
+
+
+VARIANTS = {
+    # name: (seq_parallel, cfg_transform)
+    "baseline": (True, None),           # production default: Megatron-SP
+    "naive": (False, None),             # paper-faithful first cut: plain TP
+    "remat_dots": (True, _v_remat_dots),
+    "no_remat": (True, _v_no_remat),
+    "accum2": (True, _v_accum2),
+    "accum4": (True, _v_accum4),
+    "kv_bf16": (True, _v_kv_bf16),
+    "dp": (True, _v_dp),
+    "fsdp": (True, _v_fsdp),
+    "dp_dots": (True, _v_dp_dots),
+    "accum4_dots": (True, _v_accum4_dots),
+    "accum8": (True, _v_accum8),
+    "fsdp_accum2": (True, _v_fsdp_accum2),
+    "cap10": (True, _v_cap10),
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: str = "baseline", cfg_override=None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    seq_parallel, cfg_fn = VARIANTS.get(variant, (True, None))
+    if cfg_fn is not None:
+        cfg = cfg_fn(cfg)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "variant": variant}
+    if not ok:
+        result["status"] = reason
+        return result
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.perf_counter()
+    with jax.default_device(jax.devices("cpu")[0]):
+        lowered, compiled, times = compile_cell(cfg, shape_name, mesh,
+                                                seq_parallel=seq_parallel)
+        stats = cell_stats(compiled)
+        result.update(status="ok", n_chips=n_chips, times=times,
+                      raw=stats)
+        if mesh_kind == "single":
+            extra = extrapolated_costs(cfg, shape_name, mesh,
+                                       seq_parallel=seq_parallel)
+            result["extrapolated"] = extra
+            # HLO 'bytes accessed' per-device? cost_analysis reports whole-
+            # module bytes on the partitioned module -> per-device values.
+            flops_dev = extra["flops"]
+            bytes_dev = extra["bytes_accessed"]
+            coll_dev = extra["collective_total_bytes"]
+            result["roofline"] = roofline_terms(flops_dev, bytes_dev,
+                                                coll_dev, 1)
+            # model flops (6·N·D for train = fwd+bwd, 2·N·D inference)
+            tokens = shape.global_batch * (shape.seq_len
+                                           if shape.kind != "decode" else 1)
+            mult = 3 if shape.kind == "train" else 1
+            result["model_flops"] = 2.0 * cfg.active_param_count() * \
+                tokens * mult
+    result["wall_s"] = time.perf_counter() - t0
+    return result
+
+
+def save_result(res: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{res['arch']}__{res['shape']}__{res['mesh']}__{res['variant']}"
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(res, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                name = f"{arch}__{shape}__{mesh_kind}__{args.variant}"
+                path = os.path.join(args.out, name + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {name}")
+                    continue
+                print(f"[cell] {name} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mesh_kind, args.variant)
+                except Exception as e:
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "variant": args.variant, "status": "error",
+                           "error": f"{type(e).__name__}: {e}"}
+                save_result(res, args.out)
+                status = res.get("status")
+                extra = ""
+                if status == "ok" and "roofline" in res:
+                    r = res["roofline"]
+                    extra = (f" dom={r['dominant']} "
+                             f"bound={r['bound_s']*1e3:.2f}ms")
+                print(f"       -> {status}{extra} "
+                      f"({res.get('wall_s', 0):.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

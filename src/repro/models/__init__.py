@@ -1,0 +1,14 @@
+"""Model substrate: composable JAX definitions for all assigned architectures.
+
+Families: dense / moe transformers (GQA + RoPE), ssm (xLSTM), hybrid (Hymba
+parallel attn+SSM heads), vlm / audio (backbone + stub frontend per brief).
+All layer stacks are ``lax.scan``-over-stacked-params for compact HLO; every
+model consumes dictionary-coded tokens through the ADV/embedding path
+(the paper's technique as the input substrate, DESIGN.md §3).
+"""
+from repro.models.config import ModelConfig
+from repro.models.lm import (init_params, param_specs, forward,
+                             train_loss, init_serve_state, decode_step)
+
+__all__ = ["ModelConfig", "init_params", "param_specs", "forward",
+           "train_loss", "init_serve_state", "decode_step"]

@@ -1,0 +1,76 @@
+"""GQA attention with RoPE: blockwise (flash-style online softmax) training
+path and KV-cache decode path.
+
+The blockwise path scans KV chunks with a running (max, denom, acc) carry so
+the (S, T) score matrix is never materialized in HBM — required for the 32k
+prefill shapes and the long-context cells (DESIGN.md §5). Pure JAX (the paper
+has no attention-kernel contribution; XLA handles the matmuls).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _scores_mask(q_pos, k_pos, window):
+    """(S, T) additive mask: causal + optional sliding window.
+
+    ``window`` may be a static int or a traced scalar (per-layer windows in
+    hybrid stacks); <= 0 means full attention.
+    """
+    keep = q_pos[:, None] >= k_pos[None, :]
+    w = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
+    keep &= (q_pos[:, None] - k_pos[None, :]) < w
+    return jnp.where(keep, 0.0, NEG_INF)
+
+
+def _gqa_scores(q, k):
+    """q (B,S,KV,G,dh), k (B,T,KV,dh) -> (B,KV,G,S,T) f32."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              q_offset, window: int = 0, kv_len: int | None = None,
+              kv_chunk: int = 1024) -> jnp.ndarray:
+    """Causal GQA attention.
+
+    q: (B, S, H, dh); k, v: (B, T, KV, dh); q_offset: scalar — absolute
+    position of q[0] (queries attend to keys at absolute positions).
+    kv_len: number of valid cache entries (decode; keys beyond are masked).
+    Returns (B, S, H, dh).
+    """
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh) * (dh ** -0.5)
+    q_pos = q_offset + jnp.arange(s)
+
+    if s == 1 or t <= kv_chunk:
+        # direct path: scores are small (decode or short context)
+        scores = _gqa_scores(qg, k)                      # (B,KV,G,S,T)
+        k_pos = jnp.arange(t)
+        mask = _scores_mask(q_pos, k_pos, window)
+        if kv_len is not None:
+            mask = mask + jnp.where(k_pos[None, :] < kv_len, 0.0, NEG_INF)
+        scores = scores + mask
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+        return out.reshape(b, s, h, dh)
+
+    # flash path: O(S) memory via custom VJP (models/flash.py)
+    assert t % kv_chunk == 0, f"kv len {t} % chunk {kv_chunk}"
+    from repro.models.flash import flash_attention
+    q_pos_f = q_pos.astype(jnp.float32)
+    if kv_len is not None:
+        kbias = jnp.where(jnp.arange(t) < kv_len, 0.0, NEG_INF
+                          ).astype(jnp.float32)
+    else:
+        kbias = jnp.zeros((t,), jnp.float32)
+    window_f = jnp.asarray(window, jnp.float32)
+    out = flash_attention(qg, k, v, q_pos_f, kbias, window_f, kv_chunk)
+    return out.reshape(b, s, h, dh)

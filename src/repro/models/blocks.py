@@ -1,0 +1,503 @@
+"""Block definitions + initializers for every architecture family.
+
+Layers are organized as a repeating *pattern* of block kinds (e.g. llama4:
+``['dense', 'moe']`` × 24 groups; xLSTM: ``['mlstm']*7 + ['slstm']`` × 6).
+Params for each pattern position are stacked over groups and consumed with
+``lax.scan`` for compact HLO. Per-layer non-trained metadata (e.g. Hymba's
+per-layer attention window) rides in a parallel ``meta`` pytree.
+
+Each kind implements:
+  init_<kind>(cfg, key, n)          -> stacked params dict
+  apply_<kind>(cfg, p, meta, x, *, cache, pos, causal) -> (x, new_cache, aux)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.attention import attention
+from repro.models.config import ModelConfig
+from repro.models.gla import chunked_gla, gla_step
+from repro.models.moe import moe_ff
+
+HUGE_WINDOW = 1 << 30
+
+
+def _pick_chunk(s: int, target: int = 256) -> int:
+    """Largest GLA chunk ≤ target that divides s."""
+    if s <= target:
+        return s
+    if s % target == 0:
+        return target
+    import math
+    return math.gcd(s, target)
+
+
+# =====================================================================
+# pattern
+# =====================================================================
+def block_pattern(cfg: ModelConfig) -> list[str]:
+    if cfg.family == "moe":
+        if cfg.moe_every <= 1:
+            return ["moe"]
+        return ["dense"] * (cfg.moe_every - 1) + ["moe"]
+    if cfg.family in ("dense", "vlm"):
+        return ["dense"]
+    if cfg.family == "ssm":
+        if cfg.slstm_group > 1:
+            return ["mlstm"] * (cfg.slstm_group - 1) + ["slstm"]
+        return ["mlstm"]
+    if cfg.family == "hybrid":
+        return ["hymba"]
+    if cfg.family == "audio":
+        return ["xdec"]            # decoder stack; encoder handled separately
+    raise ValueError(cfg.family)
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    pat = block_pattern(cfg)
+    if cfg.n_layers % len(pat):
+        raise ValueError(f"{cfg.name}: n_layers {cfg.n_layers} not divisible "
+                         f"by pattern {pat}")
+    return cfg.n_layers // len(pat)
+
+
+# =====================================================================
+# attention sub-module (shared by dense/moe/hymba/xdec/enc)
+# =====================================================================
+def _attn_init(cfg: ModelConfig, key, n: int, dt, prefix_kv: int | None = None):
+    hd = cfg.head_dim
+    kv = prefix_kv if prefix_kv is not None else cfg.n_kv
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], (n, cfg.d_model, cfg.n_heads * hd), dt),
+        "wk": L.dense_init(ks[1], (n, cfg.d_model, kv * hd), dt),
+        "wv": L.dense_init(ks[2], (n, cfg.d_model, kv * hd), dt),
+        "wo": L.dense_init(ks[3], (n, cfg.n_heads * hd, cfg.d_model), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n, cfg.n_heads * hd), dt)
+        p["bk"] = jnp.zeros((n, kv * hd), dt)
+        p["bv"] = jnp.zeros((n, kv * hd), dt)
+    return p
+
+
+def _attn_apply(cfg: ModelConfig, p, x, *, cache, pos, window, causal=True,
+                rope: bool = True, kv_src: jnp.ndarray | None = None):
+    """x (B,S,D). cache: None or dict(k,v) with (B,T,KV,hd). kv_src: cross-attn
+    source (memory) — when given, k/v come from it and cache is precomputed."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    if kv_src is None:
+        src = x
+    else:
+        src = kv_src
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    kvh = k.shape[-1] // hd
+    k = k.reshape(b, -1, kvh, hd)
+    v = v.reshape(b, -1, kvh, hd)
+    if rope:
+        q_pos = pos + jnp.arange(s)
+        q = L.apply_rope(q, q_pos[None, :], cfg.rope_theta)
+        if kv_src is None:
+            k = L.apply_rope(k, q_pos[None, :], cfg.rope_theta)
+
+    kv_len = None
+    if cache is not None and kv_src is None:
+        if "ks" in cache:        # int8 dictionary-quantized cache
+            kq, ks_new = _kv_quantize(k)
+            vq, vs_new = _kv_quantize(v)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, pos,
+                                                     axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, pos,
+                                                     axis=1)
+            cks = jax.lax.dynamic_update_slice_in_dim(cache["ks"], ks_new,
+                                                      pos, axis=1)
+            cvs = jax.lax.dynamic_update_slice_in_dim(cache["vs"], vs_new,
+                                                      pos, axis=1)
+            cache = {"k": ck, "v": cv, "ks": cks, "vs": cvs}
+            k = _kv_dequantize(ck, cks, x.dtype)
+            v = _kv_dequantize(cv, cvs, x.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+            cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+        kv_len = pos + s
+    if not causal:
+        # bidirectional encoder: mask nothing (window off, q>=k off)
+        out = _bidir_attention(q, k, v)
+    else:
+        out = attention(q, k, v, q_offset=pos if kv_src is None else 0,
+                        window=window, kv_len=kv_len)
+    out = out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    return out, cache
+
+
+def _kv_quantize(x):
+    """(B,S,KV,hd) -> int8 codes + per-(token,head) f32 scale."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    q = jnp.round(xf / jnp.maximum(scale[..., None], 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequantize(q, scale, dt):
+    return (q.astype(jnp.float32) *
+            jnp.maximum(scale, 1e-12)[..., None]).astype(dt)
+
+
+def _bidir_attention(q, k, v, kv_chunk: int = 1024):
+    """Non-causal attention. Large T goes through flash with q_pos pinned to
+    T (the causal predicate becomes all-true), keeping O(S) memory for the
+    32k encoder shapes; small T takes the direct path."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    t = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh) * (dh ** -0.5)
+    if t > kv_chunk and t % kv_chunk == 0:
+        from repro.models.flash import flash_attention
+        q_pos = jnp.full((s,), float(t), jnp.float32)
+        kbias = jnp.zeros((t,), jnp.float32)
+        out = flash_attention(qg, k, v, q_pos, kbias, jnp.float32(0),
+                              kv_chunk)
+        return out.reshape(b, s, h, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+def _mlp_init(cfg: ModelConfig, key, n: int, dt):
+    ks = jax.random.split(key, 3)
+    p = {"wu": L.dense_init(ks[1], (n, cfg.d_model, cfg.d_ff), dt),
+         "wd": L.dense_init(ks[2], (n, cfg.d_ff, cfg.d_model), dt)}
+    if cfg.mlp_style == "swiglu":
+        p["wg"] = L.dense_init(ks[0], (n, cfg.d_model, cfg.d_ff), dt)
+    return p
+
+
+def _mlp_apply(p, x):
+    if "wg" in p:
+        return L.swiglu(x, p["wg"], p["wu"], p["wd"])
+    return (jax.nn.gelu(x @ p["wu"]) @ p["wd"])
+
+
+# =====================================================================
+# dense transformer block
+# =====================================================================
+def init_dense(cfg: ModelConfig, key, n: int):
+    dt = L.dtype_of(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((n, cfg.d_model), dt),
+            "ln2": jnp.ones((n, cfg.d_model), dt),
+            "attn": _attn_init(cfg, k1, n, dt),
+            "mlp": _mlp_init(cfg, k2, n, dt)}
+
+
+def apply_dense(cfg: ModelConfig, p, meta, x, *, cache, pos, causal=True):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    window = meta.get("window", cfg.sliding_window or 0)
+    attn_out, cache = _attn_apply(cfg, p["attn"], h, cache=cache, pos=pos,
+                                  window=window, causal=causal)
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _mlp_apply(p["mlp"], h)
+    return x, cache, (0.0, 0.0)
+
+
+# =====================================================================
+# MoE block
+# =====================================================================
+def init_moe(cfg: ModelConfig, key, n: int):
+    dt = L.dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {"ln1": jnp.ones((n, d), dt), "ln2": jnp.ones((n, d), dt),
+         "attn": _attn_init(cfg, ks[0], n, dt),
+         "router": L.dense_init(ks[1], (n, d, e), jnp.float32),
+         "we_gate": L.dense_init(ks[2], (n, e, d, f), dt),
+         "we_up": L.dense_init(ks[3], (n, e, d, f), dt),
+         "we_down": L.dense_init(ks[4], (n, e, f, d), dt)}
+    if cfg.shared_expert:
+        p["shared"] = _mlp_init(cfg, ks[5], n, dt)
+    return p
+
+
+def apply_moe(cfg: ModelConfig, p, meta, x, *, cache, pos, causal=True):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, cache = _attn_apply(cfg, p["attn"], h, cache=cache, pos=pos,
+                                  window=cfg.sliding_window or 0)
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    moe_out, aux, z = moe_ff(h, p["router"], p["we_gate"], p["we_up"],
+                             p["we_down"], top_k=cfg.top_k,
+                             cap_factor=cfg.capacity_factor)
+    if "shared" in p:
+        moe_out = moe_out + _mlp_apply(p["shared"], h)
+    x = x + moe_out
+    return x, cache, (aux, z)
+
+
+# =====================================================================
+# mLSTM block (xLSTM) — chunked GLA core with normalizer column
+# =====================================================================
+def init_mlstm(cfg: ModelConfig, key, n: int):
+    dt = L.dtype_of(cfg.dtype)
+    di = cfg.d_inner
+    dk = int(di * cfg.qk_dim_ratio)
+    ks = jax.random.split(key, 6)
+    return {"ln": jnp.ones((n, cfg.d_model), dt),
+            "w_up": L.dense_init(ks[0], (n, cfg.d_model, 2 * di), dt),
+            "conv_w": L.dense_init(ks[1], (n, cfg.conv_width, di), dt,
+                                   scale=0.5),
+            "wq": L.dense_init(ks[2], (n, di, dk), dt),
+            "wk": L.dense_init(ks[3], (n, di, dk), dt),
+            "wif": L.dense_init(ks[4], (n, di, 2 * cfg.n_heads), jnp.float32),
+            "w_down": L.dense_init(ks[5], (n, di, cfg.d_model), dt),
+            "ln_heads": jnp.ones((n, di), dt)}
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x (B,S,C), w (W,C). state: (B,W-1,C) history
+    for decode. Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def apply_mlstm(cfg: ModelConfig, p, meta, x, *, cache, pos, causal=True):
+    b, s, _ = x.shape
+    h_heads = cfg.n_heads
+    di = cfg.d_inner
+    dk_t = p["wq"].shape[-1]
+    dkh = dk_t // h_heads
+    dvh = di // h_heads
+    hin = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = hin @ p["w_up"]
+    xi, z = jnp.split(up, 2, axis=-1)                 # (B,S,di) each
+    conv_state = cache.get("conv") if cache else None
+    xc, new_conv = _causal_conv(xi, p["conv_w"], conv_state)
+    q = (xc @ p["wq"]).reshape(b, s, h_heads, dkh)
+    k = (xc @ p["wk"]).reshape(b, s, h_heads, dkh) / (dkh ** 0.5)
+    v = xi.reshape(b, s, h_heads, dvh)
+    gates = xi @ p["wif"]                             # (B,S,2H) f32
+    i_gate = jax.nn.sigmoid(gates[..., :h_heads])
+    log_f = jax.nn.log_sigmoid(gates[..., h_heads:])
+    k = k * i_gate[..., None].astype(k.dtype)
+    # normalizer is a separate (B,H,DK) state (gla.py) so dv stays a power
+    # of two and the value/state tensors shard over 'model'
+    if cache is None:
+        out, _, n_out, _ = chunked_gla(q, k, v, log_f, chunk=_pick_chunk(s),
+                                       normalizer=True)
+        new_state = None
+    elif s == 1:
+        new_state, out1, n_new, n_out = gla_step(
+            cache["state"], q[:, 0], k[:, 0], v[:, 0], log_f[:, 0],
+            nstate=cache["nstate"])
+        out, n_out = out1[:, None], n_out[:, None]
+        new_state = (new_state, n_new)
+    else:  # prefill with state capture
+        out, st, n_out, n_st = chunked_gla(q, k, v, log_f,
+                                           chunk=_pick_chunk(s),
+                                           normalizer=True)
+        new_state = (st, n_st)
+    hsv = out / jnp.maximum(jnp.abs(n_out), 1.0)[..., None].astype(out.dtype)
+    hsv = hsv.reshape(b, s, di)
+    hsv = L.rms_norm(hsv, p["ln_heads"], cfg.norm_eps) * jax.nn.silu(z)
+    x = x + hsv @ p["w_down"]
+    new_cache = None
+    if cache is not None:
+        st, n_st = new_state
+        new_cache = {"state": st, "nstate": n_st, "conv": new_conv}
+    return x, new_cache, (0.0, 0.0)
+
+
+# =====================================================================
+# sLSTM block (xLSTM) — strictly sequential scan, block-diagonal recurrence
+# =====================================================================
+def init_slstm(cfg: ModelConfig, key, n: int):
+    dt = L.dtype_of(cfg.dtype)
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {"ln": jnp.ones((n, d), dt),
+            "w": L.dense_init(ks[0], (n, d, 4 * d), jnp.float32),
+            "r": L.dense_init(ks[1], (n, h, dh, 4 * dh), jnp.float32),
+            "b": jnp.zeros((n, 4 * d), jnp.float32),
+            "w_down": L.dense_init(ks[2], (n, d, d), dt)}
+
+
+def apply_slstm(cfg: ModelConfig, p, meta, x, *, cache, pos, causal=True):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    hin = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    pre = (hin.astype(jnp.float32) @ p["w"] + p["b"])   # (B,S,4D)
+    pre = pre.reshape(b, s, h, 4 * dh)
+
+    def step(carry, pre_t):
+        h_prev, c_prev = carry                          # (B,H,dh) each
+        rec = jnp.einsum("bhd,hdk->bhk", h_prev, p["r"])
+        gates = pre_t + rec                             # (B,H,4dh)
+        i, f, zg, o = jnp.split(gates, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+        c = f * c_prev + i * jnp.tanh(zg)
+        h_new = o * jnp.tanh(c)
+        return (h_new, c), h_new
+
+    if cache is None:
+        init = (jnp.zeros((b, h, dh), jnp.float32),
+                jnp.zeros((b, h, dh), jnp.float32))
+        (_, _), outs = jax.lax.scan(step, init, pre.transpose(1, 0, 2, 3))
+        out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+        new_cache = None
+    elif s == 1:
+        (h_new, c_new), out = step((cache["h"], cache["c"]), pre[:, 0])
+        out = out.reshape(b, 1, d)
+        new_cache = {"h": h_new, "c": c_new}
+    else:  # prefill with state capture
+        (h_new, c_new), outs = jax.lax.scan(step, (cache["h"], cache["c"]),
+                                            pre.transpose(1, 0, 2, 3))
+        out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+        new_cache = {"h": h_new, "c": c_new}
+    x = x + (out.astype(x.dtype) @ p["w_down"])
+    return x, new_cache, (0.0, 0.0)
+
+
+# =====================================================================
+# Hymba block: parallel attention + SSD(Mamba-2 style) heads
+# =====================================================================
+def init_hymba(cfg: ModelConfig, key, n: int):
+    dt = L.dtype_of(cfg.dtype)
+    d, di, ds, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {"ln1": jnp.ones((n, d), dt), "ln2": jnp.ones((n, d), dt),
+            "attn": _attn_init(cfg, ks[0], n, dt),
+            "w_in": L.dense_init(ks[1], (n, d, 2 * di), dt),
+            "conv_w": L.dense_init(ks[2], (n, cfg.conv_width, di), dt,
+                                   scale=0.5),
+            "w_bc": L.dense_init(ks[3], (n, di, 2 * h * ds), dt),
+            "w_dt": L.dense_init(ks[4], (n, di, h), jnp.float32),
+            "a_log": jnp.zeros((n, h), jnp.float32),
+            "norm_attn": jnp.ones((n, d), dt),
+            "norm_ssm": jnp.ones((n, d), dt),
+            "w_o_ssm": L.dense_init(ks[5], (n, di, d), dt),
+            "mlp": _mlp_init(cfg, ks[6], n, dt)}
+
+
+def apply_hymba(cfg: ModelConfig, p, meta, x, *, cache, pos, causal=True):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di, ds = cfg.d_inner, cfg.ssm_state
+    dvh = di // h
+    hin = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    window = meta.get("window", cfg.sliding_window or 0)
+
+    # ---- attention path ----
+    attn_cache = cache.get("attn") if cache else None
+    attn_out, new_attn_cache = _attn_apply(cfg, p["attn"], hin,
+                                           cache=attn_cache, pos=pos,
+                                           window=window)
+    # ---- SSD path ----
+    up = hin @ p["w_in"]
+    xs, z = jnp.split(up, 2, axis=-1)                  # (B,S,di)
+    conv_state = cache.get("conv") if cache else None
+    xc, new_conv = _causal_conv(xs, p["conv_w"], conv_state)
+    bc = xc @ p["w_bc"]
+    bmat, cmat = jnp.split(bc.reshape(b, s, h, 2 * ds), 2, axis=-1)
+    dt_raw = (xc @ p["w_dt"]).astype(jnp.float32)      # (B,S,H)
+    dt_pos = jax.nn.softplus(dt_raw)
+    log_a = -dt_pos * jnp.exp(p["a_log"])[None, None, :]
+    v = (xs.reshape(b, s, h, dvh) *
+         dt_pos[..., None].astype(xs.dtype))
+    if cache is None:
+        ssm_out, _ = chunked_gla(cmat, bmat, v, log_a, chunk=_pick_chunk(s))
+        new_state = None
+    elif s == 1:
+        new_state, out1 = gla_step(cache["state"], cmat[:, 0], bmat[:, 0],
+                                   v[:, 0], log_a[:, 0])
+        ssm_out = out1[:, None]
+    else:  # prefill with state capture
+        ssm_out, new_state = chunked_gla(cmat, bmat, v, log_a,
+                                         chunk=_pick_chunk(s))
+    ssm_out = (ssm_out.reshape(b, s, di) * jax.nn.silu(z)) @ p["w_o_ssm"]
+    # ---- fuse (mean of per-path norms, Hymba §3) ----
+    fused = 0.5 * (L.rms_norm(attn_out, p["norm_attn"], cfg.norm_eps) +
+                   L.rms_norm(ssm_out, p["norm_ssm"], cfg.norm_eps))
+    x = x + fused
+    hmid = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _mlp_apply(p["mlp"], hmid)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"attn": new_attn_cache, "conv": new_conv,
+                     "state": new_state}
+    return x, new_cache, (0.0, 0.0)
+
+
+# =====================================================================
+# encoder block + enc-dec decoder block (audio)
+# =====================================================================
+def init_enc(cfg: ModelConfig, key, n: int):
+    return init_dense(cfg, key, n)
+
+
+def apply_enc(cfg: ModelConfig, p, meta, x, *, cache=None, pos=0,
+              causal=False):
+    return apply_dense(cfg, p, meta, x, cache=None, pos=pos, causal=False)
+
+
+def init_xdec(cfg: ModelConfig, key, n: int):
+    dt = L.dtype_of(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((n, cfg.d_model), dt),
+            "ln_x": jnp.ones((n, cfg.d_model), dt),
+            "ln2": jnp.ones((n, cfg.d_model), dt),
+            "attn": _attn_init(cfg, k1, n, dt),
+            "xattn": _attn_init(cfg, k2, n, dt),
+            "mlp": _mlp_init(cfg, k3, n, dt)}
+
+
+def apply_xdec(cfg: ModelConfig, p, meta, x, *, cache, pos, causal=True,
+               memory=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    self_cache = cache.get("self") if cache else None
+    attn_out, new_self = _attn_apply(cfg, p["attn"], h, cache=self_cache,
+                                     pos=pos, window=0)
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+    xattn_out, _ = _attn_apply(cfg, p["xattn"], h, cache=None, pos=pos,
+                               window=0, causal=False, rope=False,
+                               kv_src=memory)
+    x = x + xattn_out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _mlp_apply(p["mlp"], h)
+    new_cache = {"self": new_self} if cache is not None else None
+    return x, new_cache, (0.0, 0.0)
+
+
+INIT = {"dense": init_dense, "moe": init_moe, "mlstm": init_mlstm,
+        "slstm": init_slstm, "hymba": init_hymba, "xdec": init_xdec,
+        "enc": init_enc}
+APPLY = {"dense": apply_dense, "moe": apply_moe, "mlstm": apply_mlstm,
+         "slstm": apply_slstm, "hymba": apply_hymba, "xdec": apply_xdec,
+         "enc": apply_enc}

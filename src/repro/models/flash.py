@@ -1,0 +1,113 @@
+"""Flash attention (pure JAX, custom VJP): O(S) memory in training.
+
+The naive blockwise scan is numerically identical but lets autodiff stack
+per-chunk probabilities as f32 scan residuals — O(S·T) per layer, which is
+what blows the HBM budget at 4k/32k sequence lengths. Here the forward saves
+only (out, m, l) per query; the backward recomputes each chunk's
+probabilities from (q, k, m, l) and accumulates dq/dk/dv chunk-by-chunk —
+the standard FlashAttention-2 dataflow expressed with lax.scan so the HLO
+stays compact under the layer scan.
+
+GQA layout: q (B,S,KV,G,dh) [pre-scaled], k/v (B,T,KV,dh).
+Masking inputs are ARRAYS (traced-safe for decode pos, per-layer windows):
+  q_pos (S,) f32 absolute query positions,
+  kbias (T,) f32 additive key bias (0 valid / -1e30 beyond kv_len),
+  window f32 scalar (<=0 -> full causal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, window, kbias):
+    keep = q_pos[:, None] >= k_pos[None, :]
+    w = jnp.where(window > 0, window, jnp.float32(1e18))
+    keep &= (q_pos[:, None] - k_pos[None, :]) < w
+    return jnp.where(keep, 0.0, NEG_INF) + kbias[None, :]
+
+
+def _fwd_scan(qg, k, v, q_pos, kbias, window, kv_chunk):
+    b, s, kvh, g, dh = qg.shape
+    t = k.shape[1]
+    n_chunks = t // kv_chunk
+
+    def body(carry, idx):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, idx * kv_chunk, kv_chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, idx * kv_chunk, kv_chunk, 1)
+        kb = jax.lax.dynamic_slice_in_dim(kbias, idx * kv_chunk, kv_chunk, 0)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, ks,
+                            preferred_element_type=jnp.float32)
+        k_pos = (idx * kv_chunk + jnp.arange(kv_chunk)).astype(jnp.float32)
+        scores = scores + _mask(q_pos, k_pos, window, kb)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(jnp.minimum(m - m_new, 0.0))
+        p = jnp.exp(scores - m_new[..., None])
+        p = jnp.where(scores <= NEG_INF / 2, 0.0, p)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgsc,bckd->bkgsd", p.astype(v.dtype), vs)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4), m, l     # -> (B,S,KV,G,dh)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def flash_attention(qg, k, v, q_pos, kbias, window, kv_chunk):
+    """qg (B,S,KV,G,dh) pre-scaled; k, v (B,T,KV,dh). Returns (B,S,KV,G,dh)."""
+    out, _, _ = _fwd_scan(qg, k, v, q_pos, kbias, window, kv_chunk)
+    return out.astype(qg.dtype)
+
+
+def _flash_fwd(qg, k, v, q_pos, kbias, window, kv_chunk):
+    out, m, l = _fwd_scan(qg, k, v, q_pos, kbias, window, kv_chunk)
+    return out.astype(qg.dtype), (qg, k, v, q_pos, kbias, window, out, m, l)
+
+
+def _flash_bwd(kv_chunk, res, dout):
+    qg, k, v, q_pos, kbias, window, out, m, l = res
+    b, s, kvh, g, dh = qg.shape
+    t = k.shape[1]
+    n_chunks = t // kv_chunk
+    l_safe = jnp.maximum(l, 1e-30)
+    dout32 = dout.astype(jnp.float32)
+    # delta[b,k,g,s] = sum_d dout * out   (FlashAttention-2 trick)
+    delta = jnp.einsum("bskgd,bskgd->bkgs", dout32, out.astype(jnp.float32))
+
+    def body(dq_acc, idx):
+        ks = jax.lax.dynamic_slice_in_dim(k, idx * kv_chunk, kv_chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, idx * kv_chunk, kv_chunk, 1)
+        kb = jax.lax.dynamic_slice_in_dim(kbias, idx * kv_chunk, kv_chunk, 0)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, ks,
+                            preferred_element_type=jnp.float32)
+        k_pos = (idx * kv_chunk + jnp.arange(kv_chunk)).astype(jnp.float32)
+        scores = scores + _mask(q_pos, k_pos, window, kb)
+        p = jnp.exp(scores - m[..., None]) / l_safe[..., None]
+        p = jnp.where(scores <= NEG_INF / 2, 0.0, p)
+        dv_c = jnp.einsum("bkgst,bskgd->btkd", p, dout32)
+        dp = jnp.einsum("bskgd,btkd->bkgst", dout32, vs.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq_c = jnp.einsum("bkgst,btkd->bskgd", ds, ks.astype(jnp.float32))
+        dk_c = jnp.einsum("bkgst,bskgd->btkd", ds, qg.astype(jnp.float32))
+        return dq_acc + dq_c, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, s, kvh, g, dh), jnp.float32)
+    dq, (dk_chunks, dv_chunks) = jax.lax.scan(body, dq0, jnp.arange(n_chunks))
+    dk = dk_chunks.transpose(1, 0, 2, 3, 4).reshape(b, t, kvh, dh)
+    dv = dv_chunks.transpose(1, 0, 2, 3, 4).reshape(b, t, kvh, dh)
+    return (dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(q_pos), jnp.zeros_like(kbias),
+            jnp.zeros_like(window))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

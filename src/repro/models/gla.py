@@ -1,0 +1,114 @@
+"""Chunked gated linear attention — the shared recurrence core for mLSTM
+(xLSTM) and the SSD/Mamba heads in Hymba (DESIGN.md §5).
+
+State per head is an outer-product memory  S_t = a_t · S_{t-1} + k_t v_tᵀ
+(a_t ∈ (0,1] per step), read as  o_t = qᵀ S_t.  The chunkwise form turns the
+recurrence into MXU matmuls: within a chunk an (C×C) decay-masked attention,
+across chunks a scanned state update — O(S·C) instead of O(S²), constant
+state for decode.
+
+mLSTM's normalizer n_t = a_t n_{t-1} + k_t is carried as a SEPARATE (B,H,DK)
+state (not an appended value column): dv stays a clean power of two so the
+value/state tensors shard over the model axis (P(batch,None,None,'model')),
+which is what makes the xlstm cells fit (EXPERIMENTS §Perf). Inputs stay in
+their compute dtype (bf16); only decay/normalizer/state accumulate in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+
+def chunked_gla(q, k, v, log_a, *, chunk: int = 256, normalizer: bool = False):
+    """q,k: (B,S,H,DK); v: (B,S,H,DV); log_a: (B,S,H) in (-inf, 0].
+
+    Returns (out (B,S,H,DV), final_state (B,H,DK,DV)) and, with
+    ``normalizer=True``, additionally (n_out (B,S,H), n_state (B,H,DK)).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk}"
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, h, dk)
+    kc = k.reshape(b, nc, chunk, h, dk)
+    vc = v.reshape(b, nc, chunk, h, dv)
+    la = log_a.reshape(b, nc, chunk, h).astype(jnp.float32)
+
+    def body(carry, inp):
+        state, nstate = carry                   # (B,H,DK,DV) f32, (B,H,DK)
+        qi, ki, vi, lai = inp                   # (B,C,H,*) chunk i
+        cum = jnp.cumsum(lai, axis=1)           # (B,C,H) decay to chunk start
+        total = cum[:, -1:, :]                  # (B,1,H)
+        dec_q = jnp.exp(cum)
+        q_dec = qi * dec_q[..., None].astype(qi.dtype)
+        # inter-chunk: o_inter[t] = (q_t * a^{cum_t}) @ S_prev
+        o_inter = jnp.einsum("bchk,bhkv->bchv", q_dec, state,
+                             preferred_element_type=jnp.float32)
+        # intra-chunk: scores[t,u] = q_t·k_u * a^{cum_t - cum_u}, u <= t
+        scores = jnp.einsum("bchk,buhk->bhcu", qi, ki,
+                            preferred_element_type=jnp.float32)
+        dec = cum[:, :, None, :] - cum[:, None, :, :]        # (B,C,U,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(dec), 0.0)
+        scores = scores * w.transpose(0, 3, 1, 2)
+        o_intra = jnp.einsum("bhcu,buhv->bchv", scores.astype(vi.dtype), vi,
+                             preferred_element_type=jnp.float32)
+        # state update: S = a^{total} S + sum_u a^{total-cum_u} k_u v_uᵀ
+        dec_k = jnp.exp(total - cum)
+        k_dec = ki * dec_k[..., None].astype(ki.dtype)
+        s_new = state * jnp.exp(total).transpose(0, 2, 1)[..., None] + \
+            jnp.einsum("buhk,buhv->bhkv", k_dec, vi,
+                       preferred_element_type=jnp.float32)
+        out_i = (o_inter + o_intra)
+        if not normalizer:
+            return (s_new, nstate), (out_i, jnp.zeros((b, chunk, h),
+                                                      jnp.float32))
+        # normalizer shares scores/decay: n_t = q_t·(running sum of decayed k)
+        n_inter = jnp.einsum("bchk,bhk->bch", q_dec.astype(jnp.float32),
+                             nstate)
+        n_intra = scores.sum(axis=-1).transpose(0, 2, 1)     # (B,C,H)
+        n_new = nstate * jnp.exp(total).transpose(0, 2, 1) + \
+            jnp.einsum("buhk->bhk", k_dec.astype(jnp.float32))
+        return (s_new, n_new), (out_i, n_inter + n_intra)
+
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    inputs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+              vc.transpose(1, 0, 2, 3, 4), la.transpose(1, 0, 2, 3))
+    (final, n_final), (outs, n_outs) = jax.lax.scan(body, (state0, n0),
+                                                    inputs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv).astype(q.dtype)
+    if not normalizer:
+        return out, final
+    n_out = n_outs.transpose(1, 0, 2, 3).reshape(b, s, h)
+    return out, final, n_out, n_final
+
+
+def gla_step(state, q, k, v, log_a, nstate=None):
+    """Single decode step. state (B,H,DK,DV); q,k (B,H,DK); v (B,H,DV);
+    log_a (B,H). Returns (new_state, out) or, with nstate given,
+    (new_state, out, new_nstate, n_out (B,H))."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    s_new = state * a + jnp.einsum("bhk,bhv->bhkv",
+                                   k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    out = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), s_new)
+    if nstate is None:
+        return s_new, out.astype(q.dtype)
+    n_new = nstate * a[..., 0] + k.astype(jnp.float32)
+    n_out = jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), n_new)
+    return s_new, out.astype(q.dtype), n_new, n_out
+
+
+def gla_ref(q, k, v, log_a):
+    """Sequential oracle (step-by-step) for tests."""
+    b, s, h, dk = q.shape
+
+    def body(state, t):
+        s_new, o = gla_step(state, q[:, t], k[:, t], v[:, t], log_a[:, t])
+        return s_new, o
+
+    state0 = jnp.zeros((b, h, dk, v.shape[-1]), jnp.float32)
+    final, outs = jax.lax.scan(body, state0, jnp.arange(s))
+    return outs.transpose(1, 0, 2, 3), final

@@ -1,0 +1,346 @@
+"""LM assembly: embedding (the token dictionary's learned ADV) -> block
+stacks (lax.scan over groups) -> head -> loss / decode.
+
+Public surface:
+  init_params(cfg, key)                  real arrays (smoke tests, examples)
+  param_specs(cfg)                       ShapeDtypeStructs via eval_shape
+  forward(cfg, params, batch, caches)    logits, aux, new_caches
+  train_loss(cfg, params, batch)         scalar loss + metrics
+  init_serve_state(cfg, B, max_len, ...) zeroed caches pytree
+  decode_step(cfg, params, state, tok)   one-token serve step
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.blocks import (APPLY, INIT, block_pattern, n_groups,
+                                 _attn_init, _pick_chunk)
+from repro.models.config import ModelConfig
+from repro.distributed.context import constrain_residual
+
+NEG_INF = -1e30
+
+
+# =====================================================================
+# meta (per-layer non-trained data, scanned alongside params)
+# =====================================================================
+def build_meta(cfg: ModelConfig) -> list[dict]:
+    """One dict per pattern position; arrays have leading n_groups dim."""
+    pat = block_pattern(cfg)
+    g = n_groups(cfg)
+    metas: list[dict] = []
+    for j, kind in enumerate(pat):
+        m: dict = {}
+        if cfg.family == "hybrid":
+            # Hymba: first / middle / last layers keep full attention
+            full = {0, cfg.n_layers // 2, cfg.n_layers - 1}
+            layer_ids = np.array([gi * len(pat) + j for gi in range(g)])
+            window = np.where(np.isin(layer_ids, list(full)), 0,
+                              cfg.sliding_window)
+            m["window"] = jnp.asarray(window, jnp.int32)
+        metas.append(m)
+    return metas
+
+
+# =====================================================================
+# params
+# =====================================================================
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = L.dtype_of(cfg.dtype)
+    g = n_groups(cfg)
+    pat = block_pattern(cfg)
+    keys = jax.random.split(key, len(pat) + 4)
+    params: dict = {
+        "embed": L.embed_init(keys[0], (cfg.padded_vocab, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "blocks": [INIT[kind](cfg, keys[1 + j], g)
+                   for j, kind in enumerate(pat)],
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(keys[len(pat) + 1],
+                                      (cfg.d_model, cfg.padded_vocab), dt)
+    if cfg.family == "vlm":
+        params["vis_proj"] = L.dense_init(keys[len(pat) + 2],
+                                          (cfg.frontend_dim, cfg.d_model), dt)
+    if cfg.family == "audio":
+        k_enc = keys[len(pat) + 2]
+        params["enc_proj"] = L.dense_init(k_enc, (cfg.frontend_dim,
+                                                  cfg.d_model), dt)
+        params["enc_blocks"] = INIT["enc"](cfg, keys[len(pat) + 3],
+                                           cfg.enc_layers)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape))
+               for x in jax.tree_util.tree_leaves(params))
+
+
+# =====================================================================
+# embedding — the ADV path (paper §6.3): token code -> learned feature row
+# =====================================================================
+def embed_tokens(cfg: ModelConfig, table: jnp.ndarray,
+                 tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+# =====================================================================
+# block stack (scan over groups)
+# =====================================================================
+def _group_fn(cfg: ModelConfig, pat, training: bool):
+    def fn(x, group_params, group_meta, group_caches, pos, memory):
+        aux_t, z_t = 0.0, 0.0
+        new_caches = []
+        for j, kind in enumerate(pat):
+            kw = {}
+            if kind == "xdec":
+                kw["memory"] = memory
+            x, nc, (a, z) = APPLY[kind](cfg, group_params[j], group_meta[j],
+                                        x, cache=group_caches[j], pos=pos,
+                                        **kw)
+            new_caches.append(nc)
+            aux_t = aux_t + a
+            z_t = z_t + z
+        return x, new_caches, aux_t, z_t
+    return fn
+
+
+def run_stack(cfg: ModelConfig, params_blocks, metas, x, *, caches=None,
+              pos=0, memory=None, training=True, pattern=None):
+    pat = pattern if pattern is not None else block_pattern(cfg)
+    fn = _group_fn(cfg, pat, training)
+
+    prefer = ("dp" if cfg.pure_dp else
+              "channel" if cfg.family == "ssm" else "seq")
+    x = constrain_residual(x, prefer)
+    if caches is None:
+        def body2(carry, xs):
+            xc, aux, z = carry
+            gp, gm = xs
+            xc, _, a, zz = fn(xc, gp, gm, [None] * len(pat), pos, memory)
+            xc = constrain_residual(xc, prefer)
+            return (xc, aux + a, z + zz), None
+        if cfg.remat == "layer":
+            body2 = jax.checkpoint(body2)
+        elif cfg.remat == "dots":
+            body2 = jax.checkpoint(
+                body2, policy=jax.checkpoint_policies.
+                dots_with_no_batch_dims_saveable)
+        (x, aux, z), _ = jax.lax.scan(body2, (x, 0.0, 0.0),
+                                      (params_blocks, metas),
+                                      unroll=cfg.scan_unroll)
+        return x, aux, z, None
+
+    def body3(carry, xs):
+        xc, aux, z = carry
+        gp, gm, gc = xs
+        xc, nc, a, zz = fn(xc, gp, gm, gc, pos, memory)
+        xc = constrain_residual(xc, prefer)
+        return (xc, aux + a, z + zz), nc
+    (x, aux, z), new_caches = jax.lax.scan(body3, (x, 0.0, 0.0),
+                                           (params_blocks, metas, caches),
+                                           unroll=cfg.scan_unroll)
+    return x, aux, z, new_caches
+
+
+# =====================================================================
+# forward
+# =====================================================================
+def _hidden(cfg: ModelConfig, params, batch, caches):
+    """Shared trunk: embeddings + frontends + block stacks + final norm.
+    Returns (x_final, (aux, z), new_caches)."""
+    tokens = batch["tokens"]
+    pos = caches["pos"] if caches is not None else 0
+    x = embed_tokens(cfg, params["embed"], tokens)
+
+    memory = None
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pp = batch["patch_embeds"].astype(x.dtype) @ params["vis_proj"]
+        x = jnp.concatenate([pp, x[:, pp.shape[1]:, :]], axis=1)
+    if cfg.family == "audio":
+        if caches is not None and "memory" in caches and "frames" not in batch:
+            memory = caches["memory"]
+        else:
+            fr = batch["frames"].astype(x.dtype) @ params["enc_proj"]
+            memory, _, _, _ = run_stack(
+                cfg, [params["enc_blocks"]], [{}], fr, caches=None,
+                pos=0, memory=None, training=caches is None,
+                pattern=["enc"])
+            memory = L.rms_norm(memory, params["enc_norm"], cfg.norm_eps)
+
+    metas = build_meta(cfg)
+    block_caches = caches["blocks"] if caches is not None else None
+    x, aux, z, new_block_caches = run_stack(
+        cfg, params["blocks"], metas, x, caches=block_caches, pos=pos,
+        memory=memory, training=caches is None)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = dict(caches)
+        new_caches["blocks"] = new_block_caches
+        new_caches["pos"] = pos + tokens.shape[1]
+        if cfg.family == "audio" and memory is not None:
+            new_caches["memory"] = memory
+    return x, (aux, z), new_caches
+
+
+def forward_hidden(cfg: ModelConfig, params, batch):
+    x, auxz, _ = _hidden(cfg, params, batch, None)
+    return x, auxz
+
+
+def forward(cfg: ModelConfig, params, batch, caches=None):
+    """batch: dict with 'tokens' (B,S) int32; vlm: + 'patch_embeds'
+    (B,P,frontend_dim); audio: + 'frames' (B,S_enc,frontend_dim).
+    caches: serve-state dict or None (training).
+    Returns (logits (B,S,padded_vocab), (aux, z), new_caches)."""
+    x, (aux, z), new_caches = _hidden(cfg, params, batch, caches)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = _mask_pad_vocab(cfg, (x @ head).astype(jnp.float32))
+    return logits, (aux, z), new_caches
+
+
+# =====================================================================
+# training loss
+# =====================================================================
+def _ce_terms(cfg: ModelConfig, logits, labels):
+    """(sum of CE over valid labels, count of valid labels)."""
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.where(valid, logz - gold, 0.0)
+    return ce.sum(), valid.sum()
+
+
+def _mask_pad_vocab(cfg: ModelConfig, logits):
+    if cfg.padded_vocab > cfg.vocab:
+        vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(vmask[None, None, :], logits, NEG_INF)
+    return logits
+
+
+def chunked_ce(cfg: ModelConfig, x_final, head, labels, chunk: int):
+    """Sequence-chunked, checkpointed CE: the (B, chunk, V) f32 logits block
+    is the only logits liveness — full (B,S,V) f32 logits (the largest single
+    training tensor for 150k-vocab archs) are never materialized; the
+    backward pass recomputes each block's logits (jax.checkpoint)."""
+    s = x_final.shape[1]
+    n_chunks = s // chunk
+
+    @jax.checkpoint
+    def body(carry, idx):
+        loss_sum, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(x_final, idx * chunk, chunk, 1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, 1)
+        logits = _mask_pad_vocab(cfg, (xs @ head).astype(jnp.float32))
+        c_sum, c_cnt = _ce_terms(cfg, logits, ls)
+        return (loss_sum + c_sum, cnt + c_cnt), None
+
+    (loss_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        jnp.arange(n_chunks))
+    return loss_sum, cnt
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    """Cross-entropy over valid labels (labels < 0 are masked)."""
+    x_final, (aux, z) = forward_hidden(cfg, params, batch)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    labels = batch["labels"]
+    s = labels.shape[1]
+    if cfg.loss_chunk and s % cfg.loss_chunk == 0 and s > cfg.loss_chunk:
+        loss_sum, n_valid = chunked_ce(cfg, x_final, head, labels,
+                                       cfg.loss_chunk)
+    else:
+        logits = _mask_pad_vocab(cfg, (x_final @ head).astype(jnp.float32))
+        loss_sum, n_valid = _ce_terms(cfg, logits, labels)
+    n_valid = jnp.maximum(n_valid, 1)
+    loss = loss_sum / n_valid
+    total = loss + cfg.router_aux_coef * aux + cfg.router_z_coef * z
+    return total, {"ce": loss, "aux": aux, "z": z,
+                   "tokens": n_valid}
+
+
+# =====================================================================
+# serving
+# =====================================================================
+def _zero_attn_cache(cfg, g, b, max_len, dt):
+    """KV cache; 'int8' stores dictionary-quantized codes + per-(token,head)
+    f32 scales — the paper's encode-small-integers idea applied to the
+    serving cache (halves decode HBM; see blocks._attn_apply)."""
+    hd = cfg.head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": jnp.zeros((g, b, max_len, cfg.n_kv, hd), jnp.int8),
+                "v": jnp.zeros((g, b, max_len, cfg.n_kv, hd), jnp.int8),
+                "ks": jnp.zeros((g, b, max_len, cfg.n_kv), jnp.float32),
+                "vs": jnp.zeros((g, b, max_len, cfg.n_kv), jnp.float32)}
+    return {"k": jnp.zeros((g, b, max_len, cfg.n_kv, hd), dt),
+            "v": jnp.zeros((g, b, max_len, cfg.n_kv, hd), dt)}
+
+
+def init_serve_state(cfg: ModelConfig, batch_size: int, max_len: int,
+                     enc_len: int = 0) -> dict:
+    dt = L.dtype_of(cfg.dtype)
+    g = n_groups(cfg)
+    pat = block_pattern(cfg)
+    b = batch_size
+    di = cfg.d_inner
+    caches = []
+    for kind in pat:
+        if kind in ("dense", "moe"):
+            caches.append(_zero_attn_cache(cfg, g, b, max_len, dt))
+        elif kind == "mlstm":
+            dk = int(di * cfg.qk_dim_ratio) // cfg.n_heads
+            dv = di // cfg.n_heads              # normalizer is separate
+            caches.append({
+                "state": jnp.zeros((g, b, cfg.n_heads, dk, dv), jnp.float32),
+                "nstate": jnp.zeros((g, b, cfg.n_heads, dk), jnp.float32),
+                "conv": jnp.zeros((g, b, cfg.conv_width - 1, di), dt)})
+        elif kind == "slstm":
+            dh = cfg.d_model // cfg.n_heads
+            caches.append({
+                "h": jnp.zeros((g, b, cfg.n_heads, dh), jnp.float32),
+                "c": jnp.zeros((g, b, cfg.n_heads, dh), jnp.float32)})
+        elif kind == "hymba":
+            caches.append({
+                "attn": _zero_attn_cache(cfg, g, b, max_len, dt),
+                "conv": jnp.zeros((g, b, cfg.conv_width - 1, di), dt),
+                "state": jnp.zeros((g, b, cfg.n_heads, cfg.ssm_state,
+                                    di // cfg.n_heads), jnp.float32)})
+        elif kind == "xdec":
+            caches.append({"self": _zero_attn_cache(cfg, g, b, max_len, dt)})
+        else:
+            raise ValueError(kind)
+    state = {"blocks": caches, "pos": jnp.asarray(0, jnp.int32)}
+    if cfg.family == "audio":
+        state["memory"] = jnp.zeros((b, enc_len, cfg.d_model), dt)
+    return state
+
+
+def prefill(cfg: ModelConfig, params, state, batch):
+    logits, _, state = forward(cfg, params, batch, caches=state)
+    return logits, state
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    """tokens (B, 1) -> (logits (B,1,V), new state)."""
+    logits, _, state = forward(cfg, params, {"tokens": tokens}, caches=state)
+    return logits, state

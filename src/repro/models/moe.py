@@ -1,0 +1,72 @@
+"""Token-choice top-k MoE with capacity (GShard-style einsum dispatch).
+
+Dispatch/combine are expressed as one-hot einsums so GSPMD can shard the
+(G, S, E, C) tensors over data (G) and experts (E=model axis) and insert the
+canonical MoE all-to-all between the token-sharded and expert-sharded
+layouts. Aux losses: load-balance (Switch) + router z-loss.
+
+The dispatch tensor is the MoE analogue of the paper's one-hot featurization:
+a categorical 'expert id' feature one-hot-encoded and immediately contracted,
+never materialized in HBM longer than one layer (remat'd in backward).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def capacity(s: int, k: int, e: int, factor: float) -> int:
+    return max(1, int(s * k / e * factor))
+
+
+def route(router_logits: jnp.ndarray, k: int, e: int, cap: int):
+    """router_logits (G,S,E) -> dispatch (G,S,E,C) bool-ish, combine (G,S,E,C),
+    aux losses. Slot assignment is priority-ordered over the k choices."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)               # (G,S,k)
+    # normalize the k gates (moonshot/deepseek style)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    g, s, _ = probs.shape
+    counts = jnp.zeros((g, e), jnp.int32)
+    dispatch = jnp.zeros((g, s, e, cap), jnp.bfloat16)
+    combine = jnp.zeros((g, s, e, cap), jnp.float32)
+    for slot in range(k):
+        mask = jax.nn.one_hot(idx[:, :, slot], e, dtype=jnp.int32)   # (G,S,E)
+        pos = jnp.cumsum(mask, axis=1) - 1 + counts[:, None, :]      # (G,S,E)
+        keep = (pos < cap) & (mask > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, -1), cap,
+                                dtype=jnp.bfloat16)                  # (G,S,E,C)
+        dispatch = dispatch + pos_oh
+        combine = combine + pos_oh.astype(jnp.float32) * \
+            gate_vals[:, :, slot][:, :, None, None]
+        counts = counts + mask.sum(axis=1)
+
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                                     # (E,)
+    top1 = jax.nn.one_hot(idx[:, :, 0], e, dtype=jnp.float32)
+    ce = top1.mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(router_logits.astype(jnp.float32),
+                                  axis=-1) ** 2)
+    return dispatch, combine, aux, z
+
+
+def moe_ff(x: jnp.ndarray, router_w: jnp.ndarray, w_gate: jnp.ndarray,
+           w_up: jnp.ndarray, w_down: jnp.ndarray, *, top_k: int,
+           cap_factor: float):
+    """x (G,S,D); router_w (D,E); expert weights (E,D,F)/(E,F,D).
+
+    Returns (out (G,S,D), aux_loss scalar)."""
+    g, s, d = x.shape
+    e = router_w.shape[-1]
+    cap = capacity(s, top_k, e, cap_factor)
+    logits = jnp.einsum("gsd,de->gse", x, router_w,
+                        preferred_element_type=jnp.float32)
+    dispatch, combine, aux, z = route(logits, top_k, e, cap)
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), x)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, w_gate)) * \
+        jnp.einsum("egcd,edf->egcf", xin, w_up)
+    eout = jnp.einsum("egcf,efd->egcd", h, w_down)
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), eout)
+    return out, aux, z

@@ -1,0 +1,88 @@
+"""Wide&Deep over columnar ADV features — the paper's reference workload
+(§2 cites Wide&Deep as the consumer of exactly these features).
+
+Wide part: categorical codes -> fused one-hot linear layer (the
+``onehot_wide`` kernel — one-hot never materialized). Deep part: dense ADV
+feature vector (normalizations, bucketizations, embeddings gathered through
+the dictionary) -> MLP. Trained end-to-end; the learned embedding tables are
+written back to the dictionary as learned ADVs by the analytics cycle
+(examples/analytics_cycle.py, paper §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class WideDeepConfig:
+    wide_cards: tuple            # cardinality per wide categorical column
+    deep_dim: int                # ADV feature vector width
+    embed_cols: tuple = ()       # (cardinality, dim) per embedded column
+    hidden: tuple = (64, 32)
+    n_out: int = 1               # 1 = binary logit
+    use_kernel: bool = False     # route wide part through the Pallas kernel
+
+
+def init_widedeep(cfg: WideDeepConfig, key):
+    kmax = max(cfg.wide_cards) if cfg.wide_cards else 1
+    ks = jax.random.split(key, 4 + len(cfg.hidden))
+    params = {
+        # stacked wide tables (C, K_max, n_out) — padded to max cardinality
+        "wide": jnp.zeros((len(cfg.wide_cards), kmax, cfg.n_out),
+                          jnp.float32),
+        "bias": jnp.zeros((cfg.n_out,), jnp.float32),
+        "embeds": [jax.random.normal(ks[2 + i], (card, dim)) / np.sqrt(dim)
+                   for i, (card, dim) in enumerate(cfg.embed_cols)],
+    }
+    in_dim = cfg.deep_dim + sum(d for _, d in cfg.embed_cols)
+    dims = (in_dim,) + cfg.hidden + (cfg.n_out,)
+    params["mlp"] = [
+        {"w": jax.random.normal(ks[3 + i], (a, b)) / np.sqrt(a),
+         "b": jnp.zeros((b,))}
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:]))]
+    return params
+
+
+def forward_widedeep(cfg: WideDeepConfig, params, wide_codes, deep_feats,
+                     embed_codes=None):
+    """wide_codes (C, N) int32; deep_feats (N, F); embed_codes list of (N,)."""
+    if cfg.use_kernel:
+        from repro.kernels.onehot_wide import onehot_wide
+        wide = onehot_wide(wide_codes, params["wide"])
+    else:
+        from repro.kernels.onehot_wide.ref import onehot_wide_ref
+        wide = onehot_wide_ref(wide_codes, params["wide"])
+    h = deep_feats
+    if embed_codes:
+        embs = [tab[c] for tab, c in zip(params["embeds"], embed_codes)]
+        h = jnp.concatenate([h] + embs, axis=-1)
+    for i, layer in enumerate(params["mlp"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params["mlp"]) - 1:
+            h = jax.nn.relu(h)
+    return (wide + h + params["bias"])[:, 0] if cfg.n_out == 1 else wide + h
+
+
+def loss_widedeep(cfg: WideDeepConfig, params, wide_codes, deep_feats,
+                  labels, embed_codes=None):
+    logits = forward_widedeep(cfg, params, wide_codes, deep_feats,
+                              embed_codes)
+    # binary cross-entropy with logits
+    l = jnp.maximum(logits, 0) - logits * labels + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return l.mean()
+
+
+def make_widedeep_train_step(cfg: WideDeepConfig, lr: float = 0.05):
+    @jax.jit
+    def step(params, wide_codes, deep_feats, labels, embed_codes):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_widedeep(cfg, p, wide_codes, deep_feats, labels,
+                                    embed_codes))(params)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, loss
+    return step

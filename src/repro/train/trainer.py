@@ -1,0 +1,193 @@
+"""Distributed trainer: pjit'd train step, schedules, checkpoint/restart,
+straggler detection — the loop a fleet would actually run.
+
+make_train_step builds the jitted (params, opt_state, batch, step) ->
+(params, opt_state, metrics) function with GSPMD shardings from
+distributed.sharding; Trainer owns the loop, fault handling, and the
+analytics-cycle hook (feedback of the trained embedding into the token
+dictionary, paper §7).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train.fault import StragglerDetector, FaultLog
+from repro.train.optimizer import OptConfig, init_opt_state, apply_updates
+from repro.train.schedule import SCHEDULES
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    warmup: int = 10
+    schedule: str = "cosine"
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = ""
+    keep_ckpts: int = 3
+    donate: bool = True
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig, train: TrainConfig,
+                    mesh=None, batch_specs=None):
+    """Returns (step_fn, shardings) — step_fn is jitted (pjit when mesh)."""
+    sched = partial(SCHEDULES[train.schedule], peak_lr=opt.lr,
+                    warmup=train.warmup, total=train.steps)
+
+    def step_fn(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm.train_loss(cfg, p, batch), has_aux=True)(params)
+        lr = sched(step)
+        params, opt_state = apply_updates(opt, grads, opt_state, params, lr)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return params, opt_state, metrics
+
+    if mesh is None:
+        donate = (0, 1) if train.donate else ()
+        return jax.jit(step_fn, donate_argnums=donate), None
+
+    p_specs = shd.param_pspecs(cfg, lm.param_specs(cfg), mesh)
+    p_shard = shd.to_shardings(mesh, p_specs)
+    opt_shape = jax.eval_shape(
+        lambda: init_opt_state(opt, lm.param_specs(cfg)))
+    opt_shard = shd.to_shardings(mesh, _opt_pspecs(cfg, opt_shape, mesh))
+    b_shard = (shd.to_shardings(mesh, batch_specs)
+               if batch_specs is not None else None)
+    step_jit = jax.jit(
+        step_fn,
+        in_shardings=(p_shard, opt_shard, b_shard, None),
+        out_shardings=(p_shard, opt_shard, None),
+        donate_argnums=(0, 1) if train.donate else (),
+    )
+    return step_jit, {"params": p_shard, "opt": opt_shard, "batch": b_shard}
+
+
+def _opt_pspecs(cfg: ModelConfig, opt_shape, mesh):
+    """Optimizer-state PartitionSpecs.
+
+    - adamw moments mirror the param specs PLUS a 'data' axis on the largest
+      unsharded dim (ZeRO-1: optimizer states sharded over data parallelism;
+      GSPMD derives the reduce-scatter/all-gather pair around the update);
+    - adamw8 quantized bundles ({'q': param-shaped int8, 'scale': per-row
+      f32}) inherit the ZeRO-extended param spec directly (the per-row
+      layout is what makes them sharding-preserving);
+    - adafactor factored stats are tiny -> replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+    p_shapes = lm.param_specs(cfg)
+    p_specs = shd.param_pspecs(cfg, p_shapes, mesh)
+    data = mesh.shape.get("data", 1)
+
+    def zero1_extend(spec, leaf):
+        if data <= 1 or any(e == "data" or (isinstance(e, tuple) and
+                                            "data" in e) for e in spec):
+            return spec              # FSDP params already carry 'data'
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        best, best_size = -1, 0
+        for i, (e, sz) in enumerate(zip(entries, leaf.shape)):
+            if e is None and sz % data == 0 and sz > best_size:
+                best, best_size = i, sz
+        if best >= 0:
+            entries[best] = "data"
+        return P(*entries)
+
+    moment_specs = jax.tree.map(zero1_extend, p_specs, p_shapes,
+                                is_leaf=lambda x: isinstance(x, P))
+
+    is_qbundle = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+
+    def qbundle_spec(spec, leaf):
+        """q inherits the (ZeRO-extended) param spec; scale drops the last
+        axis entry (it has one value per row)."""
+        ext = zero1_extend(spec, leaf)
+        entries = list(ext) + [None] * (len(leaf.shape) - len(ext))
+        return {"q": P(*entries), "scale": P(*entries[:-1])}
+
+    spec_leaves, spec_tree = jax.tree_util.tree_flatten(
+        p_specs, is_leaf=lambda x: isinstance(x, P))
+    shape_leaves = spec_tree.flatten_up_to(p_shapes)
+
+    out = {"step": P()}
+    for key, sub in opt_shape.items():
+        if key == "step":
+            continue
+        if key in ("m", "v"):
+            sub_leaves = spec_tree.flatten_up_to(sub)
+            built = []
+            for sp, sh, sl in zip(spec_leaves, shape_leaves, sub_leaves):
+                if is_qbundle(sl):
+                    built.append(qbundle_spec(sp, sh))
+                else:
+                    built.append(zero1_extend(sp, sh))
+            out[key] = jax.tree_util.tree_unflatten(spec_tree, built)
+        elif key == "f":
+            out[key] = jax.tree.map(lambda l: P(*([None] * l.ndim)), sub)
+        else:
+            out[key] = jax.tree.map(lambda _: P(), sub)
+    return out
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    opt: OptConfig
+    train: TrainConfig
+    mesh: Any = None
+    fault_log: FaultLog = field(default_factory=FaultLog)
+
+    def fit(self, params, data_iter: Iterator[dict], *,
+            resume: bool = True) -> tuple[Any, list[dict]]:
+        step_fn, _ = make_train_step(self.cfg, self.opt, self.train,
+                                     mesh=self.mesh)
+        opt_state = init_opt_state(self.opt, params)
+        start = 0
+        saver = None
+        if self.train.ckpt_dir:
+            saver = ckpt_lib.AsyncCheckpointer(self.train.ckpt_dir,
+                                               keep=self.train.keep_ckpts)
+            if resume:
+                got = ckpt_lib.restore_latest(
+                    self.train.ckpt_dir,
+                    {"params": params, "opt": opt_state})
+                if got[0] is not None:
+                    start, tree, _ = got
+                    params, opt_state = tree["params"], tree["opt"]
+                    self.fault_log.record(start, "restart",
+                                          f"resumed from step {start}")
+        detector = StragglerDetector()
+        history: list[dict] = []
+        for step in range(start, self.train.steps):
+            batch = next(data_iter)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.asarray(step, jnp.int32))
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if detector.observe(step, dt):
+                self.fault_log.record(step, "straggler", f"{dt:.3f}s")
+            if step % self.train.log_every == 0 or step == self.train.steps - 1:
+                history.append({"step": step,
+                                "loss": float(metrics["loss"]),
+                                "ce": float(metrics["ce"]),
+                                "lr": float(metrics["lr"]),
+                                "dt": dt})
+            if saver and self.train.ckpt_every and \
+                    (step + 1) % self.train.ckpt_every == 0:
+                saver.save_async(step + 1, {"params": params,
+                                            "opt": opt_state})
+        if saver:
+            saver.save_async(self.train.steps, {"params": params,
+                                                "opt": opt_state})
+            saver.wait()
+        return params, history

@@ -1,0 +1,206 @@
+"""Tests for the paper's core contribution: ADVs + featurization + feedback."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.columnar import Dictionary, Table
+from repro.columnar import featurize as F
+from repro.core import AugmentedDictionary, FeatureSet, FeaturePipeline
+from repro.core import feedback
+
+
+def _age_dict(seed=0, n=500):
+    rng = np.random.default_rng(seed)
+    ages = rng.integers(8, 92, size=n)
+    return Dictionary.from_data(ages)
+
+
+# -- featurization catalog vs direct row-space computation ----------------------
+def test_float_adv_matches_rowspace():
+    d, codes = _age_dict()
+    aug = AugmentedDictionary(d)
+    aug.add("age_fp", "float")
+    out = aug.featurize("age_fp", codes)[:, 0]
+    np.testing.assert_array_equal(out, d.decode(codes).astype(np.float32))
+
+
+def test_minmax_zscore_match_rowspace():
+    d, codes = _age_dict()
+    aug = AugmentedDictionary(d)
+    aug.add("mm", "minmax")
+    aug.add("z", "zscore")
+    vals = d.decode(codes).astype(np.float64)
+    mm = (vals - vals.min()) / (vals.max() - vals.min())
+    np.testing.assert_allclose(aug.featurize("mm", codes)[:, 0], mm, rtol=1e-5)
+    z = (vals - vals.mean()) / vals.std()
+    np.testing.assert_allclose(aug.featurize("z", codes)[:, 0], z, rtol=1e-4)
+
+
+def test_bucketize_decade_paper_table5():
+    # Table 5: Age 55 -> decade bucket 5.0; 42 -> 4.0; 8 -> 0.0; 17 -> 1.0
+    d, codes = Dictionary.from_data(np.array([55, 42, 8, 17]))
+    aug = AugmentedDictionary(d)
+    aug.add("decade", "bucketize", boundaries=np.arange(10, 100, 10))
+    out = aug.featurize("decade", codes)[:, 0]
+    np.testing.assert_array_equal(out, [5.0, 4.0, 0.0, 1.0])
+
+
+def test_bucketize_categorical_paper_table4():
+    # Table 4: states -> census region buckets.
+    region = {"California": 3.0, "Connecticut": 0.0, "Oregon": 3.0,
+              "Virginia": 2.0}
+    division = {"California": 9.0, "Connecticut": 0.0, "Oregon": 8.0,
+                "Virginia": 4.0}
+    data = np.array(["California", "Connecticut", "Oregon", "Virginia",
+                     "Oregon"])
+    d, codes = Dictionary.from_data(data)
+    aug = AugmentedDictionary(d)
+    aug.add("region", "bucketize_cat", mapping=region)
+    aug.add("division", "bucketize_cat", mapping=division)
+    np.testing.assert_array_equal(aug.featurize("region", codes)[:, 0],
+                                  [3.0, 0.0, 3.0, 2.0, 3.0])
+    np.testing.assert_array_equal(aug.featurize("division", codes)[:, 0],
+                                  [9.0, 0.0, 8.0, 4.0, 8.0])
+
+
+def test_onehot_adv_gather_equals_materialized():
+    d, codes = Dictionary.from_data(np.array([3, 1, 2, 3, 1]))
+    aug = AugmentedDictionary(d)
+    aug.add("oh", "onehot")
+    gathered = aug.featurize("oh", codes)
+    np.testing.assert_array_equal(gathered,
+                                  F.onehot_rows(codes, d.cardinality))
+
+
+def test_quantile_and_hash_buckets():
+    d, codes = _age_dict(n=2000)
+    aug = AugmentedDictionary(d)
+    aug.add("q4", "quantile", q=4)
+    q = aug.featurize("q4", codes)[:, 0]
+    assert set(np.unique(q)) <= {0.0, 1.0, 2.0, 3.0}
+    # roughly balanced buckets
+    _, counts = np.unique(q, return_counts=True)
+    assert counts.min() > 0.15 * 2000
+    aug.add("h8", "hash_bucket", n_buckets=8)
+    h = aug.featurize("h8", codes)[:, 0]
+    assert set(np.unique(h)) <= set(float(i) for i in range(8))
+
+
+def test_binarize_and_log():
+    d, codes = _age_dict()
+    aug = AugmentedDictionary(d)
+    aug.add("adult", "binarize", threshold=17.5)
+    vals = d.decode(codes)
+    np.testing.assert_array_equal(aug.featurize("adult", codes)[:, 0],
+                                  (vals > 17.5).astype(np.float32))
+    aug.add("lg", "log")
+    np.testing.assert_allclose(aug.featurize("lg", codes)[:, 0],
+                               np.log1p(vals.astype(np.float32)), rtol=1e-6)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 40))
+@settings(max_examples=30, deadline=None)
+def test_adv_equals_recompute_property(seed, card):
+    """Paper's invariant: gather-through-ADV == recompute-from-raw, always."""
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, card, size=300)
+    d, codes = Dictionary.from_data(data)
+    aug = AugmentedDictionary(d)
+    aug.add("z", "zscore")
+    fast = aug.featurize("z", codes)
+    slow = aug.featurize_recompute("z", codes)
+    np.testing.assert_allclose(fast, slow, rtol=1e-5, atol=1e-6)
+
+
+def test_adv_maintenance_after_insert():
+    d, codes = Dictionary.from_data(np.array([1.0, 2.0, 4.0]))
+    aug = AugmentedDictionary(d)
+    aug.add("mm", "minmax")
+    d.add_rows(np.array([8.0]))
+    aug.extend_for_new_codes()
+    assert aug["mm"].cardinality == 4
+    # minmax rescaled against the new max
+    np.testing.assert_allclose(aug["mm"].table[:, 0],
+                               (np.array([1, 2, 4, 8.0]) - 1) / 7.0, rtol=1e-6)
+
+
+def test_interest_stats():
+    d, _ = Dictionary.from_data(np.array([1, 1, 1, 1, 50]))
+    aug = AugmentedDictionary(d)
+    adv = aug.add("f", "float")
+    s = adv.interest_stats(d.counts)
+    assert 0.0 < s["entropy"] < 1.0
+    assert s["peculiarity"] > 1.0
+
+
+# -- FeatureSet / FeaturePipeline -------------------------------------------------
+def _toy_table(n=256, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table.from_data({
+        "age": rng.integers(18, 80, size=n),
+        "state": np.array(["CA", "OR", "WA", "NY"])[rng.integers(0, 4, n)],
+        "income": rng.integers(20, 200, size=n) * 1000,
+    })
+
+
+def test_pipeline_end_to_end():
+    t = _toy_table()
+    fs = (FeatureSet()
+          .add("age", "zscore")
+          .add("age", "bucketize", boundaries=(30.0, 50.0, 65.0))
+          .add("state", "onehot")
+          .add("income", "minmax"))
+    pipe = FeaturePipeline(t, fs)
+    assert pipe.out_dim == 1 + 1 + 4 + 1
+    idx = np.arange(32)
+    dev = np.asarray(pipe.batch(idx))
+    host = pipe.batch_recompute(idx)
+    np.testing.assert_allclose(dev, host, rtol=1e-5, atol=1e-6)
+
+
+def test_pipeline_data_movement_win():
+    t = _toy_table(n=4096)
+    fs = FeatureSet().add("state", "onehot").add("age", "zscore")
+    pipe = FeaturePipeline(t, fs)
+    b = 1024
+    assert pipe.bytes_moved_adv(b) < pipe.bytes_moved_recompute(b)
+    # state: 2-bit codes vs 4 one-hot floats = 64x; age: ~6 bits vs 4B
+    assert pipe.bytes_moved_recompute(b) / pipe.bytes_moved_adv(b) > 10
+
+
+def test_pipeline_batches_iterator():
+    t = _toy_table(n=128)
+    pipe = FeaturePipeline(t, FeatureSet().add("age", "float"))
+    seen = 0
+    for idx, feats in pipe.batches(32, epochs=1):
+        assert feats.shape == (32, 1)
+        seen += 1
+    assert seen == 4
+
+
+# -- feedback loop (paper §7) ------------------------------------------------------
+def test_learned_bucketization_writeback():
+    d, codes = _age_dict(n=4000)
+    aug = AugmentedDictionary(d)
+    scores = d.values.astype(np.float64)          # proxy learned score
+    feedback.learn_bucketization(aug, "ml_g1", scores, n_buckets=5,
+                                 analysis="run-42")
+    assert "ml_g1" in aug
+    assert aug["ml_g1"].learned
+    b = aug.featurize("ml_g1", codes)[:, 0]
+    # count-weighted quantile buckets are roughly balanced
+    _, counts = np.unique(b, return_counts=True)
+    assert counts.min() > 0.1 * 4000
+    # monotone in score
+    order = np.argsort(scores)
+    assert (np.diff(aug["ml_g1"].table[order, 0]) >= 0).all()
+
+
+def test_embedding_writeback_and_rank():
+    d, _ = _age_dict()
+    aug = AugmentedDictionary(d)
+    emb = np.random.default_rng(0).standard_normal((d.cardinality, 8))
+    feedback.store_embedding(aug, "emb.v1", emb, analysis="pretrain-1")
+    assert aug["emb.v1"].dim == 8
+    ranks = feedback.rank_features({"a": np.ones(4), "b": np.zeros(4)})
+    assert ranks[0][0] == "a"

@@ -1,0 +1,184 @@
+"""Unit + property tests for the columnar substrate (paper §5/§6.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.columnar import (bits_needed, pack_bits, unpack_bits, rle_encode,
+                            rle_decode, Dictionary, Column, Table)
+from repro.columnar.bitpack import unpack_bits_jnp, packed_nbytes
+from repro.columnar.rle import rle_decode_jnp
+from repro.columnar import stats, query
+
+
+# -- Table 2 of the paper, verbatim -------------------------------------------
+@pytest.mark.parametrize("cardinality,bits", [
+    (2, 1), (4, 2), (5, 3), (12, 4), (50, 6), (150, 8),
+    (195, 8), (366, 9), (999, 10), (99_999, 17), (524_288, 19),
+])
+def test_bits_needed_paper_table2(cardinality, bits):
+    # Paper reports fractional bits (log2); storage uses ceil(log2).
+    assert bits_needed(cardinality) == bits
+
+
+@given(st.lists(st.integers(0, 2**19 - 1), min_size=0, max_size=500),
+       st.integers(19, 32))
+@settings(max_examples=50, deadline=None)
+def test_pack_roundtrip_property(codes, bits):
+    codes = np.asarray(codes, dtype=np.int64)
+    packed = pack_bits(codes, bits)
+    out = unpack_bits(packed, bits, codes.size)
+    np.testing.assert_array_equal(out, codes)
+
+
+@given(st.integers(1, 31), st.integers(0, 1000), st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_pack_roundtrip_any_width(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << bits, size=n)
+    packed = pack_bits(codes, bits)
+    np.testing.assert_array_equal(unpack_bits(packed, bits, n), codes)
+
+
+def test_unpack_jnp_matches_numpy():
+    rng = np.random.default_rng(0)
+    for bits in (1, 3, 6, 7, 13, 19, 32):
+        codes = rng.integers(0, min(1 << bits, 1 << 31), size=257)
+        packed = pack_bits(codes, bits)
+        out = np.asarray(unpack_bits_jnp(packed, bits, codes.size))
+        np.testing.assert_array_equal(out, codes)
+
+
+def test_packed_nbytes():
+    assert packed_nbytes(512 * 1024, 6) == 4 * ((512 * 1024 * 6 + 31) // 32)
+
+
+@given(st.lists(st.integers(0, 7), min_size=0, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_rle_roundtrip(codes):
+    codes = np.asarray(codes, dtype=np.int32)
+    vals, lens = rle_encode(codes)
+    np.testing.assert_array_equal(rle_decode(vals, lens), codes)
+    if codes.size:
+        out = np.asarray(rle_decode_jnp(vals, lens, codes.size))
+        np.testing.assert_array_equal(out, codes)
+
+
+# -- Dictionary ---------------------------------------------------------------
+def test_dictionary_counts_and_stats():
+    data = np.array([5, 5, 2, 9, 5, 2], dtype=np.int64)
+    d, codes = Dictionary.from_data(data)
+    assert d.cardinality == 3
+    assert d.n_rows == 6
+    np.testing.assert_array_equal(d.decode(codes), data)
+    assert d.sum() == data.sum()
+    assert d.mean() == pytest.approx(data.mean())
+    assert d.std() == pytest.approx(data.std())
+    assert d.vmin == 2 and d.vmax == 9
+
+
+def test_dictionary_load_order_codes():
+    # Paper: encodings are internal and may not follow value order.
+    d, codes = Dictionary.from_data(np.array(["b", "a", "c", "a"]))
+    assert d.values.tolist() == ["b", "a", "c"]
+    np.testing.assert_array_equal(codes, [0, 1, 2, 1])
+
+
+def test_dictionary_insert_maintenance():
+    d, codes = Dictionary.from_data(np.array([1, 2, 1]))
+    new_codes = d.add_rows(np.array([3, 2]))
+    assert d.cardinality == 3
+    assert d.n_rows == 5
+    np.testing.assert_array_equal(d.decode(new_codes), [3, 2])
+    d.remove_rows(new_codes[:1])
+    assert d.n_rows == 4
+
+
+@given(st.lists(st.integers(-50, 50), min_size=1, max_size=400))
+@settings(max_examples=50, deadline=None)
+def test_count_stats_match_scan_property(data):
+    data = np.asarray(data, dtype=np.int64)
+    col = Column.from_data(data, imcu_rows=64)
+    assert stats.sum_from_dictionary(col) == pytest.approx(stats.sum_scan(col))
+    assert stats.mean_from_dictionary(col) == pytest.approx(stats.mean_scan(col))
+    assert stats.std_from_dictionary(col) == pytest.approx(stats.std_scan(col))
+    assert stats.minmax_from_dictionary(col) == stats.minmax_scan(col)
+
+
+def test_histogram_is_dictionary():
+    col = Column.from_data(np.array([3, 1, 3, 3, 2]))
+    v_d, c_d = stats.histogram_from_dictionary(col)
+    v_s, c_s = stats.histogram_scan(col)
+    d_map = dict(zip(v_d.tolist(), c_d.tolist()))
+    s_map = dict(zip(v_s.tolist(), c_s.tolist()))
+    assert d_map == s_map
+
+
+def test_quantile_edges_from_counts():
+    data = np.concatenate([np.full(75, 1), np.full(25, 10)])
+    d, _ = Dictionary.from_data(data)
+    edges = d.quantile_edges(4)
+    assert edges.tolist() == [1.0, 1.0, 1.0]
+
+
+# -- Column / IMCU --------------------------------------------------------------
+def test_column_roundtrip_multi_imcu():
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 50, size=1000)
+    col = Column.from_data(data, imcu_rows=128)
+    np.testing.assert_array_equal(col.decode(), data)
+    assert len(col._imcus) == 8
+
+
+def test_column_rle_on_sorted_data():
+    data = np.repeat(np.arange(10), 200)
+    col = Column.from_data(data, imcu_rows=512, use_rle=True)
+    col_no = Column.from_data(data, imcu_rows=512, use_rle=False)
+    assert col.packed_nbytes < col_no.packed_nbytes
+    np.testing.assert_array_equal(col.decode(), data)
+
+
+def test_compression_ratio_string_column():
+    # 'state-like' strings compress heavily (paper §5.1).
+    states = np.array(["California", "Connecticut", "Oregon", "Virginia"])
+    data = states[np.random.default_rng(0).integers(0, 4, size=10_000)]
+    col = Column.from_data(data, use_rle=False)
+    assert col.dictionary.bits == 2
+    assert col.compression_ratio > 10
+
+
+# -- query ops ----------------------------------------------------------------
+def test_filter_mask_via_dictionary():
+    data = np.array([10, 20, 30, 20, 10, 40])
+    col = Column.from_data(data)
+    mask = query.filter_mask(col, lambda v: v >= 20)
+    np.testing.assert_array_equal(mask, data >= 20)
+
+
+def test_groupby_count_zero_scan():
+    col = Column.from_data(np.array(["a", "b", "a", "a"]))
+    vals, counts = query.groupby_count(col)
+    assert dict(zip(vals.tolist(), counts.tolist())) == {"a": 3, "b": 1}
+
+
+def test_groupby_agg_sum_mean():
+    key = Column.from_data(np.array(["x", "y", "x", "y"]))
+    val = Column.from_data(np.array([1, 2, 3, 4]))
+    kv, s = query.groupby_agg(key, val, "sum")
+    assert dict(zip(kv.tolist(), s.tolist())) == {"x": 4.0, "y": 6.0}
+    _, m = query.groupby_agg(key, val, "mean")
+    assert dict(zip(kv.tolist(), m.tolist())) == {"x": 2.0, "y": 3.0}
+
+
+def test_join_codes_inner():
+    left = Column.from_data(np.array(["a", "b", "c"]))
+    right = Column.from_data(np.array(["b", "b", "a"]))
+    li, ri = query.join_codes(left, right)
+    pairs = {(int(l), int(r)) for l, r in zip(li, ri)}
+    assert pairs == {(0, 2), (1, 0), (1, 1)}
+
+
+def test_table_projection_and_sizes():
+    t = Table.from_data({"a": np.arange(100) % 7, "b": np.arange(100) % 3})
+    assert t.select(["a"]).names == ["a"]
+    assert t.total_nbytes < t.raw_nbytes()
+    assert t.n_rows == 100

@@ -1,0 +1,198 @@
+"""Unit/property tests for model primitives: attention, GLA core, MoE."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import attention
+from repro.models.gla import chunked_gla, gla_ref, gla_step
+from repro.models.moe import moe_ff, route, capacity
+from repro.models.layers import apply_rope, rms_norm
+
+
+# -- attention -------------------------------------------------------------------
+def _qkv(rng, b, s, h, kv, dh, t=None):
+    t = t or s
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, t, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, t, kv, dh)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (8, 1)])
+def test_blockwise_attention_matches_direct(h, kv):
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, 2, 64, h, kv, 16)
+    direct = attention(q, k, v, q_offset=0, kv_chunk=64)       # direct path
+    blocked = attention(q, k, v, q_offset=0, kv_chunk=16)      # 4 chunks
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(blocked),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_sliding_window_matches_direct():
+    rng = np.random.default_rng(1)
+    q, k, v = _qkv(rng, 1, 64, 4, 2, 8)
+    direct = attention(q, k, v, q_offset=0, window=7, kv_chunk=64)
+    blocked = attention(q, k, v, q_offset=0, window=7, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(blocked),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_causality():
+    """Changing future keys must not change past outputs."""
+    rng = np.random.default_rng(2)
+    q, k, v = _qkv(rng, 1, 32, 4, 4, 8)
+    out1 = attention(q, k, v, q_offset=0)
+    k2 = k.at[:, 20:].set(rng.standard_normal((1, 12, 4, 8)))
+    v2 = v.at[:, 20:].set(rng.standard_normal((1, 12, 4, 8)))
+    out2 = attention(q, k2, v2, q_offset=0)
+    np.testing.assert_allclose(np.asarray(out1[:, :20]),
+                               np.asarray(out2[:, :20]), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_kv_len_mask():
+    """Decode: entries beyond kv_len are invisible."""
+    rng = np.random.default_rng(3)
+    q, k, v = _qkv(rng, 2, 1, 4, 2, 8, t=32)
+    out1 = attention(q, k, v, q_offset=10, kv_len=11)
+    k2 = k.at[:, 11:].set(999.0)
+    v2 = v.at[:, 11:].set(999.0)
+    out2 = attention(q, k2, v2, q_offset=10, kv_len=11)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# -- GLA core ----------------------------------------------------------------------
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (48, 48), (33, 3)])
+def test_chunked_gla_matches_sequential(s, chunk):
+    rng = np.random.default_rng(s)
+    b, h, dk, dv = 2, 3, 8, 5
+    q = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((b, s, h, dv)), jnp.float32)
+    log_a = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.2)
+    out_c, st_c = chunked_gla(q, k, v, log_a, chunk=chunk)
+    out_r, st_r = gla_ref(q, k, v, log_a)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_gla_step_composition_property(seed, steps):
+    """N single steps == one chunked pass over N tokens."""
+    rng = np.random.default_rng(seed)
+    b, h, dk, dv = 1, 2, 4, 3
+    s = steps * 2
+    q = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((b, s, h, dv)), jnp.float32)
+    log_a = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.3)
+    out_c, st_c = chunked_gla(q, k, v, log_a, chunk=s)
+    state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    for t in range(s):
+        state, o = gla_step(state, q[:, t], k[:, t], v[:, t], log_a[:, t])
+        np.testing.assert_allclose(np.asarray(o), np.asarray(out_c[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(st_c),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gla_decay_zero_is_cumulative_sum():
+    """a=1 (log_a=0): state is a plain sum of k vᵀ — sanity anchor."""
+    rng = np.random.default_rng(0)
+    b, s, h, dk, dv = 1, 8, 1, 3, 2
+    q = jnp.asarray(np.eye(3)[None, [0] * s, None, :], jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, dv)), jnp.float32)
+    log_a = jnp.zeros((b, s, h))
+    out, st = chunked_gla(q, k, v, log_a, chunk=4)
+    want = np.einsum("bshk,bshv->bhkv", np.asarray(k), np.asarray(v))
+    np.testing.assert_allclose(np.asarray(st), want, rtol=1e-5, atol=1e-5)
+
+
+# -- MoE ---------------------------------------------------------------------------
+def test_route_respects_capacity_and_gates():
+    rng = np.random.default_rng(0)
+    g, s, e, k = 2, 16, 4, 2
+    cap = capacity(s, k, e, 1.0)
+    logits = jnp.asarray(rng.standard_normal((g, s, e)), jnp.float32)
+    dispatch, combine, aux, z = route(logits, k, e, cap)
+    # each (expert, slot) holds at most one token
+    per_slot = np.asarray(dispatch).sum(axis=1)           # (G,E,C)
+    assert per_slot.max() <= 1.0 + 1e-6
+    # each token occupies at most k slots
+    per_tok = np.asarray(dispatch).sum(axis=(2, 3))
+    assert per_tok.max() <= k + 1e-6
+    # combine weights per token sum to <= 1 (=1 when nothing dropped)
+    w = np.asarray(combine).sum(axis=(2, 3))
+    assert w.max() <= 1.0 + 1e-5
+    assert float(aux) > 0 and float(z) >= 0
+
+
+def test_moe_ff_no_drop_equals_dense_mixture():
+    """With huge capacity, MoE out == gate-weighted sum of expert MLPs."""
+    rng = np.random.default_rng(1)
+    g, s, d, f, e, k = 1, 6, 8, 16, 4, 2
+    x = jnp.asarray(rng.standard_normal((g, s, d)), jnp.float32)
+    router = jnp.asarray(rng.standard_normal((d, e)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((e, d, f)) * 0.1, jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((e, d, f)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((e, f, d)) * 0.1, jnp.float32)
+    out, aux, z = moe_ff(x, router, wg, wu, wd, top_k=k, cap_factor=8.0)
+
+    probs = jax.nn.softmax(x @ router, axis=-1)
+    gv, idx = jax.lax.top_k(probs, k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = np.zeros((g, s, d), np.float32)
+    for gi in range(g):
+        for si in range(s):
+            for kk in range(k):
+                eid = int(idx[gi, si, kk])
+                h = jax.nn.silu(x[gi, si] @ wg[eid]) * (x[gi, si] @ wu[eid])
+                want[gi, si] += float(gv[gi, si, kk]) * np.asarray(h @ wd[eid])
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """cap_factor -> tiny: overflowing tokens produce zero output, not junk."""
+    rng = np.random.default_rng(2)
+    g, s, d, f, e = 1, 16, 4, 8, 2
+    x = jnp.asarray(rng.standard_normal((g, s, d)), jnp.float32)
+    router = jnp.zeros((d, e), jnp.float32)  # all tokens tie -> same expert order
+    wg = jnp.ones((e, d, f), jnp.float32) * 0.1
+    wu = jnp.ones((e, d, f), jnp.float32) * 0.1
+    wd = jnp.ones((e, f, d), jnp.float32) * 0.1
+    out, _, _ = moe_ff(x, router, wg, wu, wd, top_k=1, cap_factor=0.25)
+    norms = np.linalg.norm(np.asarray(out)[0], axis=-1)
+    assert (norms[-4:] == 0).all()        # late tokens dropped
+    assert (norms[:2] > 0).all()          # early tokens kept
+
+
+# -- layers ---------------------------------------------------------------------------
+def test_rope_preserves_norm_and_relativity():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 6, 2, 8)), jnp.float32)
+    pos = jnp.arange(6)[None]
+    y = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 8)), jnp.float32)
+    def dot(m, n):
+        qm = apply_rope(q, jnp.array([[m]]), 1e4)
+        kn = apply_rope(k, jnp.array([[n]]), 1e4)
+        return float(jnp.sum(qm * kn))
+    assert abs(dot(3, 1) - dot(7, 5)) < 1e-4
+
+
+def test_rms_norm_unit_scale():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 16)) * 10,
+                    jnp.float32)
+    y = rms_norm(x, jnp.ones(16))
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

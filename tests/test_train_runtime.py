@@ -1,0 +1,183 @@
+"""Tests: optimizers, schedules, checkpointing, fault tolerance, trainer."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.train.optimizer import (OptConfig, init_opt_state, apply_updates,
+                                   quantize_blockwise, dequantize_blockwise,
+                                   clip_by_global_norm, global_norm)
+from repro.train.schedule import warmup_cosine, wsd
+from repro.train import checkpoint as ck
+from repro.train.fault import StragglerDetector, plan_elastic_mesh
+from repro.distributed.compression import (quantize, dequantize,
+                                           compress_decompress,
+                                           compression_ratio)
+
+
+def _toy_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((16,)), jnp.float32)}
+
+
+def _quadratic_grads(params, target):
+    return jax.grad(lambda p: sum(jnp.sum((x - t) ** 2) for x, t in
+                                  zip(jax.tree_util.tree_leaves(p),
+                                      jax.tree_util.tree_leaves(target))))(
+        params)
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw8", "adafactor"])
+def test_optimizer_descends(name):
+    params = _toy_params()
+    target = jax.tree.map(jnp.zeros_like, params)
+    opt = OptConfig(name=name, lr=0.05, weight_decay=0.0)
+    state = init_opt_state(opt, params)
+    loss0 = float(sum(jnp.sum(x ** 2)
+                      for x in jax.tree_util.tree_leaves(params)))
+    for _ in range(60):
+        grads = _quadratic_grads(params, target)
+        params, state = apply_updates(opt, grads, state, params, 0.05)
+    loss1 = float(sum(jnp.sum(x ** 2)
+                      for x in jax.tree_util.tree_leaves(params)))
+    assert loss1 < 0.2 * loss0, (name, loss0, loss1)
+
+
+def test_adamw8_tracks_adamw():
+    """Quantized states follow full-precision trajectory closely."""
+    p1 = _toy_params(1)
+    p2 = jax.tree.map(lambda x: x, p1)
+    target = jax.tree.map(jnp.zeros_like, p1)
+    o1, o2 = OptConfig("adamw", weight_decay=0), OptConfig("adamw8",
+                                                           weight_decay=0)
+    s1, s2 = init_opt_state(o1, p1), init_opt_state(o2, p2)
+    for _ in range(20):
+        g1 = _quadratic_grads(p1, target)
+        g2 = _quadratic_grads(p2, target)
+        p1, s1 = apply_updates(o1, g1, s1, p1, 0.01)
+        p2, s2 = apply_updates(o2, g2, s2, p2, 0.01)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0.15, atol=0.10)
+    # and the trajectories reach comparable loss
+    l1 = sum(float(jnp.sum(x ** 2)) for x in jax.tree_util.tree_leaves(p1))
+    l2 = sum(float(jnp.sum(x ** 2)) for x in jax.tree_util.tree_leaves(p2))
+    assert abs(l1 - l2) / max(l1, 1e-9) < 0.15
+
+
+@given(st.integers(0, 10_000), st.integers(64, 600))
+@settings(max_examples=25, deadline=None)
+def test_quantize_roundtrip_error_bound(seed, rows):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, 512)) * 10, jnp.float32)
+    d = quantize_blockwise(x)
+    if not isinstance(d, dict):          # below QUANT_MIN_SIZE stays f32
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(x))
+        return
+    y = dequantize_blockwise(d)
+    # error bounded by half a code step per row
+    err = np.abs(np.asarray(x - y))
+    bound = np.asarray(d["scale"])[:, None] * 0.5 * (1 + 1e-4) + 1e-6
+    assert (err <= bound).all()
+    # code tensor keeps the param shape (sharding-preserving invariant)
+    assert d["q"].shape == x.shape
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+# -- schedules ---------------------------------------------------------------
+def test_wsd_shape():
+    lr = [float(wsd(s, peak_lr=1.0, warmup=10, total=100, decay_frac=0.2))
+          for s in range(100)]
+    assert lr[0] == 0.0
+    assert lr[9] == pytest.approx(0.9)
+    assert lr[40] == pytest.approx(1.0)          # stable phase
+    assert lr[79] == pytest.approx(1.0)
+    assert lr[99] < 0.05                          # decayed
+    d = np.diff(lr[80:])
+    assert (d <= 1e-6).all()                      # monotone decay
+
+
+def test_cosine_shape():
+    lr = [float(warmup_cosine(s, peak_lr=1.0, warmup=10, total=100))
+          for s in range(100)]
+    assert lr[9] == pytest.approx(0.9)
+    assert max(lr) <= 1.0 + 1e-6
+    assert lr[-1] < 0.2
+
+
+# -- checkpoint -----------------------------------------------------------------
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    tree = {"params": _toy_params(), "step": jnp.asarray(7)}
+    ck.save(str(tmp_path), 10, tree, extra={"note": "x"})
+    ck.save(str(tmp_path), 20, tree)
+    assert ck.latest_steps(str(tmp_path)) == [10, 20]
+    step, restored, extra = ck.restore_latest(str(tmp_path), tree)
+    assert step == 20
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    saver = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = _toy_params()
+    for step in (1, 2, 3, 4):
+        saver.save_async(step, tree)
+    saver.wait()
+    assert ck.latest_steps(str(tmp_path)) == [3, 4]
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    ck.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="mismatch"):
+        ck.restore(str(tmp_path), 1, {"b": jnp.zeros(3)})
+
+
+# -- fault tolerance ---------------------------------------------------------------
+def test_straggler_detector_flags_outliers():
+    det = StragglerDetector(warmup=3)
+    flagged = [det.observe(i, 1.0 + 0.01 * (i % 3)) for i in range(20)]
+    assert not any(flagged)
+    assert det.observe(20, 5.0) is True
+    assert det.straggler_fraction > 0
+    # EWMA not polluted by the outlier
+    assert det.mean < 1.1
+
+
+def test_plan_elastic_mesh():
+    p = plan_elastic_mesh(256, model_parallel=16)
+    assert p.shape == (16, 16)
+    p = plan_elastic_mesh(240, model_parallel=16)   # lost a host of 16
+    assert p.shape == (15, 16) and p.n_devices == 240
+    p = plan_elastic_mesh(512, model_parallel=16, multi_pod=True)
+    assert p.shape == (2, 16, 16)
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8, model_parallel=16)
+
+
+# -- gradient compression -----------------------------------------------------------
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_compression_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(1000) * rng.uniform(0.1, 10),
+                    jnp.float32)
+    y = compress_decompress(x)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(x - y))) <= scale * 0.51 + 1e-6
+
+
+def test_compression_ratio():
+    tree = {"w": jnp.zeros((1024, 1024))}
+    r = compression_ratio(tree)
+    assert 3.5 < r < 4.01

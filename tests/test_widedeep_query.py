@@ -1,0 +1,113 @@
+"""Wide&Deep model + feature-spec + remaining query/dryrun-internals tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.widedeep import (WideDeepConfig, init_widedeep,
+                                   forward_widedeep, loss_widedeep,
+                                   make_widedeep_train_step)
+from repro.core.feature_spec import spec, FeatureSet
+from repro.launch import dryrun as dr
+
+
+def _wd_setup(seed=0, use_kernel=False):
+    rng = np.random.default_rng(seed)
+    cfg = WideDeepConfig(wide_cards=(5, 3), deep_dim=4,
+                         embed_cols=((5, 4),), hidden=(8,),
+                         use_kernel=use_kernel)
+    params = init_widedeep(cfg, jax.random.PRNGKey(seed))
+    n = 64
+    wide = jnp.asarray(np.stack([rng.integers(0, 5, n),
+                                 rng.integers(0, 3, n)]), jnp.int32)
+    deep = jnp.asarray(rng.standard_normal((n, 4)), jnp.float32)
+    emb = [jnp.asarray(rng.integers(0, 5, n), jnp.int32)]
+    y = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+    return cfg, params, wide, deep, emb, y
+
+
+def test_widedeep_kernel_path_matches_ref():
+    cfg, params, wide, deep, emb, y = _wd_setup()
+    out_ref = forward_widedeep(cfg, params, wide, deep, emb)
+    cfg_k, *_ = _wd_setup(use_kernel=True)
+    out_k = forward_widedeep(cfg_k, params, wide, deep, emb)
+    np.testing.assert_allclose(np.asarray(out_ref), np.asarray(out_k),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_widedeep_trains():
+    cfg, params, wide, deep, emb, _ = _wd_setup()
+    # learnable labels: depend on wide code 0
+    y = (np.asarray(wide[0]) % 2).astype(np.float32)
+    step = make_widedeep_train_step(cfg, lr=0.5)
+    for i in range(120):
+        params, loss = step(params, wide, deep, jnp.asarray(y), emb)
+    assert float(loss) < 0.2
+
+
+# -- feature specs --------------------------------------------------------------
+def test_feature_spec_hashable_and_named():
+    s1 = spec("age", "bucketize", boundaries=(10.0, 20.0))
+    s2 = spec("age", "bucketize", boundaries=(10.0, 20.0))
+    assert s1 == s2 and hash(s1) == hash(s2)
+    assert s1.adv_name == "age.bucketize"
+    assert spec("age", "zscore", name="z").adv_name == "z"
+
+
+def test_feature_set_builds_all_columns():
+    from repro.columnar import Table
+    rng = np.random.default_rng(0)
+    t = Table.from_data({"a": rng.integers(0, 9, 100),
+                         "b": rng.integers(0, 5, 100)})
+    fs = FeatureSet().add("a", "zscore").add("b", "onehot")
+    built = fs.build(t)
+    assert set(built) == {"a", "b"}
+    assert "a.zscore" in built["a"].advs
+
+
+# -- dryrun internals ---------------------------------------------------------------
+def test_parse_collectives():
+    hlo = """
+      %all-gather = f32[32,128]{0,1} all-gather(%copy), channel_id=1
+      %ar.1 = bf16[64]{0} all-reduce(%x), replica_groups={}
+      %rs = (f32[16,8]{1,0}, f32[16,8]{1,0}) reduce-scatter(%a, %b)
+      %nothing = f32[4]{0} add(%p, %q)
+      %a2a.5 = s8[1024]{0} all-to-all(%y)
+      %cp = f32[2,2]{1,0} collective-permute-start(%z)
+    """
+    got = dr.parse_collectives(hlo)
+    assert got["counts"] == {"all-gather": 1, "all-reduce": 1,
+                             "reduce-scatter": 1, "all-to-all": 1,
+                             "collective-permute": 1}
+    assert got["bytes"]["all-gather"] == 32 * 128 * 4
+    assert got["bytes"]["all-reduce"] == 64 * 2
+    assert got["bytes"]["reduce-scatter"] == 2 * 16 * 8 * 4
+    assert got["bytes"]["all-to-all"] == 1024
+    assert got["total_bytes"] == sum(got["bytes"].values())
+
+
+def test_roofline_terms_dominance():
+    t = dr.roofline_terms(flops=197e12, hbm_bytes=819e9 * 2,
+                          coll_bytes=50e9 * 0.5, n_chips=1)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["collective_s"] == pytest.approx(0.5)
+    assert t["dominant"] == "memory_s"
+
+
+def test_variant_registry():
+    assert "baseline" in dr.VARIANTS and "naive" in dr.VARIANTS
+    cfg = dr.get_config("glm4-9b")
+    sp, fn = dr.VARIANTS["remat_dots"]
+    assert fn(cfg).remat == "dots"
+
+
+def test_shape_applicability():
+    from repro.configs import get_config, SHAPES, applicable
+    ok, _ = applicable(get_config("xlstm-1.3b"), SHAPES["long_500k"])
+    assert ok
+    ok, why = applicable(get_config("qwen2-7b"), SHAPES["long_500k"])
+    assert not ok and "full-attention" in why
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        ok, _ = applicable(get_config("seamless-m4t-large-v2"), SHAPES[s])
+        assert ok
