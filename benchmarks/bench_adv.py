@@ -11,12 +11,11 @@ import numpy as np
 from repro.columnar import Dictionary
 from repro.columnar.bitpack import packed_nbytes
 from repro.core import AugmentedDictionary
-from benchmarks.common import time_call, emit
-
-N = 1 << 19
+from benchmarks.common import time_call, emit, scaled
 
 
 def run() -> None:
+    N = scaled(1 << 19, 1 << 12)
     rng = np.random.default_rng(2)
 
     # Table 4: state column with region + division bucketizations

@@ -7,9 +7,7 @@ import numpy as np
 
 from repro.columnar import Column, bits_needed
 from repro.columnar.bitpack import pack_bits, packed_nbytes
-from benchmarks.common import time_call, emit
-
-N = 1 << 19          # one IMCU (paper: 512K rows)
+from benchmarks.common import time_call, emit, scaled
 
 TABLE2 = [
     ("binary_gender", 2), ("season", 4), ("marital_status", 5),
@@ -22,6 +20,7 @@ STATES = np.array([f"State_{i:02d}" for i in range(50)])
 
 
 def run() -> None:
+    N = scaled(1 << 19, 1 << 12)       # one IMCU (paper: 512K rows)
     rng = np.random.default_rng(0)
     # Table 2: bits to encode
     for name, card in TABLE2:

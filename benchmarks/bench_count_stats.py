@@ -10,12 +10,11 @@ import numpy as np
 
 from repro.columnar import Column
 from repro.columnar import stats
-from benchmarks.common import time_call, emit
-
-N = 1 << 19
+from benchmarks.common import time_call, emit, scaled
 
 
 def run() -> None:
+    N = scaled(1 << 19, 1 << 12)
     rng = np.random.default_rng(1)
     for card, tag in [(50, "states"), (999, "area_code"), (99_999, "zip")]:
         data = rng.integers(0, card, N)

@@ -1,22 +1,88 @@
 """Paper Table 6: the featurization catalog, one benchmark per row —
 dictionary-domain cost (K) for each transform + the device gather path
-through the Pallas kernels (interpret mode on CPU)."""
+through the Pallas kernels (interpret mode on CPU) + the serving path:
+seed-style synchronous FeaturePipeline.batch() loop vs the double-buffered
+FeatureService (the ≥1.5x throughput gate)."""
 from __future__ import annotations
 
+import gc
+import time
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.columnar import Dictionary
-from repro.core import AugmentedDictionary
+from repro.columnar import Dictionary, Table
+from repro.core import AugmentedDictionary, FeaturePipeline, FeatureSet
 from repro.kernels.adv_gather import adv_gather
 from repro.kernels.hist import hist
-from benchmarks.common import time_call, emit
+from repro.serve import FeatureService
+from benchmarks.common import time_call, emit, scaled
 
-N = 1 << 16          # device-path rows (interpret mode is slow; shape-true)
 K = 999
 
 
+def _serve_comparison() -> None:
+    """Seed loop (per-column dict transfer, sync retire per batch) vs
+    FeatureService (stacked single transfer, prefetch-2 double buffer)."""
+    rng = np.random.default_rng(11)
+    n = scaled(200_000, 8_000)
+    batch = scaled(512, 128)
+    n_batches = scaled(200, 10)
+    table = Table.from_data({
+        "age": rng.integers(18, 90, n),
+        "state": rng.integers(0, 50, n),
+        "income": rng.integers(20, 250, n) * 1000,
+        "device": rng.integers(0, 4, n),
+    })
+    fs = (FeatureSet().add("age", "zscore")
+          .add("age", "bucketize", boundaries=(30.0, 45.0, 65.0))
+          .add("state", "onehot")
+          .add("income", "minmax").add("income", "log")
+          .add("device", "onehot"))
+    pipe = FeaturePipeline(table, fs)
+    plan = pipe.plan
+    idx_list = [rng.integers(0, n, batch) for _ in range(n_batches)]
+    rows = batch * n_batches
+
+    # seed FeaturePipeline.batch() semantics: one transfer per column (dict
+    # input), synchronous host retire of every batch
+    cols = plan.columns
+    codes_host = {c: plan.codes_matrix[i] for i, c in enumerate(cols)}
+    tables = {c: plan.plans[i].fused_table for i, c in enumerate(cols)}
+
+    @jax.jit
+    def gather_dict(code_batch):
+        outs = [jnp.take(tables[c], code_batch[c], axis=0) for c in cols]
+        return jnp.concatenate(outs, axis=-1)
+
+    def seed_batch(ix):
+        return gather_dict({c: jnp.asarray(codes_host[c][ix]) for c in cols})
+
+    np.asarray(seed_batch(idx_list[0]))                    # compile
+    gc.collect()           # GC pauses from earlier modules distort the async
+    t0 = time.perf_counter()
+    for ix in idx_list:
+        np.asarray(seed_batch(ix))
+    seed_s = time.perf_counter() - t0
+
+    svc = FeatureService(plan, prefetch=2, buckets=(batch,))
+    svc.result(svc.submit(idx_list[0]))                    # compile
+    gc.collect()
+    t0 = time.perf_counter()
+    for ix in idx_list:
+        svc.submit(ix)
+    svc.drain()
+    svc_s = time.perf_counter() - t0
+
+    emit("serve/seed_batch_loop", seed_s / n_batches * 1e6,
+         f"rows_per_s={rows/seed_s:.0f}")
+    emit("serve/feature_service_prefetch2", svc_s / n_batches * 1e6,
+         f"rows_per_s={rows/svc_s:.0f};speedup={seed_s/svc_s:.2f}x")
+
+
 def run() -> None:
+    N = scaled(1 << 16, 1 << 12)   # device-path rows (interpret mode is slow)
     rng = np.random.default_rng(3)
     ages = rng.integers(0, K, N)
     d, codes = Dictionary.from_data(ages)
@@ -52,6 +118,8 @@ def run() -> None:
     us = time_call(lambda: hist(jcodes, d.cardinality).block_until_ready(),
                    repeats=3)
     emit("table6/count_metadata_build_pallas", us, f"K={d.cardinality}")
+
+    _serve_comparison()
 
 
 if __name__ == "__main__":

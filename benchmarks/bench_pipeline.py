@@ -19,14 +19,10 @@ from repro.columnar import Table
 from repro.core import FeatureSet, FeaturePipeline
 from repro.models.widedeep import (WideDeepConfig, init_widedeep,
                                    make_widedeep_train_step)
-from benchmarks.common import emit
-
-N = 40_000
-BATCH = 1024
-STEPS = 8
+from benchmarks.common import emit, scaled
 
 
-def _dataset(rng):
+def _dataset(rng, N):
     age = rng.integers(18, 90, N)
     state = rng.integers(0, 50, N)
     income = rng.integers(20, 250, N) * 1000
@@ -41,8 +37,11 @@ def _dataset(rng):
 
 
 def run() -> None:
+    N = scaled(40_000, 4_000)
+    BATCH = scaled(1024, 128)
+    STEPS = scaled(8, 3)
     rng = np.random.default_rng(4)
-    raw, y = _dataset(rng)
+    raw, y = _dataset(rng, N)
     table = Table.from_data(raw)
     fs = (FeatureSet()
           .add("age", "zscore")

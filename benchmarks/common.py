@@ -1,8 +1,27 @@
-"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived)."""
+"""Benchmark utilities: timing + CSV emission (name,us_per_call,derived).
+
+Smoke mode (``run.py --smoke``): modules size their workloads through
+``scaled(full, smoke)`` so CI can run the whole suite in seconds. Every
+``emit`` is also collected into ``RECORDS`` so ``run.py`` can dump a
+``BENCH_*.json`` artifact for the perf trajectory.
+"""
 from __future__ import annotations
 
 import time
 from typing import Callable
+
+SMOKE = False
+RECORDS: list[dict] = []
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
+
+
+def scaled(full: int, smoke: int) -> int:
+    """Workload size: tiny shapes in smoke mode, paper shapes otherwise."""
+    return smoke if SMOKE else full
 
 
 def time_call(fn: Callable, *args, repeats: int = 5, warmup: int = 2,
@@ -21,5 +40,7 @@ def time_call(fn: Callable, *args, repeats: int = 5, warmup: int = 2,
 
 def emit(name: str, us: float, derived: str = "") -> str:
     line = f"{name},{us:.1f},{derived}"
+    RECORDS.append({"name": name, "us_per_call": round(us, 1),
+                    "derived": derived})
     print(line, flush=True)
     return line

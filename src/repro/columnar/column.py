@@ -65,15 +65,32 @@ class Column:
         return cls(d, codes, use_rle=use_rle, imcu_rows=imcu_rows)
 
     # -- access ---------------------------------------------------------------
+    @property
+    def n_imcus(self) -> int:
+        return len(self._imcus)
+
+    def imcu_bounds(self) -> list[tuple[int, int]]:
+        """Row range [start, stop) of each IMCU."""
+        bounds, start = [], 0
+        for imcu in self._imcus:
+            bounds.append((start, start + imcu.n))
+            start += imcu.n
+        return bounds
+
+    def imcu_codes(self, i: int) -> np.ndarray:
+        """Decompress a single IMCU's code stream (partition-local access).
+
+        Lets per-IMCU feature plans touch only their own partition instead of
+        materializing the full N-row stream.
+        """
+        imcu = self._imcus[i]
+        if imcu.rle is not None:
+            return rle_decode(*imcu.rle)
+        return unpack_bits(imcu.packed, self.dictionary.bits, imcu.n)
+
     def codes(self) -> np.ndarray:
         """Materialize the int32 code stream (decompress all IMCUs)."""
-        parts = []
-        bits = self.dictionary.bits
-        for imcu in self._imcus:
-            if imcu.rle is not None:
-                parts.append(rle_decode(*imcu.rle))
-            else:
-                parts.append(unpack_bits(imcu.packed, bits, imcu.n))
+        parts = [self.imcu_codes(i) for i in range(len(self._imcus))]
         return np.concatenate(parts) if parts else np.zeros(0, np.int32)
 
     def decode(self) -> np.ndarray:

@@ -35,6 +35,10 @@ class Dictionary:
         if self.values.shape[0] != self.counts.shape[0]:
             raise ValueError("values/counts length mismatch")
         self._index: dict[Any, int] | None = None
+        # bumped on any insert/delete — count-derived statistics (mean, std,
+        # quantiles) are only valid for a fixed version, so ADV maintenance
+        # uses it to spot stale count-sensitive tables
+        self.version = 0
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -152,12 +156,14 @@ class Dictionary:
                 [self.counts, np.zeros(len(new_vals), dtype=np.int64)])
             self.sorted_codes = False
         np.add.at(self.counts, codes, 1)
+        self.version += 1
         return codes
 
     def remove_rows(self, codes: np.ndarray) -> None:
         np.subtract.at(self.counts, np.asarray(codes), 1)
         if (self.counts < 0).any():
             raise ValueError("count underflow: removing rows not present")
+        self.version += 1
 
     def _require_numeric(self, op: str) -> None:
         if not self.is_numeric():

@@ -8,7 +8,8 @@
 """
 from repro.core.adv import AugmentedDictionary, ADV
 from repro.core.feature_spec import FeatureSpec, FeatureSet
-from repro.core.pipeline import FeaturePipeline
+from repro.core.pipeline import (FeaturePipeline, FeaturePlan,
+                                 FeatureExecutor)
 
 __all__ = ["AugmentedDictionary", "ADV", "FeatureSpec", "FeatureSet",
-           "FeaturePipeline"]
+           "FeaturePipeline", "FeaturePlan", "FeatureExecutor"]

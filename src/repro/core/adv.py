@@ -64,6 +64,12 @@ class ADV:
                 "peculiarity": peculiarity}
 
 
+# featurizations whose tables depend on the count distribution, not just the
+# value set: duplicate-value inserts (cardinality unchanged) still shift
+# their normalization constants, so maintenance must rebuild them whenever
+# the dictionary version moved — not only when it grew
+_COUNT_SENSITIVE = {"mean_norm", "zscore", "quantile"}
+
 _BUILDERS: dict[str, Callable[..., np.ndarray]] = {
     "float": F.to_float,
     "minmax": F.minmax_scale,
@@ -86,6 +92,10 @@ class AugmentedDictionary:
     def __init__(self, dictionary: Dictionary):
         self.dictionary = dictionary
         self.advs: dict[str, ADV] = {}
+        # bumped on any ADV mutation; feature plans compare it to decide
+        # whether their device-resident fused tables need a refresh
+        self.version = 0
+        self._built_at: dict[str, int] = {}    # adv name -> dictionary.version
 
     # -- creation ---------------------------------------------------------------
     def add(self, name: str, kind: str, **params: Any) -> ADV:
@@ -98,6 +108,8 @@ class AugmentedDictionary:
         table = builder(self.dictionary, **params)
         adv = ADV(name=name, table=table, kind=kind, params=params)
         self.advs[name] = adv
+        self._built_at[name] = self.dictionary.version
+        self.version += 1
         return adv
 
     def add_learned(self, name: str, table: np.ndarray,
@@ -111,6 +123,7 @@ class AugmentedDictionary:
                 f"learned ADV rows {adv.cardinality} != dictionary "
                 f"cardinality {self.dictionary.cardinality}")
         self.advs[name] = adv
+        self.version += 1
         return adv
 
     def __getitem__(self, name: str) -> ADV:
@@ -197,15 +210,23 @@ class AugmentedDictionary:
 
     # -- maintenance (§6.3: inserts/updates/deletes) --------------------------------
     def extend_for_new_codes(self) -> None:
-        """After Dictionary.add_rows grew the dictionary, recompute derived ADVs
-        for the new tail (learned ADVs get zero rows until next feedback)."""
+        """After Dictionary.add_rows/remove_rows, bring derived ADVs up to
+        date: grown dictionaries get their tables recomputed for the new tail
+        (learned ADVs get zero rows until next feedback), and count-sensitive
+        featurizations (zscore etc.) rebuild even when cardinality is
+        unchanged — duplicate-value inserts shift their statistics too."""
         k = self.dictionary.cardinality
+        dv = self.dictionary.version
+        changed = False
         for adv in self.advs.values():
-            have = adv.cardinality
-            if have == k:
+            stale_counts = (not adv.learned
+                            and adv.kind in _COUNT_SENSITIVE
+                            and self._built_at.get(adv.name) != dv)
+            if adv.cardinality == k and not stale_counts:
                 continue
+            changed = True
             if adv.learned:
-                pad = np.zeros((k - have, adv.dim), np.float32)
+                pad = np.zeros((k - adv.cardinality, adv.dim), np.float32)
                 adv.table = np.concatenate([adv.table, pad], axis=0)
             else:
                 fresh = _BUILDERS[adv.kind](self.dictionary, **adv.params)
@@ -213,6 +234,9 @@ class AugmentedDictionary:
                 if fresh.ndim == 1:
                     fresh = fresh[:, None]
                 adv.table = fresh
+                self._built_at[adv.name] = dv
+        if changed:
+            self.version += 1
 
     # -- reporting ---------------------------------------------------------------
     def summary(self) -> str:

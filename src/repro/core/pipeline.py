@@ -1,17 +1,37 @@
-"""FeaturePipeline: columnar table -> device feature batches (paper §6, Fig 2).
+"""Feature pipeline split into a compile-time plan and a run-time executor.
 
-The pipeline moves ONLY dictionary codes (b-bit packed) and K-row ADV tables to
-the device; row-space float features are produced on-device by the fused ADV
-gather and consumed immediately — they are never materialized in host memory
-or HBM-resident files, which is the paper's data-movement/duplication win over
-the CSV-export workflow of Fig 1.
+The paper's device pipeline is 'codes in, features out' (§6, Fig 2): only
+dictionary codes (b-bit packed) and K-row ADV tables move to the device;
+row-space float features are produced on-device by the fused ADV gather and
+consumed immediately — never materialized in host memory or HBM-resident
+files, the data-movement/duplication win over the CSV-export workflow of
+Fig 1.
+
+Layering (this module):
+
+- :class:`FeaturePlan` — the compile-time half. Builds the per-column fused
+  K-row ADV tables, puts them on device ONCE (amortized forever), stacks the
+  host code streams into a single (C, N) int32 matrix, and maintains all of
+  it under streaming inserts via :meth:`FeaturePlan.refresh` (only columns
+  whose AugmentedDictionary actually changed are re-put). Plans can be
+  partitioned per IMCU (:meth:`FeaturePlan.imcu_shards`) so a shard touches
+  only its own partition's codes.
+- :class:`FeatureExecutor` — the run-time half. One jit'd gather over the
+  stacked code batch per bucket shape; optional fused multi-table Pallas
+  kernel (one kernel pass instead of per-column take + concatenate); a
+  double-buffered :meth:`FeatureExecutor.batches` iterator that overlaps
+  host code-slicing for batch i+1 with the device gather for batch i via
+  ``jax.device_put`` prefetch (depth >= 2).
+- :class:`FeaturePipeline` — the original facade, kept API-compatible.
 
 Data-movement accounting is built in (``bytes_moved_*``) so benchmarks and
 EXPERIMENTS.md can quantify the claim.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
+from typing import Iterator, Mapping
 
 import numpy as np
 import jax
@@ -21,79 +41,148 @@ from repro.columnar.bitpack import packed_nbytes
 from repro.columnar.table import Table
 from repro.core.adv import AugmentedDictionary
 from repro.core.feature_spec import FeatureSet
+from repro.kernels.adv_gather import ops as adv_ops
 
 
 @dataclass
-class _ColumnPlan:
+class ColumnPlan:
+    """One column's compiled gather plan."""
     column: str
     adv_names: list[str]
-    fused_table: jnp.ndarray      # (K, F_col) on device
-    codes: np.ndarray             # host int32 row codes
+    fused_host: np.ndarray        # (K, F_col) host copy (refresh diffing)
+    fused_table: jnp.ndarray      # (K, F_col) resident on device
     bits: int
+    aug_version: int              # AugmentedDictionary.version at build time
 
     @property
     def out_dim(self) -> int:
         return int(self.fused_table.shape[1])
 
+    @property
+    def cardinality(self) -> int:
+        return int(self.fused_table.shape[0])
 
-class FeaturePipeline:
-    """Compiles a FeatureSet against a Table into device-side gather plans."""
+
+class FeaturePlan:
+    """Compile-time artifact: device-resident ADV tables + host code matrix."""
 
     def __init__(self, table: Table, features: FeatureSet,
-                 use_kernel: bool = False):
+                 augmented: dict[str, AugmentedDictionary] | None = None):
         self.table = table
         self.features = features
-        self.augmented: dict[str, AugmentedDictionary] = features.build(table)
-        self.use_kernel = use_kernel
-        self._plans: list[_ColumnPlan] = []
+        self.augmented = augmented if augmented is not None \
+            else features.build(table)
+        self.stats = {"tables_put": 0, "tables_refreshed": 0,
+                      "fused_rebuilds": 0}
+        self.plans: list[ColumnPlan] = []
         for column, aug in self.augmented.items():
             names = [s.adv_name for s in features.specs if s.column == column]
-            fused = jnp.asarray(aug.fused_table(names))
-            self._plans.append(_ColumnPlan(
-                column=column, adv_names=names, fused_table=fused,
-                codes=table[column].codes(), bits=aug.dictionary.bits))
-        self.out_dim = sum(p.out_dim for p in self._plans)
-        self._jit_gather = jax.jit(self._gather_all)
+            self.plans.append(self._compile_column(column, aug, names))
+        codes = [table[p.column].codes() for p in self.plans]
+        # (C, N): one row-aligned int32 code stream per planned column —
+        # a batch slice is ONE fancy-index + ONE host->device transfer
+        self.codes_matrix = (np.stack(codes) if codes
+                             else np.zeros((0, table.n_rows), np.int32))
+        # one-slot box so IMCU shard plans share (and co-invalidate) the
+        # fused super-table with their parent, like `plans` and `stats`
+        self._fused_box: dict[str, adv_ops.FusedTables | None] = {"t": None}
 
-    # -- device path ---------------------------------------------------------------
-    def _gather_one(self, fused_table: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
-        if self.use_kernel:
-            from repro.kernels.adv_gather import ops as adv_ops
-            return adv_ops.adv_gather(fused_table, codes)
-        return jnp.take(fused_table, codes, axis=0)
+    def _compile_column(self, column: str, aug: AugmentedDictionary,
+                        names: list[str],
+                        count_put: bool = True) -> ColumnPlan:
+        fused_host = aug.fused_table(names)
+        if count_put:
+            self.stats["tables_put"] += 1
+        return ColumnPlan(column=column, adv_names=names,
+                          fused_host=fused_host,
+                          fused_table=jnp.asarray(fused_host),
+                          bits=aug.dictionary.bits, aug_version=aug.version)
 
-    def _gather_all(self, code_batch: dict[str, jnp.ndarray]) -> jnp.ndarray:
-        outs = [self._gather_one(p.fused_table, code_batch[p.column])
-                for p in self._plans]
-        return jnp.concatenate(outs, axis=-1)
+    # -- shape info -------------------------------------------------------------
+    @property
+    def columns(self) -> list[str]:
+        return [p.column for p in self.plans]
 
-    def batch(self, row_idx: np.ndarray) -> jnp.ndarray:
-        """Featurize the given rows: ship int32 codes, gather ADVs on device."""
-        code_batch = {p.column: jnp.asarray(p.codes[row_idx]) for p in self._plans}
-        return self._jit_gather(code_batch)
+    @property
+    def n_rows(self) -> int:
+        return int(self.codes_matrix.shape[1])
 
-    def batches(self, batch_size: int, seed: int = 0, epochs: int = 1):
-        """Shuffled minibatch iterator over the table."""
-        rng = np.random.default_rng(seed)
-        n = self.table.n_rows
-        for _ in range(epochs):
-            perm = rng.permutation(n)
-            for start in range(0, n - batch_size + 1, batch_size):
-                idx = perm[start:start + batch_size]
-                yield idx, self.batch(idx)
+    @property
+    def out_dim(self) -> int:
+        return sum(p.out_dim for p in self.plans)
 
-    # -- host baseline (Fig 1 traditional path) -------------------------------------
-    def batch_recompute(self, row_idx: np.ndarray) -> np.ndarray:
-        """Decode values + row-space transform + ship f32 — the CSV workflow."""
-        outs = []
-        for p in self._plans:
+    # -- fused multi-table layout (one-kernel-pass path) -------------------------
+    def fused_tables(self) -> adv_ops.FusedTables:
+        """Block-diagonal super-table for the fused gather-concat kernel."""
+        if self._fused_box["t"] is None:
+            self._fused_box["t"] = adv_ops.fuse_tables(
+                [p.fused_host for p in self.plans])
+            self.stats["fused_rebuilds"] += 1
+        return self._fused_box["t"]
+
+    # -- maintenance (§6.3: streaming inserts) -----------------------------------
+    def refresh(self, new_codes: Mapping[str, np.ndarray] | None = None) -> int:
+        """Incremental plan refresh after ``Dictionary.add_rows``.
+
+        Re-derives ADVs for grown dictionaries (``extend_for_new_codes``) and
+        re-puts device tables ONLY for columns whose AugmentedDictionary
+        changed since compile — untouched columns keep their resident tables.
+        ``new_codes`` optionally appends freshly inserted rows (codes from
+        ``add_rows``) to the plan's code matrix; it must cover every planned
+        column with equal lengths. Returns the number of columns refreshed.
+        """
+        fresh = None
+        if new_codes is not None:          # validate BEFORE mutating anything
+            missing = [c for c in self.columns if c not in new_codes]
+            if missing:
+                raise KeyError(f"new_codes missing columns {missing}")
+            fresh = np.stack([np.asarray(new_codes[c], np.int32).reshape(-1)
+                              for c in self.columns])
+        refreshed = 0
+        for i, p in enumerate(self.plans):
             aug = self.augmented[p.column]
-            codes = p.codes[row_idx]
-            for name in p.adv_names:
-                outs.append(aug.featurize_recompute(name, codes))
-        return np.concatenate(outs, axis=1)
+            aug.extend_for_new_codes()
+            if aug.version == p.aug_version:
+                continue
+            self.plans[i] = self._compile_column(p.column, aug, p.adv_names,
+                                                 count_put=False)
+            self.stats["tables_refreshed"] += 1
+            refreshed += 1
+        if refreshed:
+            self._fused_box["t"] = None    # all shard views rebuild lazily
+        if fresh is not None:
+            self.codes_matrix = np.concatenate(
+                [self.codes_matrix, fresh], axis=1)
+        return refreshed
 
-    # -- data-movement accounting (paper's central claim) -----------------------------
+    # -- partitioning (per-IMCU shard plans) --------------------------------------
+    def imcu_shards(self) -> list["FeaturePlan"]:
+        """One plan per IMCU partition, sharing this plan's device tables.
+
+        Shard k's code matrix is a zero-copy view into this plan's already
+        materialized matrix, windowed to the IMCU's row range.
+        Device-resident ADV tables (and the fused super-table) are shared
+        and co-invalidated, not re-put.
+        """
+        shards = []
+        for start, stop in self.imcu_bounds():
+            shard = FeaturePlan.__new__(FeaturePlan)
+            shard.table = self.table
+            shard.features = self.features
+            shard.augmented = self.augmented
+            shard.stats = self.stats               # shared accounting
+            shard.plans = self.plans               # shared device tables
+            shard.codes_matrix = self.codes_matrix[:, start:stop]
+            shard._fused_box = self._fused_box      # shared, co-invalidated
+            shards.append(shard)
+        return shards
+
+    def imcu_bounds(self) -> list[tuple[int, int]]:
+        if not self.plans:
+            raise ValueError("plan has no feature columns to partition")
+        return self.table[self.plans[0].column].imcu_bounds()
+
+    # -- data-movement accounting (paper's central claim) --------------------------
     def bytes_moved_adv(self, batch_rows: int) -> int:
         """Host->device bytes on the ADV path: packed codes + amortized-0 tables.
 
@@ -101,11 +190,149 @@ class FeaturePipeline:
         resident (moved once, amortized across all batches), matching the
         paper's 'dictionary created once ... easily amortized'.
         """
-        return sum(packed_nbytes(batch_rows, p.bits) for p in self._plans)
+        return sum(packed_nbytes(batch_rows, p.bits) for p in self.plans)
 
     def bytes_moved_recompute(self, batch_rows: int) -> int:
         """Traditional path ships row-space f32 features."""
         return 4 * batch_rows * self.out_dim
 
     def bytes_resident_tables(self) -> int:
-        return sum(int(p.fused_table.size) * 4 for p in self._plans)
+        return sum(int(p.fused_table.size) * 4 for p in self.plans)
+
+
+class FeatureExecutor:
+    """Run-time half: jit'd stacked gather + double-buffered batch iterator.
+
+    ADV tables enter the jit'd gathers as *arguments*, not trace-time
+    constants, so a :meth:`FeaturePlan.refresh` flows into already-compiled
+    batch shapes automatically (only a table *shape* change retraces).
+    """
+
+    def __init__(self, plan: FeaturePlan, use_kernel: bool = False,
+                 prefetch: int = 2):
+        if prefetch < 1:
+            raise ValueError("prefetch depth must be >= 1")
+        self.plan = plan
+        self.use_kernel = use_kernel
+        self.prefetch = prefetch
+        self._jit_take = jax.jit(self._take_impl)
+        self._jit_fused = jax.jit(self._fused_impl,
+                                  static_argnames=("out_dim", "bn", "bk"))
+        if self.kernel_active:
+            plan.fused_tables()        # build eagerly, not inside the jit trace
+
+    @property
+    def kernel_active(self) -> bool:
+        """Fused one-hot kernel path, guarded like the single-table op: huge-K
+        plans fall back to the XLA gather (one-hot tiling is wasteful there)."""
+        return self.use_kernel and (
+            sum(p.cardinality for p in self.plan.plans)
+            <= adv_ops.MAX_ONEHOT_K)
+
+    def _take_impl(self, codes: jnp.ndarray, tables) -> jnp.ndarray:
+        # mode="clip" matches the fused kernel's OOB clamp (jax's default
+        # would NaN-fill, and the two paths must agree)
+        outs = [jnp.take(t, codes[i], axis=0, mode="clip")
+                for i, t in enumerate(tables)]
+        return jnp.concatenate(outs, axis=-1)
+
+    def _fused_impl(self, codes: jnp.ndarray, table: jnp.ndarray,
+                    row_offsets: jnp.ndarray, card_limits: jnp.ndarray,
+                    out_dim: int, bn: int, bk: int) -> jnp.ndarray:
+        # fused multi-table Pallas kernel: ONE pass over the code matrix
+        return adv_ops.gather_fused_parts(table, row_offsets, codes, out_dim,
+                                          card_limits=card_limits,
+                                          bn=bn, bk=bk)
+
+    def gather_device(self, dev_codes: jnp.ndarray) -> jnp.ndarray:
+        """(C, B) stacked device codes -> (B, out_dim) concatenated features."""
+        if self.kernel_active:
+            fused = self.plan.fused_tables()
+            return self._jit_fused(dev_codes, fused.table, fused.row_offsets,
+                                   fused.card_limits, out_dim=fused.out_dim,
+                                   bn=fused.bn, bk=fused.bk)
+        return self._jit_take(dev_codes,
+                              tuple(p.fused_table for p in self.plan.plans))
+
+    # -- single batch -------------------------------------------------------------
+    def slice_codes(self, row_idx: np.ndarray) -> np.ndarray:
+        """Host-side work for one batch: one fancy-index on the code matrix."""
+        return self.plan.codes_matrix[:, row_idx]
+
+    def batch(self, row_idx: np.ndarray) -> jnp.ndarray:
+        """Featurize the given rows: ship int32 codes, gather ADVs on device."""
+        return self.gather_device(jax.device_put(self.slice_codes(row_idx)))
+
+    # -- double-buffered iteration --------------------------------------------------
+    def batches(self, batch_size: int, seed: int = 0,
+                epochs: int = 1) -> Iterator[tuple[np.ndarray, jnp.ndarray]]:
+        """Shuffled minibatch iterator with ``prefetch``-deep async pipeline.
+
+        Up to ``prefetch`` device gathers are kept in flight: the host slices
+        and ``device_put``s the codes for batch i+1 (i+2, ...) while the
+        device still works on batch i, so consumers that block on each result
+        hide the host-side slicing and transfer latency.
+        """
+        rng = np.random.default_rng(seed)
+        n = self.plan.n_rows
+
+        def indices():
+            for _ in range(epochs):
+                perm = rng.permutation(n)
+                for start in range(0, n - batch_size + 1, batch_size):
+                    yield perm[start:start + batch_size]
+
+        inflight: deque[tuple[np.ndarray, jnp.ndarray]] = deque()
+        for idx in indices():
+            dev_codes = jax.device_put(self.slice_codes(idx))
+            inflight.append((idx, self.gather_device(dev_codes)))
+            if len(inflight) >= self.prefetch:
+                yield inflight.popleft()
+        while inflight:
+            yield inflight.popleft()
+
+
+class FeaturePipeline:
+    """Facade over (FeaturePlan, FeatureExecutor) — the original seed API."""
+
+    def __init__(self, table: Table, features: FeatureSet,
+                 use_kernel: bool = False, prefetch: int = 2):
+        self.table = table
+        self.features = features
+        self.plan = FeaturePlan(table, features)
+        self.executor = FeatureExecutor(self.plan, use_kernel=use_kernel,
+                                        prefetch=prefetch)
+        self.augmented = self.plan.augmented
+        self.use_kernel = use_kernel
+
+    @property
+    def out_dim(self) -> int:
+        return self.plan.out_dim
+
+    # -- device path ---------------------------------------------------------------
+    def batch(self, row_idx: np.ndarray) -> jnp.ndarray:
+        return self.executor.batch(row_idx)
+
+    def batches(self, batch_size: int, seed: int = 0, epochs: int = 1):
+        yield from self.executor.batches(batch_size, seed=seed, epochs=epochs)
+
+    # -- host baseline (Fig 1 traditional path) -------------------------------------
+    def batch_recompute(self, row_idx: np.ndarray) -> np.ndarray:
+        """Decode values + row-space transform + ship f32 — the CSV workflow."""
+        outs = []
+        for i, p in enumerate(self.plan.plans):
+            aug = self.augmented[p.column]
+            codes = self.plan.codes_matrix[i, row_idx]
+            for name in p.adv_names:
+                outs.append(aug.featurize_recompute(name, codes))
+        return np.concatenate(outs, axis=1)
+
+    # -- data-movement accounting ----------------------------------------------------
+    def bytes_moved_adv(self, batch_rows: int) -> int:
+        return self.plan.bytes_moved_adv(batch_rows)
+
+    def bytes_moved_recompute(self, batch_rows: int) -> int:
+        return self.plan.bytes_moved_recompute(batch_rows)
+
+    def bytes_resident_tables(self) -> int:
+        return self.plan.bytes_resident_tables()

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.distributed.compat import shard_map
 
 
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:

@@ -1,4 +1,6 @@
 from repro.kernels.adv_gather import ops, ref
-from repro.kernels.adv_gather.ops import adv_gather
+from repro.kernels.adv_gather.ops import (adv_gather, adv_gather_fused,
+                                          fuse_tables, FusedTables)
 
-__all__ = ["ops", "ref", "adv_gather"]
+__all__ = ["ops", "ref", "adv_gather", "adv_gather_fused", "fuse_tables",
+           "FusedTables"]

@@ -38,6 +38,61 @@ def _adv_gather_kernel(codes_ref, table_ref, out_ref, *, bk: int):
                             preferred_element_type=out_ref.dtype)
 
 
+def _adv_gather_multi_kernel(codes_ref, table_ref, out_ref, *, bk: int):
+    """Fused multi-table gather-concat (one pass, paper §6 'single step').
+
+    ``table_ref`` tiles a block-diagonal super-table: column c's (K_c, F_c)
+    ADV table occupies rows [row_off_c, row_off_c+K_c) and cols
+    [col_off_c, col_off_c+F_c). ``codes_ref`` holds C pre-offset code rows
+    (code + row_off_c), so the C one-hot tiles sum into one *multi-hot*
+    (BN, BK) matrix — column-disjoint blocks make the single matmul produce
+    the concatenated feature row for all C source tables at once.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]                      # (C, BN) int32, pre-offset
+    tbl = table_ref[...]                        # (BK, F_total) f32
+    c_count, bn = codes.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bn, tbl.shape[0]), 1)
+    multihot = jnp.zeros((bn, tbl.shape[0]), tbl.dtype)
+    for c in range(c_count):                    # static unroll over columns
+        local = codes[c].reshape(bn, 1) - k * bk
+        multihot += (local == col).astype(tbl.dtype)
+    out_ref[...] += jnp.dot(multihot, tbl,
+                            preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "interpret"))
+def adv_gather_multi_pallas(codes: jnp.ndarray, table: jnp.ndarray,
+                            bn: int = 256, bk: int = 512,
+                            interpret: bool = True) -> jnp.ndarray:
+    """codes (C, N) int32 pre-offset into block-diagonal rows, table
+    (K_total, F_total) -> (N, F_total) concatenated features.
+
+    Preconditions (enforced by ops.py): N % bn == 0, K_total % bk == 0,
+    F_total % 128 == 0 on real TPU; every codes[c, i] lands inside block c.
+    """
+    c_count, n = codes.shape
+    k_rows, f = table.shape
+    grid = (n // bn, k_rows // bk)
+    return pl.pallas_call(
+        functools.partial(_adv_gather_multi_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c_count, bn), lambda i, k: (0, i)),
+            pl.BlockSpec((bk, f), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, f), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), table.dtype),
+        interpret=interpret,
+    )(codes, table)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bn", "bk", "interpret"))
 def adv_gather_pallas(codes: jnp.ndarray, table: jnp.ndarray,

@@ -1,18 +1,32 @@
-"""Public jit'd wrapper for the ADV gather kernel.
+"""Public jit'd wrappers for the ADV gather kernels.
 
 Handles padding to MXU-aligned block shapes and falls back to the XLA gather
 (`ref`) for huge-K tables where one-hot tiling is wasteful (K > 64k — e.g.
 full LM vocabularies, which are sharded and gathered natively instead,
 see repro.models.lm).
+
+Two entry points:
+
+- :func:`adv_gather` — single (K, F) table, code vector of any shape.
+- :func:`fuse_tables` + :func:`adv_gather_fused` — C tables fused into one
+  block-diagonal super-table resident on device; per-batch work is ONE kernel
+  pass over a (C, N) code matrix producing the concatenated (N, ΣF) features,
+  instead of C ``take`` calls + a ``concatenate``. The super-table costs
+  ΣK × ΣF floats (vs Σ K_c·F_c unfused), the price of the single-matmul
+  layout — ``FusedTables.nbytes`` reports it so planners can budget.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
+import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels.adv_gather.kernel import adv_gather_pallas
-from repro.kernels.adv_gather.ref import adv_gather_ref
+from repro.kernels.adv_gather.kernel import (adv_gather_pallas,
+                                             adv_gather_multi_pallas)
+from repro.kernels.adv_gather.ref import adv_gather_ref, adv_gather_multi_ref
 
-_MAX_ONEHOT_K = 1 << 16
+MAX_ONEHOT_K = 1 << 16
 
 
 def _pad_to(x: int, m: int) -> int:
@@ -26,9 +40,12 @@ def adv_gather(table: jnp.ndarray, codes: jnp.ndarray,
     shape = codes.shape
     flat = codes.reshape(-1).astype(jnp.int32)
     k, f = table.shape
-    if k > _MAX_ONEHOT_K:
+    if k > MAX_ONEHOT_K:
         out = adv_gather_ref(flat, table)
         return out.reshape(*shape, f)
+    # clamp OOB codes so both paths agree (the one-hot kernel would
+    # otherwise emit silent all-zero rows where the ref path clips)
+    flat = jnp.clip(flat, 0, k - 1)
     n = flat.shape[0]
     n_pad = _pad_to(max(n, 1), bn)
     k_pad = _pad_to(k, bk)
@@ -38,3 +55,96 @@ def adv_gather(table: jnp.ndarray, codes: jnp.ndarray,
     out = adv_gather_pallas(flat_p, table_p, bn=bn, bk=bk,
                             interpret=interpret)
     return out[:n, :f].reshape(*shape, f)
+
+
+# -- fused multi-table gather-concat ---------------------------------------------
+
+
+@dataclass(frozen=True)
+class FusedTables:
+    """Block-diagonal super-table + code offsets for the fused kernel.
+
+    Built once at plan-compile time and kept device-resident (the paper's
+    'created once, easily amortized'); per-batch traffic is codes only.
+    """
+    table: jnp.ndarray            # (K_pad, F_pad) block-diagonal, on device
+    row_offsets: jnp.ndarray      # (C, 1) int32 — code shift per source table
+    card_limits: jnp.ndarray      # (C, 1) int32 — K_c - 1, for OOB clamping
+    dims: tuple[int, ...]         # per-table feature width F_c
+    cards: tuple[int, ...]        # per-table cardinality K_c
+    bn: int
+    bk: int
+
+    @property
+    def n_tables(self) -> int:
+        return len(self.dims)
+
+    @property
+    def out_dim(self) -> int:
+        return int(sum(self.dims))
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.table.size) * self.table.dtype.itemsize
+
+
+def fuse_tables(tables, bn: int = 256, bk: int = 512,
+                dtype=jnp.float32) -> FusedTables:
+    """Pack C (K_c, F_c) host tables into one device-resident block diagonal."""
+    tables = [np.asarray(t, np.float32) for t in tables]
+    cards = tuple(int(t.shape[0]) for t in tables)
+    dims = tuple(int(t.shape[1]) for t in tables)
+    k_total, f_total = sum(cards), sum(dims)
+    k_pad = _pad_to(max(k_total, 1), bk)
+    f_pad = _pad_to(max(f_total, 1), 128)
+    host = np.zeros((k_pad, f_pad), np.float32)
+    row_offsets = np.zeros((len(tables), 1), np.int32)
+    r = c = 0
+    for i, t in enumerate(tables):
+        row_offsets[i, 0] = r
+        host[r:r + t.shape[0], c:c + t.shape[1]] = t
+        r += t.shape[0]
+        c += t.shape[1]
+    limits = np.asarray(cards, np.int32)[:, None] - 1
+    return FusedTables(table=jnp.asarray(host, dtype),
+                       row_offsets=jnp.asarray(row_offsets),
+                       card_limits=jnp.asarray(limits),
+                       dims=dims, cards=cards, bn=bn, bk=bk)
+
+
+def gather_fused_parts(table: jnp.ndarray, row_offsets: jnp.ndarray,
+                       codes: jnp.ndarray, out_dim: int,
+                       card_limits: jnp.ndarray | None = None,
+                       bn: int = 256, bk: int = 512,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Functional core of :func:`adv_gather_fused`.
+
+    Takes the super-table and offsets as plain arrays so callers can jit
+    over them as *arguments* (refreshed tables flow through; only shape
+    changes retrace) instead of baking them in as trace-time constants.
+    ``card_limits`` ((C, 1) int32, = K_c - 1) clamps out-of-range codes to
+    their own table's block, matching ``jnp.take``'s clamp semantics — an
+    unclamped OOB code would silently gather from the NEXT table's rows.
+    """
+    n = codes.shape[1]
+    codes = codes.astype(jnp.int32)
+    if card_limits is not None:
+        codes = jnp.clip(codes, 0, card_limits)
+    shifted = codes + row_offsets
+    n_pad = _pad_to(max(n, 1), bn)
+    # padded lanes re-point at block 0 row 0; their output rows are sliced off
+    shifted = jnp.pad(shifted, ((0, 0), (0, n_pad - n)))
+    out = adv_gather_multi_pallas(shifted, table, bn=bn, bk=bk,
+                                  interpret=interpret)
+    return out[:n, :out_dim]
+
+
+def adv_gather_fused(fused: FusedTables, codes: jnp.ndarray,
+                     interpret: bool = True) -> jnp.ndarray:
+    """codes (C, N) int32 (codes[c] indexes source table c) -> (N, ΣF)."""
+    c_count = codes.shape[0]
+    if c_count != fused.n_tables:
+        raise ValueError(f"expected {fused.n_tables} code rows, got {c_count}")
+    return gather_fused_parts(fused.table, fused.row_offsets, codes,
+                              fused.out_dim, card_limits=fused.card_limits,
+                              bn=fused.bn, bk=fused.bk, interpret=interpret)

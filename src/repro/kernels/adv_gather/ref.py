@@ -1,7 +1,21 @@
-"""Pure-jnp oracle for adv_gather."""
+"""Pure-jnp oracles for adv_gather."""
 import jax.numpy as jnp
 
 
 def adv_gather_ref(codes: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
-    """out[i, :] = table[codes[i], :]"""
-    return jnp.take(table, codes, axis=0)
+    """out[i, :] = table[codes[i], :] (OOB codes clamp to the table edge)."""
+    return jnp.take(table, codes, axis=0, mode="clip")
+
+
+def adv_gather_multi_ref(codes: jnp.ndarray, tables) -> jnp.ndarray:
+    """Per-table take + concatenate: out[i] = concat_c tables[c][codes[c, i]].
+
+    ``codes`` is (C, N) int32 with codes[c] indexing tables[c]. This is the
+    unfused XLA rendering of the multi-table gather-concat the fused Pallas
+    kernel performs in one pass. OOB codes clamp (matching the fused path)
+    rather than NaN-fill.
+    """
+    return jnp.concatenate(
+        [jnp.take(t, codes[c], axis=0, mode="clip")
+         for c, t in enumerate(tables)],
+        axis=-1)

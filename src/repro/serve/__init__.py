@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.feature_service import FeatureService, FeatureRequest
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "FeatureService", "FeatureRequest"]

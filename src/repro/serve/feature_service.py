@@ -1,0 +1,244 @@
+"""FeatureService: async, double-buffered ADV feature serving.
+
+The serving-side rendering of the paper's §6 pipeline: learned features are
+served directly out of the data system ('codes in, features out'), not
+exported and recomputed. A request names table rows; the service slices the
+plan's stacked code matrix on the host, pads the batch to a static bucket
+shape (the same trick :class:`repro.serve.engine.ServeEngine` uses for token
+batches, so jit compiles once per bucket), ships ONE int32 code matrix to the
+device, and runs the fused ADV gather — optionally the one-pass multi-table
+Pallas kernel.
+
+Dispatch is asynchronous and double-buffered: up to ``prefetch`` (>= 2)
+device gathers are kept in flight, so host code-slicing + ``device_put`` for
+request i+1 overlaps the device gather for request i. Results are retired to
+host only when the in-flight window is full or the caller asks for them.
+
+Partitioned serving: with ``sharded=True`` the service builds per-IMCU shard
+plans (:meth:`FeaturePlan.imcu_shards`) and routes each request's rows to
+their owning partitions, so only partition-local code streams are touched —
+device ADV tables are shared across shards.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import FeatureExecutor, FeaturePipeline, FeaturePlan
+
+DEFAULT_BUCKETS = (64, 256, 1024)
+
+
+@dataclass
+class FeatureRequest:
+    """One queued featurization request (``rows`` are table row indices)."""
+    rows: np.ndarray
+    ticket: int
+    submitted_at: float = field(default_factory=time.perf_counter)
+
+    @property
+    def n(self) -> int:
+        return int(self.rows.shape[0])
+
+
+class FeatureService:
+    """Request-queue-driven feature serving over a compiled FeaturePlan."""
+
+    def __init__(self, plan: FeaturePlan | FeaturePipeline, *,
+                 use_kernel: bool = False, prefetch: int = 2,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 sharded: bool = False):
+        if isinstance(plan, FeaturePipeline):
+            plan = plan.plan
+        if prefetch < 2:
+            raise ValueError("FeatureService is double-buffered: prefetch >= 2")
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"bad bucket sizes {buckets!r}")
+        self.plan = plan
+        self.prefetch = prefetch
+        self.buckets = tuple(sorted(buckets))
+        self.use_kernel = use_kernel
+        self.sharded = sharded
+        # ONE executor either way — device ADV tables are shared; sharding
+        # only changes where the host code slices come from
+        self._executor = FeatureExecutor(plan, use_kernel=use_kernel,
+                                         prefetch=prefetch)
+        if self._executor.kernel_active:
+            # align buckets to the fused kernel's row tile, else every
+            # bucket gets padded AGAIN to a bn multiple inside the kernel
+            bn = plan.fused_tables().bn
+            self.buckets = tuple(sorted(
+                {-(-b // bn) * bn for b in self.buckets}))
+        if sharded:
+            self._shard_bounds = plan.imcu_bounds()
+            self._shards = plan.imcu_shards()
+            self._starts = np.array([b[0] for b in self._shard_bounds])
+        # one entry per dispatched CHUNK: (ticket, n_valid_rows, device
+        # buffer, is_last_chunk) — the prefetch window bounds chunks, so an
+        # oversized request can't pile unbounded output buffers on device
+        self._inflight: deque[tuple[int, int, jnp.ndarray, bool]] = deque()
+        self._partial: dict[int, list[np.ndarray]] = {}
+        self._results: dict[int, np.ndarray] = {}
+        self._next_ticket = 0
+        self._submitted_at: dict[int, float] = {}
+        self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
+                      "batches": 0, "max_inflight": 0,
+                      "latency_s_total": 0.0, "completed": 0}
+
+    # -- request intake -------------------------------------------------------------
+    def submit(self, rows: np.ndarray) -> int:
+        """Enqueue a featurization request; returns a ticket for the result.
+
+        Dispatch happens immediately (async): the device starts gathering
+        while the caller goes on to submit more work.
+        """
+        rows = np.asarray(rows, dtype=np.int64).reshape(-1)
+        if rows.size == 0:
+            raise ValueError("empty request")
+        if rows.min() < 0 or rows.max() >= self.plan.n_rows:
+            raise IndexError(f"row indices out of range [0, {self.plan.n_rows})")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        req = FeatureRequest(rows=rows, ticket=ticket)
+        self._submitted_at[ticket] = req.submitted_at
+        self.stats["requests"] += 1
+        self.stats["rows"] += rows.size
+        self._dispatch(req)
+        return ticket
+
+    # -- bucketing ------------------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        """Smallest static bucket >= n (largest bucket caps a chunk)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def _slice_padded(self, rows: np.ndarray, bucket: int) -> np.ndarray:
+        """Host work for one chunk: fancy-index + right-pad to bucket shape."""
+        pad = bucket - rows.shape[0]
+        if pad:
+            # repeat the last row: always a valid index, rows sliced off later
+            rows = np.concatenate([rows, np.full(pad, rows[-1])])
+            self.stats["padded_rows"] += pad
+        if self.sharded:
+            return self._gather_sharded_codes(rows)
+        return self.plan.codes_matrix[:, rows]
+
+    def _gather_sharded_codes(self, rows: np.ndarray) -> np.ndarray:
+        """Route rows to their owning IMCU partitions (partition-local slices).
+
+        Rows appended after plan compile (streaming inserts via
+        ``FeaturePlan.refresh``) live past the last IMCU boundary and are
+        served from the plan's own code matrix tail.
+        """
+        out = np.empty((len(self.plan.plans), rows.shape[0]), np.int32)
+        tail_start = self._shard_bounds[-1][1]
+        tail = rows >= tail_start
+        if tail.any():
+            out[:, tail] = self.plan.codes_matrix[:, rows[tail]]
+        rows_in, (idx_in,) = rows[~tail], np.nonzero(~tail)
+        shard_of = np.searchsorted(self._starts, rows_in, side="right") - 1
+        for s in np.unique(shard_of):
+            mask = shard_of == s
+            local = rows_in[mask] - self._shard_bounds[s][0]
+            out[:, idx_in[mask]] = self._shards[s].codes_matrix[:, local]
+        return out
+
+    # -- the async pump ----------------------------------------------------------
+    def _dispatch(self, req: FeatureRequest) -> None:
+        starts = list(range(0, req.n, self.buckets[-1]))
+        for j, start in enumerate(starts):
+            if len(self._inflight) >= self.prefetch:
+                self._retire_one()
+            rows = req.rows[start:start + self.buckets[-1]]
+            bucket = self._bucket(rows.shape[0])
+            codes = jax.device_put(self._slice_padded(rows, bucket))
+            self._inflight.append((req.ticket, rows.shape[0],
+                                   self._executor.gather_device(codes),
+                                   j == len(starts) - 1))
+            self.stats["batches"] += 1
+            self.stats["max_inflight"] = max(self.stats["max_inflight"],
+                                             len(self._inflight))
+
+    def _retire_one(self) -> None:
+        ticket, n, dev, is_last = self._inflight.popleft()
+        self._partial.setdefault(ticket, []).append(np.asarray(dev)[:n])
+        if is_last:
+            parts = self._partial.pop(ticket)
+            self._results[ticket] = (parts[0] if len(parts) == 1
+                                     else np.concatenate(parts, axis=0))
+            t0 = self._submitted_at.pop(ticket, None)
+            if t0 is not None:
+                self.stats["latency_s_total"] += time.perf_counter() - t0
+                self.stats["completed"] += 1
+
+    def _pending(self, ticket: int) -> bool:
+        return any(t == ticket for t, _, _, _ in self._inflight)
+
+    # -- result retrieval ----------------------------------------------------------
+    def poll(self, ticket: int) -> bool:
+        """True once the ticket's result is on host (non-blocking): in-flight
+        chunks whose device buffers are already finished are retired first.
+        Raises KeyError for unknown/already-collected tickets (like
+        ``result``) so a poll loop can't spin forever on a bad ticket."""
+        while self._inflight and self._inflight[0][2].is_ready():
+            self._retire_one()
+        if ticket in self._results:
+            return True
+        if not self._pending(ticket):
+            raise KeyError(f"unknown or already-collected ticket {ticket}")
+        return False
+
+    def result(self, ticket: int) -> np.ndarray:
+        """Block until the ticket's features are on host and return them."""
+        if ticket not in self._results and not self._pending(ticket):
+            raise KeyError(f"unknown or already-collected ticket {ticket}")
+        while ticket not in self._results:
+            self._retire_one()
+        return self._results.pop(ticket)
+
+    def drain(self) -> dict[int, np.ndarray]:
+        """Retire everything in flight; return {ticket: features} collected."""
+        while self._inflight:
+            self._retire_one()
+        out, self._results = self._results, {}
+        return out
+
+    # -- streaming convenience -------------------------------------------------------
+    def serve_stream(self, row_batches):
+        """Featurize an iterator of row-index batches with the double buffer.
+
+        Yields (rows, features) in submission order while keeping ``prefetch``
+        batches in flight.
+        """
+        def gen():
+            # submit() already runs the prefetch-deep double buffer; this
+            # FIFO only stops the producer racing ahead of the consumer
+            pending: deque[tuple[np.ndarray, int]] = deque()
+            for rows in row_batches:
+                rows = np.asarray(rows)
+                pending.append((rows, self.submit(rows)))
+                if len(pending) > self.prefetch:
+                    r, t = pending.popleft()
+                    yield r, self.result(t)
+            while pending:
+                r, t = pending.popleft()
+                yield r, self.result(t)
+        return gen()
+
+    # -- reporting --------------------------------------------------------------
+    def throughput_stats(self, wall_s: float) -> dict:
+        rows = self.stats["rows"]
+        done = self.stats["completed"]
+        return {**self.stats, "wall_s": wall_s,
+                "rows_per_s": rows / wall_s if wall_s > 0 else float("inf"),
+                "mean_latency_s": (self.stats["latency_s_total"] / done
+                                   if done else 0.0),
+                "pad_overhead": (self.stats["padded_rows"] /
+                                 max(rows + self.stats["padded_rows"], 1))}

@@ -1,0 +1,119 @@
+"""Deterministic stand-in for the parts of ``hypothesis`` this suite uses.
+
+The container images the CI and offline devboxes run on have no network, so
+``hypothesis`` may be absent. Instead of skipping 6 of 12 test modules, the
+suite falls back to this shim (installed into ``sys.modules`` by
+``tests/conftest.py``): ``@given`` draws ``max_examples`` pseudo-random
+examples from the declared strategies with a seed derived from the test name,
+so runs are reproducible and property tests still exercise a spread of inputs
+— just without shrinking or the example database.
+
+Only the strategies the suite uses are implemented: ``integers``, ``lists``,
+``sampled_from``, ``booleans``, ``floats``.
+"""
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-compat"
+
+
+class SearchStrategy:
+    """A strategy is just a draw function: rng -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, fn) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, max_tries: int = 100) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(seq) -> SearchStrategy:
+    pool = list(seq)
+    return SearchStrategy(lambda rng: pool[int(rng.integers(0, len(pool)))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int | None = None) -> SearchStrategy:
+    hi = (min_size + 10) if max_size is None else max_size
+
+    def draw(rng):
+        n = int(rng.integers(min_size, hi + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def settings(max_examples: int | None = None, deadline=None, **_ignored):
+    """Attach example-count settings; works above or below @given."""
+    def deco(fn):
+        fn._compat_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def deco(fn):
+        def runner():
+            cfg = (getattr(runner, "_compat_settings", None)
+                   or getattr(fn, "_compat_settings", None) or {})
+            n = cfg.get("max_examples") or 20
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}".encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                args = [s.draw(rng) for s in arg_strategies]
+                kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={args!r} "
+                        f"kwargs={kwargs!r}") from e
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.is_hypothesis_test = True
+        return runner
+    return deco
+
+
+# expose a module-like ``strategies`` so both import styles work:
+#   from hypothesis import strategies as st
+#   import hypothesis.strategies as st
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = integers
+strategies.booleans = booleans
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+strategies.lists = lists

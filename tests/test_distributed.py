@@ -134,6 +134,7 @@ def test_compressed_psum_error_feedback():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import (psum_compressed,
                                                    compression_ratio)
+        from repro.distributed.compat import shard_map
         mesh = jax.make_mesh((4,), ("pod",))
         rng = np.random.default_rng(0)
         g_all = jnp.asarray(rng.standard_normal((4, 64, 32)), jnp.float32)
@@ -143,9 +144,9 @@ def test_compressed_psum_error_feedback():
                                            {"w": err[0]})
             return red["w"], new_err["w"][None]
 
-        sharded = jax.shard_map(worker, mesh=mesh,
-                                in_specs=(P("pod"), P("pod")),
-                                out_specs=(P(), P("pod")))
+        sharded = shard_map(worker, mesh=mesh,
+                            in_specs=(P("pod"), P("pod")),
+                            out_specs=(P(), P("pod")))
         err = jnp.zeros((4, 64, 32), jnp.float32)
         exact = np.asarray(g_all.sum(0))
         red, err = sharded(g_all, err)

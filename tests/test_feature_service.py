@@ -1,0 +1,362 @@
+"""FeaturePlan/FeatureExecutor/FeatureService: the async ADV serving layer."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.columnar import Table
+from repro.core import FeatureSet, FeaturePipeline, FeaturePlan, FeatureExecutor
+from repro.kernels.adv_gather import fuse_tables, adv_gather_fused
+from repro.kernels.adv_gather.ref import adv_gather_multi_ref
+from repro.serve import FeatureService
+
+
+def _toy_table(n=2048, seed=0, imcu_rows=None):
+    rng = np.random.default_rng(seed)
+    kw = {} if imcu_rows is None else {"imcu_rows": imcu_rows}
+    return Table.from_data({
+        "age": rng.integers(18, 80, size=n),
+        "state": np.array(["CA", "OR", "WA", "NY"])[rng.integers(0, 4, n)],
+        "income": rng.integers(20, 200, size=n) * 1000,
+    }, **kw)
+
+
+def _toy_features():
+    return (FeatureSet()
+            .add("age", "zscore")
+            .add("age", "bucketize", boundaries=(30.0, 50.0, 65.0))
+            .add("state", "onehot")
+            .add("income", "minmax"))
+
+
+# -- plan/executor ----------------------------------------------------------------
+def test_plan_executor_matches_recompute():
+    pipe = FeaturePipeline(_toy_table(), _toy_features())
+    idx = np.arange(64)
+    np.testing.assert_allclose(np.asarray(pipe.batch(idx)),
+                               pipe.batch_recompute(idx),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_executor_kernel_path_matches_take():
+    t = _toy_table()
+    plan = FeaturePlan(t, _toy_features())
+    ex_take = FeatureExecutor(plan, use_kernel=False)
+    ex_kern = FeatureExecutor(plan, use_kernel=True)
+    idx = np.random.default_rng(1).integers(0, t.n_rows, 500)
+    np.testing.assert_allclose(np.asarray(ex_kern.batch(idx)),
+                               np.asarray(ex_take.batch(idx)), atol=1e-6)
+
+
+def test_executor_prefetch_iterator_equivalent():
+    """Double-buffered iterator yields the same (idx, features) stream."""
+    t = _toy_table(n=640)
+    fs = _toy_features()
+    deep = FeaturePipeline(t, fs)
+    for prefetch in (2, 4):
+        ex = FeatureExecutor(FeaturePlan(t, fs), prefetch=prefetch)
+        got = list(ex.batches(128, seed=3))
+        assert len(got) == 5
+        for idx, feats in got:
+            np.testing.assert_allclose(np.asarray(feats),
+                                       np.asarray(deep.batch(idx)),
+                                       atol=1e-6)
+
+
+def test_executor_rejects_bad_prefetch():
+    plan = FeaturePlan(_toy_table(n=64), _toy_features())
+    with pytest.raises(ValueError):
+        FeatureExecutor(plan, prefetch=0)
+
+
+# -- fused multi-table kernel ------------------------------------------------------
+@pytest.mark.parametrize("cards,dims,n", [
+    ((4, 50), (1, 3), 7),
+    ((513, 17, 100), (17, 2, 5), 256),
+    ((2048, 10), (128, 2), 1000),
+    ((1,), (1,), 1),
+])
+def test_fused_gather_concat_matches_reference(cards, dims, n):
+    rng = np.random.default_rng(sum(cards) + n)
+    tables = [rng.standard_normal((k, f)).astype(np.float32)
+              for k, f in zip(cards, dims)]
+    codes = np.stack([rng.integers(0, k, n).astype(np.int32) for k in cards])
+    fused = fuse_tables(tables)
+    got = np.asarray(adv_gather_fused(fused, jnp.asarray(codes)))
+    want = np.asarray(adv_gather_multi_ref(
+        jnp.asarray(codes), [jnp.asarray(t) for t in tables]))
+    assert got.shape == (n, sum(dims))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+@given(st.integers(0, 2**31), st.integers(1, 4), st.integers(1, 400))
+@settings(max_examples=15, deadline=None)
+def test_fused_gather_property(seed, c, n):
+    rng = np.random.default_rng(seed)
+    cards = [int(rng.integers(1, 300)) for _ in range(c)]
+    dims = [int(rng.integers(1, 9)) for _ in range(c)]
+    tables = [rng.standard_normal((k, f)).astype(np.float32)
+              for k, f in zip(cards, dims)]
+    codes = np.stack([rng.integers(0, k, n).astype(np.int32) for k in cards])
+    got = np.asarray(adv_gather_fused(fuse_tables(tables), jnp.asarray(codes)))
+    want = np.asarray(adv_gather_multi_ref(
+        jnp.asarray(codes), [jnp.asarray(t) for t in tables]))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+def test_fused_tables_reports_cost():
+    fused = fuse_tables([np.ones((100, 2), np.float32),
+                         np.ones((50, 3), np.float32)])
+    assert fused.out_dim == 5
+    assert fused.cards == (100, 50)
+    assert fused.nbytes >= 150 * 5 * 4        # block-diagonal layout price
+
+
+# -- FeatureService ---------------------------------------------------------------
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_service_matches_direct_batch(use_kernel):
+    pipe = FeaturePipeline(_toy_table(), _toy_features())
+    svc = FeatureService(pipe, use_kernel=use_kernel)
+    rng = np.random.default_rng(2)
+    rows = [rng.integers(0, 2048, sz) for sz in (3, 64, 200, 1024)]
+    tickets = [svc.submit(r) for r in rows]
+    for r, tk in zip(rows, tickets):
+        np.testing.assert_allclose(svc.result(tk), np.asarray(pipe.batch(r)),
+                                   atol=1e-6)
+
+
+def test_service_double_buffer_depth_and_bucketing():
+    pipe = FeaturePipeline(_toy_table(), _toy_features())
+    svc = FeatureService(pipe, prefetch=3, buckets=(32, 128))
+    rng = np.random.default_rng(3)
+    tickets = [svc.submit(rng.integers(0, 2048, 20)) for _ in range(8)]
+    # oversized request splits into max-bucket chunks
+    big = rng.integers(0, 2048, 300)
+    tk = svc.submit(big)
+    np.testing.assert_allclose(svc.result(tk), np.asarray(pipe.batch(big)),
+                               atol=1e-6)
+    out = svc.drain()
+    assert set(out) == set(tickets)
+    assert svc.stats["max_inflight"] <= 3          # window respected
+    assert svc.stats["max_inflight"] >= 2          # actually double-buffered
+    assert svc.stats["padded_rows"] > 0            # 20 -> bucket 32
+
+
+def test_service_sharded_routing():
+    """Per-IMCU shard plans: routed slices equal the unsharded path."""
+    t = _toy_table(n=3000, imcu_rows=700)          # 5 partitions
+    pipe = FeaturePipeline(t, _toy_features())
+    assert t["age"].n_imcus == 5
+    svc = FeatureService(pipe.plan, sharded=True)
+    rng = np.random.default_rng(4)
+    rows = rng.integers(0, 3000, 900)              # crosses all partitions
+    np.testing.assert_allclose(svc.result(svc.submit(rows)),
+                               np.asarray(pipe.batch(rows)), atol=1e-6)
+
+
+def test_service_serve_stream_order():
+    pipe = FeaturePipeline(_toy_table(n=512), _toy_features())
+    svc = FeatureService(pipe)
+    rng = np.random.default_rng(5)
+    batches = [rng.integers(0, 512, 64) for _ in range(6)]
+    got = list(svc.serve_stream(iter(batches)))
+    assert len(got) == 6
+    for (rows, feats), want_rows in zip(got, batches):
+        np.testing.assert_array_equal(rows, want_rows)
+        np.testing.assert_allclose(feats, np.asarray(pipe.batch(want_rows)),
+                                   atol=1e-6)
+
+
+def test_service_poll_completes_without_result_call():
+    """poll() retires finished device work itself — a single request below
+    the prefetch depth must still become ready (no livelock)."""
+    import time
+    pipe = FeaturePipeline(_toy_table(n=256), _toy_features())
+    svc = FeatureService(pipe)
+    tk = svc.submit(np.arange(32))
+    deadline = time.perf_counter() + 30.0
+    while not svc.poll(tk):
+        assert time.perf_counter() < deadline, "poll never became ready"
+        time.sleep(0.001)
+    np.testing.assert_allclose(svc.result(tk),
+                               np.asarray(pipe.batch(np.arange(32))),
+                               atol=1e-6)
+
+
+def test_service_bad_ticket_fails_fast_without_draining():
+    pipe = FeaturePipeline(_toy_table(n=256), _toy_features())
+    svc = FeatureService(pipe)
+    tk = svc.submit(np.arange(16))
+    before = len(svc._inflight)
+    with pytest.raises(KeyError):
+        svc.result(9999)
+    assert len(svc._inflight) == before        # error path didn't drain
+    with pytest.raises(KeyError):              # poll agrees with result
+        svc.poll(9999)
+    assert svc.result(tk).shape == (16, pipe.out_dim)
+    with pytest.raises(KeyError):              # collected tickets don't spin
+        svc.poll(tk)
+
+
+def test_service_window_bounds_chunks_of_one_request():
+    """An oversized request's chunks count against the prefetch window
+    individually — device output buffers can't pile up unbounded."""
+    pipe = FeaturePipeline(_toy_table(n=2048), _toy_features())
+    svc = FeatureService(pipe, prefetch=2, buckets=(64,))
+    rows = np.random.default_rng(0).integers(0, 2048, 64 * 20)   # 20 chunks
+    tk = svc.submit(rows)
+    assert svc.stats["batches"] == 20
+    assert svc.stats["max_inflight"] <= 2
+    np.testing.assert_allclose(svc.result(tk), np.asarray(pipe.batch(rows)),
+                               atol=1e-6)
+
+
+def test_service_rejects_bad_requests():
+    svc = FeatureService(FeaturePlan(_toy_table(n=100), _toy_features()))
+    with pytest.raises(ValueError):
+        svc.submit(np.array([], dtype=np.int64))
+    with pytest.raises(IndexError):
+        svc.submit(np.array([100]))
+    with pytest.raises(ValueError):
+        FeatureService(FeaturePlan(_toy_table(n=100), _toy_features()),
+                       prefetch=1)
+
+
+# -- incremental plan refresh -------------------------------------------------------
+def test_plan_refresh_incremental_after_insert():
+    t = _toy_table(n=400)
+    pipe = FeaturePipeline(t, _toy_features())
+    plan = pipe.plan
+    put_before = plan.stats["tables_put"]
+    # grow only the age dictionary (new max value -> minmax/zscore rescale);
+    # state/income inserts reuse existing values so their plans must not move
+    age_codes = t["age"].dictionary.add_rows(np.array([150, 151]))
+    state_codes = t["state"].dictionary.add_rows(
+        t["state"].dictionary.values[:2])
+    income_codes = t["income"].dictionary.add_rows(
+        t["income"].dictionary.values[:2])
+    refreshed = plan.refresh({"age": age_codes, "state": state_codes,
+                              "income": income_codes})
+    assert refreshed == 1                           # only 'age' changed
+    assert plan.stats["tables_refreshed"] == 1
+    assert plan.stats["tables_put"] == put_before   # no extra device puts
+    assert plan.n_rows == 402
+    new_rows = np.array([400, 401])
+    np.testing.assert_allclose(np.asarray(pipe.batch(new_rows)),
+                               pipe.batch_recompute(new_rows),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_refresh_invalidates_compiled_batch_shapes(use_kernel):
+    """A batch shape compiled BEFORE a refresh must serve the new tables
+    afterwards (tables are jit arguments, not trace-time constants)."""
+    t = _toy_table(n=300)
+    pipe = FeaturePipeline(t, _toy_features(), use_kernel=use_kernel)
+    idx = np.arange(64)
+    np.asarray(pipe.batch(idx))                     # compile the (C, 64) shape
+    # grow the age dictionary: zscore/minmax/bucketize tables all rescale
+    t["age"].dictionary.add_rows(np.array([150]))
+    pipe.plan.refresh({"age": np.array([0], np.int32),
+                       "state": np.array([0], np.int32),
+                       "income": np.array([0], np.int32)})
+    np.testing.assert_allclose(np.asarray(pipe.batch(idx)),
+                               pipe.batch_recompute(idx),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_falls_back_for_huge_cardinality():
+    """use_kernel honors the single-table op's K guard: huge-K plans use the
+    XLA gather instead of materializing a giant one-hot super-table."""
+    rng = np.random.default_rng(0)
+    t = Table.from_data({"zip": rng.integers(0, 1 << 17, 200_000)})
+    pipe = FeaturePipeline(t, FeatureSet().add("zip", "zscore"),
+                           use_kernel=True)
+    assert not pipe.executor.kernel_active
+    assert pipe.plan._fused_box["t"] is None        # never built
+    idx = rng.integers(0, 200_000, 100)
+    np.testing.assert_allclose(np.asarray(pipe.batch(idx)),
+                               pipe.batch_recompute(idx),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sharded_service_serves_rows_appended_after_refresh():
+    t = _toy_table(n=2000, imcu_rows=800)
+    pipe = FeaturePipeline(t, _toy_features())
+    svc = FeatureService(pipe.plan, sharded=True)
+    svc.result(svc.submit(np.arange(64)))           # compile bucket pre-refresh
+    new = {"age": t["age"].dictionary.add_rows(np.array([150, 151])),
+           "state": t["state"].dictionary.add_rows(np.array(["CA", "OR"])),
+           "income": t["income"].dictionary.add_rows(np.array([40000,
+                                                               60000]))}
+    pipe.plan.refresh(new)
+    mixed = np.array([0, 799, 800, 1999, 2000, 2001])   # spans shards + tail
+    np.testing.assert_allclose(svc.result(svc.submit(mixed)),
+                               pipe.batch_recompute(mixed),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_plan_refresh_requires_aligned_codes():
+    plan = FeaturePlan(_toy_table(n=100), _toy_features())
+    with pytest.raises(KeyError):
+        plan.refresh({"age": np.array([0])})
+
+
+def test_plan_refresh_count_only_insert_rescales_zscore():
+    """Duplicate-value inserts leave cardinality unchanged but shift the
+    count-weighted mean/std — count-sensitive ADVs must still rebuild."""
+    rng = np.random.default_rng(0)
+    t = Table.from_data({"age": rng.integers(18, 80, 400)})
+    pipe = FeaturePipeline(t, FeatureSet().add("age", "zscore"))
+    idx = np.arange(64)
+    np.asarray(pipe.batch(idx))                     # compile pre-refresh
+    existing = t["age"].dictionary.values[0]
+    codes = t["age"].dictionary.add_rows(np.full(200, existing))
+    assert pipe.plan.refresh({"age": codes}) == 1   # version moved, K did not
+    np.testing.assert_allclose(np.asarray(pipe.batch(idx)),
+                               pipe.batch_recompute(idx),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_gather_clamps_out_of_range_codes():
+    """OOB codes must clamp inside their own table's block (take semantics),
+    not silently gather rows from the next table."""
+    rng = np.random.default_rng(1)
+    tables = [rng.standard_normal((10, 2)).astype(np.float32),
+              rng.standard_normal((20, 3)).astype(np.float32)]
+    codes = np.array([[0, 9, 15, -2],               # 15 and -2 out of range
+                      [19, 0, 25, 1]], np.int32)
+    got = np.asarray(adv_gather_fused(fuse_tables(tables),
+                                      jnp.asarray(codes)))
+    want = np.asarray(adv_gather_multi_ref(                # jnp.take clamps
+        jnp.asarray(codes), [jnp.asarray(t) for t in tables]))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+
+def test_plan_refresh_bad_codes_leaves_plan_untouched():
+    plan = FeaturePlan(_toy_table(n=100), _toy_features())
+    n_before = plan.n_rows
+    with pytest.raises(KeyError):
+        plan.refresh({"age": np.array([0], np.int32)})     # missing columns
+    assert plan.n_rows == n_before
+
+
+def test_plan_refresh_noop_when_nothing_changed():
+    plan = FeaturePlan(_toy_table(n=100), _toy_features())
+    assert plan.refresh() == 0
+    assert plan.stats["tables_refreshed"] == 0
+
+
+def test_shard_fused_tables_shared_and_refresh_invalidates_all_views():
+    t = _toy_table(n=1600, imcu_rows=800)
+    plan = FeaturePlan(t, _toy_features())
+    shards = plan.imcu_shards()
+    f0 = shards[0].fused_tables()
+    assert shards[1].fused_tables() is f0          # shared, not re-put
+    assert plan.fused_tables() is f0
+    assert plan.stats["fused_rebuilds"] == 1
+    t["age"].dictionary.add_rows(np.array([150]))
+    assert plan.refresh() >= 1
+    f1 = shards[1].fused_tables()                  # rebuilt for EVERY view
+    assert f1 is not f0
+    assert shards[0].fused_tables() is f1 and plan.fused_tables() is f1
