@@ -2,7 +2,8 @@
 dictionary-domain cost (K) for each transform + the device gather path
 through the Pallas kernels (interpret mode on CPU) + the serving path:
 seed-style synchronous FeaturePipeline.batch() loop vs the double-buffered
-FeatureService (the ≥1.5x throughput gate)."""
+FeatureService (the ≥1.5x throughput gate) vs the packed fast path
+(device-resident word streams, range requests, ~0 per-batch code traffic)."""
 from __future__ import annotations
 
 import gc
@@ -13,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.columnar import Dictionary, Table
-from repro.core import AugmentedDictionary, FeaturePipeline, FeatureSet
+from repro.core import (AugmentedDictionary, FeaturePipeline, FeaturePlan,
+                        FeatureSet)
 from repro.kernels.adv_gather import adv_gather
 from repro.kernels.hist import hist
 from repro.serve import FeatureService
@@ -24,11 +26,13 @@ K = 999
 
 def _serve_comparison() -> None:
     """Seed loop (per-column dict transfer, sync retire per batch) vs
-    FeatureService (stacked single transfer, prefetch-2 double buffer)."""
+    FeatureService (stacked single transfer, prefetch-2 double buffer) vs
+    packed FeatureService (word-aligned scan ranges off resident words)."""
     rng = np.random.default_rng(11)
     n = scaled(200_000, 8_000)
     batch = scaled(512, 128)
-    n_batches = scaled(200, 10)
+    n_batches = scaled(200, 50)    # smoke needs enough batches for a stable
+    repeats = 3                    # CI perf gate; each loop timed best-of-3
     table = Table.from_data({
         "age": rng.integers(18, 90, n),
         "state": rng.integers(0, 50, n),
@@ -59,26 +63,57 @@ def _serve_comparison() -> None:
     def seed_batch(ix):
         return gather_dict({c: jnp.asarray(codes_host[c][ix]) for c in cols})
 
+    def best_of(loop) -> float:
+        """Best-of-``repeats`` wall time: the gateable low-noise estimate."""
+        best = float("inf")
+        for _ in range(repeats):
+            gc.collect()   # GC pauses from earlier modules distort the async
+            t0 = time.perf_counter()
+            loop()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
     np.asarray(seed_batch(idx_list[0]))                    # compile
-    gc.collect()           # GC pauses from earlier modules distort the async
-    t0 = time.perf_counter()
-    for ix in idx_list:
-        np.asarray(seed_batch(ix))
-    seed_s = time.perf_counter() - t0
+    seed_s = best_of(lambda: [np.asarray(seed_batch(ix)) for ix in idx_list])
 
     svc = FeatureService(plan, prefetch=2, buckets=(batch,))
     svc.result(svc.submit(idx_list[0]))                    # compile
-    gc.collect()
-    t0 = time.perf_counter()
-    for ix in idx_list:
-        svc.submit(ix)
-    svc.drain()
-    svc_s = time.perf_counter() - t0
+
+    def svc_loop():
+        for ix in idx_list:
+            svc.submit(ix)
+        svc.drain()
+    svc_s = best_of(svc_loop)
 
     emit("serve/seed_batch_loop", seed_s / n_batches * 1e6,
          f"rows_per_s={rows/seed_s:.0f}")
     emit("serve/feature_service_prefetch2", svc_s / n_batches * 1e6,
          f"rows_per_s={rows/svc_s:.0f};speedup={seed_s/svc_s:.2f}x")
+
+    # packed fast path: word streams device-resident, requests are
+    # word-aligned scan ranges (the training-epoch serve pattern) — the only
+    # per-batch host->device traffic is the start index
+    plan_packed = FeaturePlan(table, fs, packed=True)
+    svcp = FeatureService(plan_packed, prefetch=2, buckets=(batch,))
+    start_list = [int(s) * batch
+                  for s in rng.integers(0, n // batch, n_batches)]
+    for st in start_list[:svcp.coalesce]:                  # compile the
+        svcp.submit(np.arange(st, st + batch))             # coalesced shape
+    svcp.drain()
+
+    def packed_loop():
+        for st in start_list:
+            svcp.submit(np.arange(st, st + batch))
+        svcp.drain()
+    packed_s = best_of(packed_loop)
+    assert svcp.stats["packed_ranges"] >= n_batches        # fast path taken
+    emit("serve/feature_service_packed", packed_s / n_batches * 1e6,
+         f"rows_per_s={rows/packed_s:.0f};"
+         f"speedup_vs_prefetch2={svc_s/packed_s:.2f}x;"
+         f"h2d_bytes_int32={plan.bytes_moved_adv(batch)};"
+         f"h2d_bytes_packed={plan_packed.bytes_moved_adv(batch)};"
+         f"bytes_reduction="
+         f"{plan.bytes_moved_adv(batch)/plan_packed.bytes_moved_adv(batch):.1f}x")
 
 
 def run() -> None:

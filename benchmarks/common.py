@@ -3,7 +3,13 @@
 Smoke mode (``run.py --smoke``): modules size their workloads through
 ``scaled(full, smoke)`` so CI can run the whole suite in seconds. Every
 ``emit`` is also collected into ``RECORDS`` so ``run.py`` can dump a
-``BENCH_*.json`` artifact for the perf trajectory.
+``BENCH_*.json`` artifact for the perf trajectory (``benchmarks/compare.py``
+gates CI on it).
+
+Timing uses ``time.perf_counter_ns`` with an adaptive inner loop: sub-
+microsecond calls (dictionary-domain ops on tiny smoke shapes) are batched
+until one repeat spans ``MIN_REPEAT_NS``, so records are nonzero and
+comparable across runs instead of collapsing to 0.0 at clock resolution.
 """
 from __future__ import annotations
 
@@ -12,6 +18,11 @@ from typing import Callable
 
 SMOKE = False
 RECORDS: list[dict] = []
+
+# one timed repeat must span at least this long for a stable median; the
+# probe call decides how many inner calls that takes
+MIN_REPEAT_NS = 200_000
+MAX_INNER = 10_000
 
 
 def set_smoke(on: bool = True) -> None:
@@ -26,21 +37,26 @@ def scaled(full: int, smoke: int) -> int:
 
 def time_call(fn: Callable, *args, repeats: int = 5, warmup: int = 2,
               **kwargs) -> float:
-    """Median wall time per call in microseconds."""
+    """Median wall time per call in microseconds (ns clock, adaptive loop)."""
     for _ in range(warmup):
         fn(*args, **kwargs)
+    t0 = time.perf_counter_ns()          # probe: sizes the inner loop
+    fn(*args, **kwargs)
+    probe_ns = max(time.perf_counter_ns() - t0, 1)
+    inner = max(1, min(MAX_INNER, MIN_REPEAT_NS // probe_ns))
     times = []
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn(*args, **kwargs)
-        times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter_ns()
+        for _ in range(inner):
+            fn(*args, **kwargs)
+        times.append((time.perf_counter_ns() - t0) / inner)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    return times[len(times) // 2] / 1e3
 
 
 def emit(name: str, us: float, derived: str = "") -> str:
-    line = f"{name},{us:.1f},{derived}"
-    RECORDS.append({"name": name, "us_per_call": round(us, 1),
+    line = f"{name},{us:.3f},{derived}"
+    RECORDS.append({"name": name, "us_per_call": round(us, 3),
                     "derived": derived})
     print(line, flush=True)
     return line

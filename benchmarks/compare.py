@@ -1,0 +1,91 @@
+"""CI perf gate: diff a fresh BENCH_*.json against the committed baseline.
+
+Usage:
+    python benchmarks/compare.py BASELINE.json FRESH.json \
+        --gate serve/feature_service_prefetch2 [--gate NAME ...] \
+        --max-regress 0.20 [--normalize-by serve/seed_batch_loop]
+
+Prints a delta table for every record present in both files and exits
+nonzero if any gated record's ``us_per_call`` regressed by more than
+``--max-regress`` (relative). Gated records missing from either file fail
+the gate outright — a silently dropped benchmark must not pass CI.
+
+``--normalize-by NAME`` divides each gated time by the SAME run's NAME
+time before comparing, so a baseline recorded on one machine gates a fresh
+run on different hardware: absolute wall-clock cancels out and only the
+code's relative cost vs the reference workload is compared.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_records(path: str) -> dict[str, dict]:
+    with open(path) as fh:
+        doc = json.load(fh)
+    return {r["name"]: r for r in doc.get("records", [])}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("fresh", help="freshly produced BENCH_*.json")
+    ap.add_argument("--gate", action="append", default=[],
+                    metavar="RECORD_NAME",
+                    help="record(s) whose regression fails the build "
+                         "(default: serve/feature_service_prefetch2)")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="max allowed relative us_per_call increase on "
+                         "gated records (default 0.20 = +20%%)")
+    ap.add_argument("--normalize-by", default=None, metavar="RECORD_NAME",
+                    help="divide gated times by this record's time from the "
+                         "same run (cancels machine speed differences)")
+    args = ap.parse_args(argv)
+    gates = args.gate or ["serve/feature_service_prefetch2"]
+
+    base = load_records(args.baseline)
+    fresh = load_records(args.fresh)
+
+    def gated_value(recs: dict[str, dict], name: str) -> float:
+        us = recs[name]["us_per_call"]
+        if args.normalize_by is None:
+            return us
+        ref = recs.get(args.normalize_by)
+        if ref is None or not ref["us_per_call"]:
+            raise SystemExit(f"--normalize-by record {args.normalize_by!r} "
+                             "missing or zero")
+        return us / ref["us_per_call"]
+
+    print(f"{'record':50s} {'base_us':>12s} {'fresh_us':>12s} {'delta':>8s}")
+    for name in sorted(base.keys() & fresh.keys()):
+        b, f = base[name]["us_per_call"], fresh[name]["us_per_call"]
+        delta = (f - b) / b if b else float("inf") if f else 0.0
+        mark = " <- GATE" if name in gates else ""
+        print(f"{name:50s} {b:12.3f} {f:12.3f} {delta:+7.1%}{mark}")
+
+    failures = []
+    unit = "" if args.normalize_by is None else "x"
+    for name in gates:
+        if name not in base or name not in fresh:
+            failures.append(f"{name}: missing from "
+                            f"{'baseline' if name not in base else 'fresh'} "
+                            "records")
+            continue
+        b, f = gated_value(base, name), gated_value(fresh, name)
+        if b and (f - b) / b > args.max_regress:
+            failures.append(f"{name}: {b:.3f}{unit or 'us'} -> "
+                            f"{f:.3f}{unit or 'us'} "
+                            f"({(f - b) / b:+.1%} > +{args.max_regress:.0%})")
+    if failures:
+        for msg in failures:
+            print(f"PERF GATE FAILED: {msg}", file=sys.stderr)
+        return 1
+    print(f"perf gate ok: {', '.join(gates)} within "
+          f"+{args.max_regress:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

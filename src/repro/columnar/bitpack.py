@@ -88,6 +88,24 @@ def unpack_bits_jnp(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
     return ((lo | hi) & mask).astype(jnp.int32)
 
 
+def packed_gather(words: np.ndarray, bits: int, rows: np.ndarray) -> np.ndarray:
+    """Gather codes for arbitrary ``rows`` from divisor-width packed words.
+
+    For device widths (bits | 32) fields never straddle words, so row ``r``
+    is subfield ``r % s`` of word ``r // s`` — one vectorized word gather +
+    shift/mask, touching O(len(rows)) words instead of unpacking the stream.
+    """
+    if 32 % bits:
+        raise ValueError(f"packed_gather needs bits | 32, got {bits}")
+    s = 32 // bits
+    rows = np.asarray(rows, dtype=np.int64)
+    w = np.asarray(words, dtype=np.uint32)[rows // s]
+    fields = w >> ((rows % s).astype(np.uint32) * np.uint32(bits))
+    if bits < 32:
+        fields = fields & np.uint32((1 << bits) - 1)
+    return fields.astype(np.int32)
+
+
 def packed_nbytes(n: int, bits: int) -> int:
     """Bytes used by n codes packed at ``bits`` bits each."""
     return 4 * ((n * bits + WORD_BITS - 1) // WORD_BITS)

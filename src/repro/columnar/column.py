@@ -7,13 +7,14 @@ supports predicate pruning without touching the packed words.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.columnar.bitpack import pack_bits, unpack_bits, packed_nbytes
 from repro.columnar.dictionary import Dictionary
 from repro.columnar.rle import rle_encode, rle_decode, rle_nbytes
+from repro.kernels.bitunpack.kernel import tpu_width
 
 IMCU_ROWS = 1 << 19  # 512K rows, paper §5.1
 
@@ -25,12 +26,33 @@ class _IMCU:
     rle: tuple[np.ndarray, np.ndarray] | None
     code_min: int
     code_max: int
+    # device views: words repacked ONCE at a TPU width (bits | 32), keyed by
+    # that width — what the packed fast path ships instead of int32 codes
+    device_views: dict[int, np.ndarray] = field(default_factory=dict)
 
     @property
     def nbytes(self) -> int:
         if self.rle is not None:
             return 4 * (self.rle[0].size + self.rle[1].size)
         return int(self.packed.nbytes)
+
+    def device_words(self, bits: int, db: int) -> np.ndarray:
+        """This IMCU's packed slice at device width ``db`` (bits | 32).
+
+        Repacked once and cached; when the storage width already divides 32
+        the stored words ARE the device view (zero-copy — fields never
+        straddle words, so exact and device layouts coincide).
+        """
+        view = self.device_views.get(db)
+        if view is None:
+            if self.rle is not None:
+                view = pack_bits(rle_decode(*self.rle), db)
+            elif bits == db:
+                view = self.packed                 # zero-copy: layouts agree
+            else:
+                view = pack_bits(unpack_bits(self.packed, bits, self.n), db)
+            self.device_views[db] = view
+        return view
 
 
 class Column:
@@ -92,6 +114,33 @@ class Column:
         """Materialize the int32 code stream (decompress all IMCUs)."""
         parts = [self.imcu_codes(i) for i in range(len(self._imcus))]
         return np.concatenate(parts) if parts else np.zeros(0, np.int32)
+
+    # -- device views (packed fast path) ----------------------------------------
+    def imcu_device_words(self, i: int, db: int | None = None) -> np.ndarray:
+        """One IMCU's packed words at the TPU width, without int32 codes.
+
+        Cached on the IMCU, so per-IMCU shard plans and full-column plans
+        share the same repacked buffers.
+        """
+        db = tpu_width(self.dictionary.bits) if db is None else db
+        return self._imcus[i].device_words(self.dictionary.bits, db)
+
+    def device_words(self, db: int | None = None) -> tuple[np.ndarray, int]:
+        """Whole-column device-width word stream; returns (words, db).
+
+        Per-IMCU views concatenate word-exactly when every interior IMCU's
+        row count is a multiple of 32/db (fields at divisor widths never
+        straddle words); otherwise the column is repacked in one pass.
+        """
+        db = tpu_width(self.dictionary.bits) if db is None else db
+        s = 32 // db
+        if not self._imcus:
+            return np.zeros(0, np.uint32), db
+        if all(m.n % s == 0 for m in self._imcus[:-1]):
+            return np.concatenate(
+                [self.imcu_device_words(i, db)
+                 for i in range(len(self._imcus))]), db
+        return pack_bits(self.codes(), db), db
 
     def decode(self) -> np.ndarray:
         """Materialize original values (the expensive thing the paper avoids)."""

@@ -10,10 +10,20 @@ Fig 1.
 Layering (this module):
 
 - :class:`FeaturePlan` — the compile-time half. Builds the per-column fused
-  K-row ADV tables, puts them on device ONCE (amortized forever), stacks the
-  host code streams into a single (C, N) int32 matrix, and maintains all of
-  it under streaming inserts via :meth:`FeaturePlan.refresh` (only columns
-  whose AugmentedDictionary actually changed are re-put). Plans can be
+  K-row ADV tables, puts them on device ONCE (amortized forever), and lays
+  out the host code streams in one of two forms:
+
+  * ``packed=False`` — a single (C, N) int32 matrix; a batch slice is ONE
+    fancy-index + ONE host->device transfer.
+  * ``packed=True``  — the packed fast path: per-column uint32 word streams
+    repacked once at ``tpu_width(bits)`` (straight from the Column/IMCU
+    device views), sliced per batch on word boundaries. int32 code streams
+    never exist — neither in host RAM nor on the wire.
+
+  Both layouts are maintained under streaming inserts via
+  :meth:`FeaturePlan.refresh` (only columns whose AugmentedDictionary
+  actually changed are re-put; packed streams are repacked in place only
+  when a dictionary grows across a tpu_width boundary). Plans can be
   partitioned per IMCU (:meth:`FeaturePlan.imcu_shards`) so a shard touches
   only its own partition's codes.
 - :class:`FeatureExecutor` — the run-time half. One jit'd gather over the
@@ -21,14 +31,32 @@ Layering (this module):
   kernel (one kernel pass instead of per-column take + concatenate); a
   double-buffered :meth:`FeatureExecutor.batches` iterator that overlaps
   host code-slicing for batch i+1 with the device gather for batch i via
-  ``jax.device_put`` prefetch (depth >= 2).
+  ``jax.device_put`` prefetch (depth >= 2). In packed mode the word streams
+  are kept DEVICE-resident (they are 32/bits x smaller than the int32
+  matrix they replace), so a word-aligned range batch moves nothing but a
+  start index — the fused ``adv_gather_packed`` kernel (or its split XLA
+  fallback past the VMEM budget) unpacks in-register and gathers in one
+  pass.
 - :class:`FeaturePipeline` — the original facade, kept API-compatible.
 
 Data-movement accounting is built in (``bytes_moved_*``) so benchmarks and
-EXPERIMENTS.md can quantify the claim.
+EXPERIMENTS.md can quantify the claim. Host->device bytes per batch row, by
+path (b = dictionary bits, db = tpu_width(b) <= 2b, F = feature dim):
+
+    ========================  =================================  ==========
+    path                      bytes/row                          example*
+    ========================  =================================  ==========
+    recompute (Fig 1 CSV)     4 x F                              232
+    int32 codes (packed=0)    4 x C                              16
+    packed words (packed=1)   sum_c db_c / 8                     3.25
+    packed + device-resident  ~0 (words moved once, amortized)   ~0
+    ========================  =================================  ==========
+
+    *4-column mixed-cardinality serve workload (db = 8,8,8,2; F = 58).
 """
 from __future__ import annotations
 
+import functools
 from collections import deque
 from dataclasses import dataclass
 from typing import Iterator, Mapping
@@ -37,11 +65,81 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.columnar.bitpack import packed_nbytes
+from repro.columnar.bitpack import (pack_bits, packed_gather, packed_nbytes,
+                                    unpack_bits)
 from repro.columnar.table import Table
 from repro.core.adv import AugmentedDictionary
 from repro.core.feature_spec import FeatureSet
 from repro.kernels.adv_gather import ops as adv_ops
+from repro.kernels.bitunpack.kernel import tpu_width
+
+
+def _pad32(n: int) -> int:
+    """Round up to the word-alignment quantum: a row index that is a
+    multiple of 32 is word-aligned at EVERY divisor width (32/db | 32)."""
+    return ((max(n, 1) + 31) // 32) * 32
+
+
+def _slice_words(words: jnp.ndarray, start, batch: int, db: int):
+    """Device-side window: the batch's words for one column (start % 32 == 0,
+    batch % 32 == 0, so the division is exact at any divisor width)."""
+    s = 32 // db
+    return jax.lax.dynamic_slice(words, (start // s,), (batch // s,))
+
+
+def _multi_windows(words: jnp.ndarray, starts, batch: int, db: int):
+    """K stacked word windows flattened into one (K * batch/s,) stream —
+    windows are word-aligned, so concatenation preserves code order."""
+    s = 32 // db
+    return jax.vmap(
+        lambda st: jax.lax.dynamic_slice(words, (st // s,),
+                                         (batch // s,)))(starts).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("dbs", "batch"))
+def _packed_split_range(words, tables, start, *, dbs, batch):
+    """Packed range batch, split path: per-column device unpack + gather."""
+    wins = [_slice_words(w, start, batch, db) for w, db in zip(words, dbs)]
+    return adv_ops.adv_gather_packed_split(wins, dbs, tables, batch)
+
+
+@functools.partial(jax.jit, static_argnames=("dbs", "batch", "out_dim",
+                                             "bn", "bk", "bw"))
+def _packed_fused_range(words, table, row_offsets, card_limits, start, *,
+                        dbs, batch, out_dim, bn, bk, bw):
+    """Packed range batch through the fused one-pass Pallas kernel."""
+    wins = [_slice_words(w, start, batch, db) for w, db in zip(words, dbs)]
+    return adv_ops.adv_gather_packed(wins, dbs, table, row_offsets,
+                                     card_limits, batch, out_dim,
+                                     bn=bn, bk=bk, bw=bw)
+
+
+@functools.partial(jax.jit, static_argnames=("dbs", "batch"))
+def _packed_split_multi(words, tables, starts, *, dbs, batch):
+    """K coalesced range batches in ONE launch -> (K, batch, out_dim).
+
+    Amortizes per-launch overhead (dispatch + per-op fixed cost) across K
+    batches — the serving pump's answer to many small range requests.
+    """
+    k = starts.shape[0]
+    wins = [_multi_windows(w, starts, batch, db)
+            for w, db in zip(words, dbs)]
+    out = adv_ops.adv_gather_packed_split(wins, dbs, tables, k * batch)
+    return out.reshape(k, batch, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("dbs", "batch", "out_dim",
+                                             "bn", "bk", "bw"))
+def _packed_fused_multi(words, table, row_offsets, card_limits, starts, *,
+                        dbs, batch, out_dim, bn, bk, bw):
+    """K coalesced range batches through the fused Pallas kernel."""
+    k = starts.shape[0]
+    wins = [_multi_windows(w, starts, batch, db)
+            for w, db in zip(words, dbs)]
+    out = adv_ops.adv_gather_packed(wins, dbs, table, row_offsets,
+                                    card_limits, k * batch, out_dim,
+                                    bn=bn, bk=bk, bw=bw)
+    return out.reshape(k, batch, out_dim)
 
 
 @dataclass
@@ -64,25 +162,42 @@ class ColumnPlan:
 
 
 class FeaturePlan:
-    """Compile-time artifact: device-resident ADV tables + host code matrix."""
+    """Compile-time artifact: device-resident ADV tables + host code layout."""
 
     def __init__(self, table: Table, features: FeatureSet,
-                 augmented: dict[str, AugmentedDictionary] | None = None):
+                 augmented: dict[str, AugmentedDictionary] | None = None,
+                 packed: bool = False):
         self.table = table
         self.features = features
         self.augmented = augmented if augmented is not None \
             else features.build(table)
+        self.packed = packed
         self.stats = {"tables_put": 0, "tables_refreshed": 0,
-                      "fused_rebuilds": 0}
+                      "fused_rebuilds": 0, "words_repacked": 0,
+                      "words_put": 0}
         self.plans: list[ColumnPlan] = []
         for column, aug in self.augmented.items():
             names = [s.adv_name for s in features.specs if s.column == column]
             self.plans.append(self._compile_column(column, aug, names))
-        codes = [table[p.column].codes() for p in self.plans]
-        # (C, N): one row-aligned int32 code stream per planned column —
-        # a batch slice is ONE fancy-index + ONE host->device transfer
-        self.codes_matrix = (np.stack(codes) if codes
-                             else np.zeros((0, table.n_rows), np.int32))
+        if packed:
+            # packed fast path: per-column device-width word streams from the
+            # Column/IMCU device views — the (C, N) int32 matrix never exists
+            self._codes_matrix = None
+            self._n_rows = table.n_rows
+            self.packed_words: list[np.ndarray] = []
+            self.device_bits: list[int] = []
+            self.packed_versions: list[int] = []
+            for p in self.plans:
+                words, db = table[p.column].device_words()
+                self.packed_words.append(words)
+                self.device_bits.append(db)
+                self.packed_versions.append(0)
+        else:
+            codes = [table[p.column].codes() for p in self.plans]
+            # (C, N): one row-aligned int32 code stream per planned column —
+            # a batch slice is ONE fancy-index + ONE host->device transfer
+            self._codes_matrix = (np.stack(codes) if codes
+                                  else np.zeros((0, table.n_rows), np.int32))
         # one-slot box so IMCU shard plans share (and co-invalidate) the
         # fused super-table with their parent, like `plans` and `stats`
         self._fused_box: dict[str, adv_ops.FusedTables | None] = {"t": None}
@@ -104,12 +219,38 @@ class FeaturePlan:
         return [p.column for p in self.plans]
 
     @property
+    def codes_matrix(self) -> np.ndarray:
+        if self.packed:
+            raise RuntimeError(
+                "packed plan never materializes the int32 code matrix — "
+                "use packed_words / host_codes()")
+        return self._codes_matrix
+
+    @property
     def n_rows(self) -> int:
-        return int(self.codes_matrix.shape[1])
+        return self._n_rows if self.packed else int(self._codes_matrix.shape[1])
 
     @property
     def out_dim(self) -> int:
         return sum(p.out_dim for p in self.plans)
+
+    # -- host-side code access ---------------------------------------------------
+    def host_codes(self, rows: np.ndarray) -> np.ndarray:
+        """(C, len(rows)) int32 codes for arbitrary rows.
+
+        int32 plans: one fancy-index on the stacked matrix. Packed plans:
+        per-column word gather — touches O(len(rows)) uint32 words and never
+        unpacks the stream (the only int32 ever built is the batch itself,
+        for consumers that need arbitrary-row access: recompute baselines
+        and non-range service requests).
+        """
+        if not self.packed:
+            return self._codes_matrix[:, rows]
+        rows = np.asarray(rows)
+        out = np.empty((len(self.plans), rows.shape[0]), np.int32)
+        for i, (w, db) in enumerate(zip(self.packed_words, self.device_bits)):
+            out[i] = packed_gather(w, db, rows)
+        return out
 
     # -- fused multi-table layout (one-kernel-pass path) -------------------------
     def fused_tables(self) -> adv_ops.FusedTables:
@@ -128,8 +269,11 @@ class FeaturePlan:
         re-puts device tables ONLY for columns whose AugmentedDictionary
         changed since compile — untouched columns keep their resident tables.
         ``new_codes`` optionally appends freshly inserted rows (codes from
-        ``add_rows``) to the plan's code matrix; it must cover every planned
-        column with equal lengths. Returns the number of columns refreshed.
+        ``add_rows``) to the plan's code layout; it must cover every planned
+        column with equal lengths. Packed plans repack a column's word
+        stream only when its dictionary grew across a tpu_width boundary,
+        and append new rows by rewriting at most one partial tail word.
+        Returns the number of columns refreshed.
         """
         fresh = None
         if new_codes is not None:          # validate BEFORE mutating anything
@@ -150,10 +294,37 @@ class FeaturePlan:
             refreshed += 1
         if refreshed:
             self._fused_box["t"] = None    # all shard views rebuild lazily
-        if fresh is not None:
-            self.codes_matrix = np.concatenate(
-                [self.codes_matrix, fresh], axis=1)
+        if self.packed:
+            for i, p in enumerate(self.plans):
+                db = tpu_width(p.bits)
+                if db != self.device_bits[i]:   # grew across a width boundary
+                    codes = unpack_bits(self.packed_words[i],
+                                        self.device_bits[i], self._n_rows)
+                    self.packed_words[i] = pack_bits(codes, db)
+                    self.device_bits[i] = db
+                    self.packed_versions[i] += 1
+                    self.stats["words_repacked"] += 1
+            if fresh is not None:
+                for i in range(len(self.plans)):
+                    self._append_packed(i, fresh[i])
+                self._n_rows += fresh.shape[1]
+        elif fresh is not None:
+            self._codes_matrix = np.concatenate(
+                [self._codes_matrix, fresh], axis=1)
         return refreshed
+
+    def _append_packed(self, i: int, codes: np.ndarray) -> None:
+        """Append rows to column i's word stream, rewriting at most the one
+        partial tail word (fields at divisor widths never straddle words)."""
+        db = self.device_bits[i]
+        s = 32 // db
+        words = self.packed_words[i]
+        tail = self._n_rows % s
+        if tail:
+            codes = np.concatenate([unpack_bits(words[-1:], db, tail), codes])
+            words = words[:-1]
+        self.packed_words[i] = np.concatenate([words, pack_bits(codes, db)])
+        self.packed_versions[i] += 1
 
     # -- partitioning (per-IMCU shard plans) --------------------------------------
     def imcu_shards(self) -> list["FeaturePlan"]:
@@ -164,15 +335,20 @@ class FeaturePlan:
         Device-resident ADV tables (and the fused super-table) are shared
         and co-invalidated, not re-put.
         """
+        if self.packed:
+            raise NotImplementedError(
+                "per-IMCU shard plans serve from the int32 layout; packed "
+                "plans serve ranges directly from device-resident words")
         shards = []
         for start, stop in self.imcu_bounds():
             shard = FeaturePlan.__new__(FeaturePlan)
             shard.table = self.table
             shard.features = self.features
             shard.augmented = self.augmented
+            shard.packed = False
             shard.stats = self.stats               # shared accounting
             shard.plans = self.plans               # shared device tables
-            shard.codes_matrix = self.codes_matrix[:, start:stop]
+            shard._codes_matrix = self._codes_matrix[:, start:stop]
             shard._fused_box = self._fused_box      # shared, co-invalidated
             shards.append(shard)
         return shards
@@ -184,13 +360,18 @@ class FeaturePlan:
 
     # -- data-movement accounting (paper's central claim) --------------------------
     def bytes_moved_adv(self, batch_rows: int) -> int:
-        """Host->device bytes on the ADV path: packed codes + amortized-0 tables.
-
-        Code stream is the only per-batch traffic; the K-row fused tables are
-        resident (moved once, amortized across all batches), matching the
-        paper's 'dictionary created once ... easily amortized'.
+        """Host->device bytes per batch on the ADV path, for THIS plan's
+        layout: device-width packed words (``packed=True``) vs 4-byte int32
+        codes. The K-row fused tables are resident either way (moved once,
+        amortized across all batches, the paper's 'dictionary created once
+        ... easily amortized') — and a packed executor additionally keeps
+        the word streams device-resident, so range serving amortizes even
+        the code traffic to ~0.
         """
-        return sum(packed_nbytes(batch_rows, p.bits) for p in self.plans)
+        if self.packed:
+            return sum(packed_nbytes(batch_rows, db)
+                       for db in self.device_bits)
+        return 4 * batch_rows * len(self.plans)
 
     def bytes_moved_recompute(self, batch_rows: int) -> int:
         """Traditional path ships row-space f32 features."""
@@ -199,6 +380,13 @@ class FeaturePlan:
     def bytes_resident_tables(self) -> int:
         return sum(int(p.fused_table.size) * 4 for p in self.plans)
 
+    def bytes_resident_codes(self) -> int:
+        """Host bytes held by the code layout (the duplication the packed
+        path avoids: 32/db x smaller than the int32 matrix)."""
+        if self.packed:
+            return sum(int(w.nbytes) for w in self.packed_words)
+        return int(self._codes_matrix.nbytes)
+
 
 class FeatureExecutor:
     """Run-time half: jit'd stacked gather + double-buffered batch iterator.
@@ -206,28 +394,49 @@ class FeatureExecutor:
     ADV tables enter the jit'd gathers as *arguments*, not trace-time
     constants, so a :meth:`FeaturePlan.refresh` flows into already-compiled
     batch shapes automatically (only a table *shape* change retraces).
+
+    Packed plans additionally keep the word streams device-resident
+    (re-put incrementally when a refresh bumps a column's version) and serve
+    word-aligned ranges via :meth:`batch_range` with zero per-batch
+    host->device code traffic. ``autotune=True`` sweeps the fused packed
+    kernel's (bn, bk, bw) block shapes once per workload shape.
     """
 
     def __init__(self, plan: FeaturePlan, use_kernel: bool = False,
-                 prefetch: int = 2):
+                 prefetch: int = 2, autotune: bool = False):
         if prefetch < 1:
             raise ValueError("prefetch depth must be >= 1")
         self.plan = plan
         self.use_kernel = use_kernel
         self.prefetch = prefetch
+        self.autotune = autotune
+        self.packed = plan.packed
         self._jit_take = jax.jit(self._take_impl)
         self._jit_fused = jax.jit(self._fused_impl,
                                   static_argnames=("out_dim", "bn", "bk"))
+        if self.packed:
+            self._dev_words: list[jnp.ndarray | None] = [None] * len(plan.plans)
+            self._dev_versions = [-1] * len(plan.plans)
+            self._dev_dbs = [0] * len(plan.plans)
+            self._capacity = 0
+            self._blocks: dict[int, tuple[int, int, int]] = {}
+            self.ensure_range_capacity(plan.n_rows)
         if self.kernel_active:
             plan.fused_tables()        # build eagerly, not inside the jit trace
 
     @property
     def kernel_active(self) -> bool:
         """Fused one-hot kernel path, guarded like the single-table op: huge-K
-        plans fall back to the XLA gather (one-hot tiling is wasteful there)."""
-        return self.use_kernel and (
-            sum(p.cardinality for p in self.plan.plans)
-            <= adv_ops.MAX_ONEHOT_K)
+        plans fall back to the XLA gather (one-hot tiling is wasteful there),
+        and packed plans additionally respect the ΣK×ΣF VMEM budget (past it
+        the packed range gather splits into unfused per-table gathers)."""
+        cards = [p.cardinality for p in self.plan.plans]
+        if not self.use_kernel:
+            return False
+        if self.packed:
+            return adv_ops.packed_kernel_fits(
+                cards, [p.out_dim for p in self.plan.plans])
+        return sum(cards) <= adv_ops.MAX_ONEHOT_K
 
     def _take_impl(self, codes: jnp.ndarray, tables) -> jnp.ndarray:
         # mode="clip" matches the fused kernel's OOB clamp (jax's default
@@ -254,10 +463,125 @@ class FeatureExecutor:
         return self._jit_take(dev_codes,
                               tuple(p.fused_table for p in self.plan.plans))
 
+    # -- packed fast path: device-resident words, range batches -------------------
+    def ensure_range_capacity(self, limit: int) -> None:
+        """Grow the device word streams to cover rows [0, pad32(limit)).
+
+        Padding words are zeros -> code 0 (a valid row of every table); any
+        features gathered past the real row count are sliced off by callers.
+        """
+        if not self.packed:
+            raise RuntimeError("range capacity applies to packed plans only")
+        limit = _pad32(limit)
+        if limit > self._capacity:
+            self._capacity = limit
+            self._dev_versions = [-1] * len(self.plan.plans)   # re-put all
+        self._sync_device_words()
+
+    def _sync_device_words(self) -> None:
+        """Re-put only columns whose words changed since the last put."""
+        for i in range(len(self.plan.plans)):
+            ver = self.plan.packed_versions[i]
+            db = self.plan.device_bits[i]
+            if self._dev_versions[i] == ver and self._dev_dbs[i] == db:
+                continue
+            need = self._capacity * db // 32
+            w = self.plan.packed_words[i]
+            if w.shape[0] < need:
+                w = np.concatenate([w, np.zeros(need - w.shape[0], np.uint32)])
+            else:
+                w = w[:need]
+            self._dev_words[i] = jax.device_put(np.ascontiguousarray(w))
+            self._dev_versions[i] = ver
+            self._dev_dbs[i] = db
+            self.plan.stats["words_put"] += 1
+
+    def _kernel_blocks(self, batch: int) -> tuple[int, int, int]:
+        """(bn, bk, bw) for the fused packed kernel — autotuned per batch
+        shape on first use when requested, else the fuse-time defaults."""
+        blocks = self._blocks.get(batch)
+        if blocks is None:
+            fused = self.plan.fused_tables()
+            if self.autotune:
+                dbs = tuple(self.plan.device_bits)
+                wins = [w[:batch * db // 32]
+                        for w, db in zip(self._dev_words, dbs)]
+                blocks = adv_ops.autotune_packed(wins, dbs, fused, batch)
+            else:
+                blocks = (fused.bn, fused.bk, 512)
+            self._blocks[batch] = blocks
+        return blocks
+
+    def _range_future(self, start: int, batch: int) -> jnp.ndarray:
+        """Async gather of rows [start, start+batch) from resident words.
+
+        Per-batch host->device traffic: ONE scalar (the start index).
+        Returns the full (batch, out_dim) device buffer; callers slice the
+        valid prefix when retiring.
+        """
+        if start % 32 or batch % 32:
+            raise ValueError("packed ranges must be word-aligned "
+                             f"(start % 32 == 0, batch % 32 == 0); got "
+                             f"[{start}, {start + batch})")
+        if start + batch > self._capacity:
+            self.ensure_range_capacity(start + batch)
+        else:
+            self._sync_device_words()
+        dbs = tuple(self.plan.device_bits)
+        if self.kernel_active:
+            fused = self.plan.fused_tables()
+            bn, bk, bw = self._kernel_blocks(batch)
+            return _packed_fused_range(
+                tuple(self._dev_words), fused.table, fused.row_offsets,
+                fused.card_limits, start, dbs=dbs, batch=batch,
+                out_dim=fused.out_dim, bn=bn, bk=bk, bw=bw)
+        return _packed_split_range(
+            tuple(self._dev_words),
+            tuple(p.fused_table for p in self.plan.plans),
+            start, dbs=dbs, batch=batch)
+
+    def _multi_range_future(self, starts, batch: int) -> jnp.ndarray:
+        """Async gather of K coalesced ranges -> (K, batch, out_dim) buffer.
+
+        ONE device launch serves all K ranges; the only host->device traffic
+        is the (K,) start-index vector. This is what lets a serving pump
+        amortize launch overhead across many small queued requests.
+        """
+        starts = np.asarray(starts, np.int64).reshape(-1)
+        if starts.size == 0:
+            raise ValueError("need at least one range start")
+        if batch % 32 or (starts % 32).any():
+            raise ValueError("packed ranges must be word-aligned "
+                             "(starts % 32 == 0, batch % 32 == 0)")
+        need = int(starts.max()) + batch
+        if need > self._capacity:
+            self.ensure_range_capacity(need)
+        else:
+            self._sync_device_words()
+        sv = jnp.asarray(starts, jnp.int32)
+        dbs = tuple(self.plan.device_bits)
+        if self.kernel_active:
+            fused = self.plan.fused_tables()
+            bn, bk, bw = self._kernel_blocks(batch)
+            return _packed_fused_multi(
+                tuple(self._dev_words), fused.table, fused.row_offsets,
+                fused.card_limits, sv, dbs=dbs, batch=batch,
+                out_dim=fused.out_dim, bn=bn, bk=bk, bw=bw)
+        return _packed_split_multi(
+            tuple(self._dev_words),
+            tuple(p.fused_table for p in self.plan.plans),
+            sv, dbs=dbs, batch=batch)
+
+    def batch_range(self, start: int, n: int) -> jnp.ndarray:
+        """Featurize the contiguous rows [start, start+n) (start % 32 == 0)
+        without any host code work: unpack happens inside the gather."""
+        return self._range_future(start, _pad32(n))[:n]
+
     # -- single batch -------------------------------------------------------------
     def slice_codes(self, row_idx: np.ndarray) -> np.ndarray:
-        """Host-side work for one batch: one fancy-index on the code matrix."""
-        return self.plan.codes_matrix[:, row_idx]
+        """Host-side work for one batch: one fancy-index on the code matrix
+        (int32 plans) or a per-column word gather (packed plans)."""
+        return self.plan.host_codes(row_idx)
 
     def batch(self, row_idx: np.ndarray) -> jnp.ndarray:
         """Featurize the given rows: ship int32 codes, gather ADVs on device."""
@@ -272,9 +596,41 @@ class FeatureExecutor:
         and ``device_put``s the codes for batch i+1 (i+2, ...) while the
         device still works on batch i, so consumers that block on each result
         hide the host-side slicing and transfer latency.
+
+        Packed plans shuffle at word-aligned BLOCK granularity (the order of
+        contiguous ``batch_size``-row ranges is permuted, rows within a range
+        stay contiguous) so batches slice on word boundaries and no int32
+        codes are ever built; ``batch_size`` must be a multiple of 32.
         """
         rng = np.random.default_rng(seed)
         n = self.plan.n_rows
+
+        if self.packed:
+            if batch_size % 32:
+                raise ValueError("packed plans need batch_size % 32 == 0 "
+                                 f"(word-aligned ranges), got {batch_size}")
+            # a per-epoch word-aligned jitter rotates which remainder rows
+            # fall outside the epoch's blocks (mirroring the int32 path's
+            # fresh permutation); only a sub-word tail (< 32 rows, when
+            # n % 32 != 0) is never range-reachable
+            leftover = (n % batch_size) // 32 * 32
+
+            def ranges():
+                for _ in range(epochs):
+                    jitter = 32 * rng.integers(0, leftover // 32 + 1)
+                    yield from rng.permutation(
+                        np.arange(jitter, n - batch_size + 1, batch_size))
+
+            inflight: deque[tuple[np.ndarray, jnp.ndarray]] = deque()
+            for start in ranges():
+                idx = np.arange(start, start + batch_size)
+                inflight.append((idx, self._range_future(int(start),
+                                                         batch_size)))
+                if len(inflight) >= self.prefetch:
+                    yield inflight.popleft()
+            while inflight:
+                yield inflight.popleft()
+            return
 
         def indices():
             for _ in range(epochs):
@@ -296,10 +652,11 @@ class FeaturePipeline:
     """Facade over (FeaturePlan, FeatureExecutor) — the original seed API."""
 
     def __init__(self, table: Table, features: FeatureSet,
-                 use_kernel: bool = False, prefetch: int = 2):
+                 use_kernel: bool = False, prefetch: int = 2,
+                 packed: bool = False):
         self.table = table
         self.features = features
-        self.plan = FeaturePlan(table, features)
+        self.plan = FeaturePlan(table, features, packed=packed)
         self.executor = FeatureExecutor(self.plan, use_kernel=use_kernel,
                                         prefetch=prefetch)
         self.augmented = self.plan.augmented
@@ -320,11 +677,11 @@ class FeaturePipeline:
     def batch_recompute(self, row_idx: np.ndarray) -> np.ndarray:
         """Decode values + row-space transform + ship f32 — the CSV workflow."""
         outs = []
+        codes_all = self.plan.host_codes(row_idx)
         for i, p in enumerate(self.plan.plans):
             aug = self.augmented[p.column]
-            codes = self.plan.codes_matrix[i, row_idx]
             for name in p.adv_names:
-                outs.append(aug.featurize_recompute(name, codes))
+                outs.append(aug.featurize_recompute(name, codes_all[i]))
         return np.concatenate(outs, axis=1)
 
     # -- data-movement accounting ----------------------------------------------------

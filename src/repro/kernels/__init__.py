@@ -4,7 +4,9 @@ The paper's hot path is featurization data movement, not FLOPs, so every
 kernel here is a bandwidth-shaped kernel around the dictionary:
 
 - ``bitunpack``  — b-bit packed code words -> int32 codes (DAX-scan analogue)
-- ``adv_gather`` — codes -> ADV feature rows, dictionary pinned in VMEM
+- ``adv_gather`` — codes -> ADV feature rows, dictionary pinned in VMEM;
+  includes the fused packed path (``adv_gather_packed``: unpack -> clamp ->
+  multi-hot gather in one pass, int32 codes never materialized)
 - ``onehot_wide``— fused one-hot(codes) @ W wide-layer (one-hot never
   materialized in HBM; MXU-shaped accumulation over categorical columns)
 - ``hist``       — count-metadata build (per-block histograms, paper §6.2)

@@ -1,6 +1,10 @@
 from repro.kernels.adv_gather import ops, ref
 from repro.kernels.adv_gather.ops import (adv_gather, adv_gather_fused,
+                                          adv_gather_packed,
+                                          adv_gather_packed_split,
+                                          autotune_packed, packed_kernel_fits,
                                           fuse_tables, FusedTables)
 
-__all__ = ["ops", "ref", "adv_gather", "adv_gather_fused", "fuse_tables",
-           "FusedTables"]
+__all__ = ["ops", "ref", "adv_gather", "adv_gather_fused",
+           "adv_gather_packed", "adv_gather_packed_split", "autotune_packed",
+           "packed_kernel_fits", "fuse_tables", "FusedTables"]

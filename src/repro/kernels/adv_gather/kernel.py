@@ -66,6 +66,85 @@ def _adv_gather_multi_kernel(codes_ref, table_ref, out_ref, *, bk: int):
                             preferred_element_type=out_ref.dtype)
 
 
+def _adv_gather_packed_kernel(words_ref, row_off_ref, limits_ref, table_ref,
+                              out_ref, *, bk: int, dbs: tuple,
+                              word_offs: tuple):
+    """Fused unpack -> clamp -> multi-hot gather: int32 codes never exist.
+
+    ``words_ref`` holds every column's device-width (bits | 32) packed words
+    concatenated into one stream; column c's words start at ``word_offs[c]``
+    and are packed at ``dbs[c]`` bits. Each grid step unpacks just the BN-row
+    window it gathers (the bitunpack shift/mask recipe — fields never
+    straddle words at divisor widths, so the unpack is lane-parallel), clamps
+    to the column's cardinality, shifts into the block-diagonal super-table's
+    row space, and accumulates the multi-hot x table matmul. The unpacked
+    codes live only in VREGs for one tile — neither host RAM nor HBM ever
+    holds a 32-bit code stream.
+    """
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tbl = table_ref[...]                        # (BK, F_total) f32
+    bn = out_ref.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (bn, tbl.shape[0]), 1)
+    multihot = jnp.zeros((bn, tbl.shape[0]), tbl.dtype)
+    for c, db in enumerate(dbs):                # static unroll over columns
+        s = 32 // db
+        nw = bn // s                            # words per BN-row window
+        w = words_ref[:, pl.ds(word_offs[c] + i * nw, nw)]   # (1, NW) u32
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (nw, s), 1) \
+            * jnp.uint32(db)
+        fields = w.reshape(nw, 1) >> shifts     # (NW, S) word-major
+        if db < 32:
+            fields = fields & jnp.uint32((1 << db) - 1)
+        codes = fields.reshape(bn, 1).astype(jnp.int32)
+        codes = jnp.clip(codes, 0, limits_ref[c, 0]) + row_off_ref[c, 0]
+        multihot += ((codes - k * bk) == col).astype(tbl.dtype)
+    out_ref[...] += jnp.dot(multihot, tbl,
+                            preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "bn", "bk", "dbs", "word_offs",
+                                    "interpret"))
+def adv_gather_packed_pallas(words: jnp.ndarray, row_offsets: jnp.ndarray,
+                             card_limits: jnp.ndarray, table: jnp.ndarray,
+                             n: int, bn: int = 256, bk: int = 512,
+                             dbs: tuple = (), word_offs: tuple = (),
+                             interpret: bool = True) -> jnp.ndarray:
+    """words (W,) uint32 (all columns' device-width streams concatenated),
+    table (K_total, F_total) block-diagonal -> (n, F_total) features.
+
+    Preconditions (enforced by ops.py): n % bn == 0, bn % 32 == 0 (so every
+    window is word-aligned for every divisor width), K_total % bk == 0,
+    column c's stream covers n * dbs[c] / 32 words from word_offs[c].
+    The whole word stream stays resident across grid steps — it is 32/db x
+    smaller than the int32 codes it replaces.
+    """
+    c_count = row_offsets.shape[0]
+    k_rows, f = table.shape
+    w = words.shape[0]
+    grid = (n // bn, k_rows // bk)
+    return pl.pallas_call(
+        functools.partial(_adv_gather_packed_kernel, bk=bk, dbs=dbs,
+                          word_offs=word_offs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i, k: (0, 0)),
+            pl.BlockSpec((c_count, 1), lambda i, k: (0, 0)),
+            pl.BlockSpec((c_count, 1), lambda i, k: (0, 0)),
+            pl.BlockSpec((bk, f), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, f), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), table.dtype),
+        interpret=interpret,
+    )(words.reshape(1, w), row_offsets, card_limits, table)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bn", "bk", "interpret"))
 def adv_gather_multi_pallas(codes: jnp.ndarray, table: jnp.ndarray,

@@ -5,7 +5,7 @@ Handles padding to MXU-aligned block shapes and falls back to the XLA gather
 full LM vocabularies, which are sharded and gathered natively instead,
 see repro.models.lm).
 
-Two entry points:
+Three entry points:
 
 - :func:`adv_gather` — single (K, F) table, code vector of any shape.
 - :func:`fuse_tables` + :func:`adv_gather_fused` — C tables fused into one
@@ -14,19 +14,31 @@ Two entry points:
   instead of C ``take`` calls + a ``concatenate``. The super-table costs
   ΣK × ΣF floats (vs Σ K_c·F_c unfused), the price of the single-matmul
   layout — ``FusedTables.nbytes`` reports it so planners can budget.
+- :func:`adv_gather_packed` — the packed fast path: per-column device-width
+  packed word windows go straight into a fused unpack→clamp→multi-hot-gather
+  kernel, so int32 code streams never exist on host or device. Guarded by
+  :func:`packed_kernel_fits` (ΣK×ΣF VMEM budget): oversized plans fall back
+  to :func:`adv_gather_packed_split` (device unpack + per-table gathers —
+  still packed transfer, just unfused compute). :func:`autotune_packed`
+  sweeps (bn, bk, bw) block shapes and caches the winner per workload shape.
 """
 from __future__ import annotations
 
+import timeit
 from dataclasses import dataclass
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels.adv_gather.kernel import (adv_gather_pallas,
-                                             adv_gather_multi_pallas)
-from repro.kernels.adv_gather.ref import adv_gather_ref, adv_gather_multi_ref
+                                             adv_gather_multi_pallas,
+                                             adv_gather_packed_pallas)
+from repro.kernels.adv_gather.ref import (adv_gather_ref, adv_gather_multi_ref,
+                                          adv_gather_packed_ref)
 
 MAX_ONEHOT_K = 1 << 16
+# fused block-diagonal super-table must fit comfortably in VMEM (~16MB/core)
+PACKED_VMEM_BUDGET = 16 << 20
 
 
 def _pad_to(x: int, m: int) -> int:
@@ -148,3 +160,103 @@ def adv_gather_fused(fused: FusedTables, codes: jnp.ndarray,
     return gather_fused_parts(fused.table, fused.row_offsets, codes,
                               fused.out_dim, card_limits=fused.card_limits,
                               bn=fused.bn, bk=fused.bk, interpret=interpret)
+
+
+# -- packed fast path: unpack fused into the gather -------------------------------
+
+
+def packed_kernel_fits(cards, dims,
+                       budget: int = PACKED_VMEM_BUDGET) -> bool:
+    """VMEM-budget guard for the fused packed kernel.
+
+    The block-diagonal super-table costs ΣK × ΣF f32; past ~16MB it no
+    longer fits in VMEM alongside the code windows, so callers must split
+    into unfused per-table gathers (:func:`adv_gather_packed_split`).
+    """
+    sk, sf = sum(cards), sum(dims)
+    return sk <= MAX_ONEHOT_K and 4 * sk * sf <= budget
+
+
+def adv_gather_packed(windows, dbs, fused_table: jnp.ndarray,
+                      row_offsets: jnp.ndarray, card_limits: jnp.ndarray,
+                      n: int, out_dim: int, bn: int = 256, bk: int = 512,
+                      bw: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """Fused unpack+gather: packed word windows -> (n, out_dim) features.
+
+    ``windows[c]`` holds column c's device-width (``dbs[c]`` | 32) packed
+    words covering the batch; int32 codes are materialized nowhere — the
+    kernel unpacks each (bn)-row tile in VREGs. ``bn`` must be a multiple of
+    32 so every tile is word-aligned at every divisor width; ``bw`` pads the
+    concatenated word stream to lane-aligned width.
+    """
+    if bn % 32:
+        raise ValueError(f"bn must be a multiple of 32, got {bn}")
+    if len(windows) != len(dbs):
+        raise ValueError("one device width per window required")
+    n_pad = _pad_to(max(n, 1), bn)
+    parts, offs, off = [], [], 0
+    for win, db in zip(windows, dbs):
+        if 32 % db:
+            raise ValueError(f"device width {db} does not divide 32")
+        need = n_pad * db // 32
+        w = jnp.asarray(win, jnp.uint32)[:need]     # over-provisioned slice
+        if w.shape[0] < need:
+            w = jnp.pad(w, (0, need - w.shape[0]))
+        parts.append(w)
+        offs.append(off)
+        off += need
+    flat = jnp.concatenate(parts) if parts else jnp.zeros(0, jnp.uint32)
+    flat = jnp.pad(flat, (0, _pad_to(max(off, 1), bw) - off))
+    out = adv_gather_packed_pallas(flat, row_offsets, card_limits,
+                                   fused_table, n=n_pad, bn=bn, bk=bk,
+                                   dbs=tuple(dbs), word_offs=tuple(offs),
+                                   interpret=interpret)
+    return out[:n, :out_dim]
+
+
+def adv_gather_packed_split(windows, dbs, tables, n: int) -> jnp.ndarray:
+    """Unfused fallback: per-column device unpack + XLA gather + concat.
+
+    Same packed host->device transfer as the fused kernel (the bytes win is
+    preserved); only the compute is split — used when ΣK×ΣF exceeds the
+    VMEM budget or ΣK exceeds the one-hot tiling guard.
+    """
+    return adv_gather_packed_ref(windows, dbs, tables, n)
+
+
+# one winner per workload signature — the sweep is pure wall-clock timing of
+# the real call, so it is only worth paying once per (dbs, n, table) shape
+_PACKED_TUNE_CACHE: dict[tuple, tuple[int, int, int]] = {}
+PACKED_BLOCK_CANDIDATES = ((128, 512, 512), (256, 256, 512), (256, 512, 512),
+                           (256, 512, 1024), (512, 512, 512))
+
+
+def autotune_packed(windows, dbs, fused: FusedTables, n: int,
+                    candidates=PACKED_BLOCK_CANDIDATES, repeats: int = 3,
+                    interpret: bool = True) -> tuple[int, int, int]:
+    """Sweep (bn, bk, bw) for the fused packed kernel; return the fastest.
+
+    Invalid candidates (bn not word-aligned, bk that does not tile the
+    already-padded super-table) are skipped. Results are cached per
+    (dbs, n, table-shape) so a serving plan pays the sweep once.
+    """
+    key = (tuple(dbs), n, tuple(fused.table.shape))
+    hit = _PACKED_TUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    best, best_t = (fused.bn, fused.bk, 512), float("inf")
+    for bn, bk, bw in candidates:
+        if bn % 32 or fused.table.shape[0] % bk:
+            continue
+
+        def call(bn=bn, bk=bk, bw=bw):
+            adv_gather_packed(windows, dbs, fused.table, fused.row_offsets,
+                              fused.card_limits, n, fused.out_dim, bn=bn,
+                              bk=bk, bw=bw,
+                              interpret=interpret).block_until_ready()
+        call()                                     # compile outside the clock
+        t = min(timeit.repeat(call, number=1, repeat=repeats))
+        if t < best_t:
+            best, best_t = (bn, bk, bw), t
+    _PACKED_TUNE_CACHE[key] = best
+    return best

@@ -1,6 +1,8 @@
 """Pure-jnp oracles for adv_gather."""
 import jax.numpy as jnp
 
+from repro.kernels.bitunpack.ref import bitunpack_divisor_ref
+
 
 def adv_gather_ref(codes: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     """out[i, :] = table[codes[i], :] (OOB codes clamp to the table edge)."""
@@ -18,4 +20,19 @@ def adv_gather_multi_ref(codes: jnp.ndarray, tables) -> jnp.ndarray:
     return jnp.concatenate(
         [jnp.take(t, codes[c], axis=0, mode="clip")
          for c, t in enumerate(tables)],
+        axis=-1)
+
+
+def adv_gather_packed_ref(windows, dbs, tables, n: int) -> jnp.ndarray:
+    """Split/unfused XLA rendering of the packed fast path.
+
+    ``windows[c]`` is column c's device-width (dbs[c] | 32) packed words for
+    the batch; each column is unpacked with the gather-free divisor recipe
+    and gathered from its own table — the reference the fused one-pass
+    Pallas kernel must match exactly, and the fallback ops.py uses when the
+    block-diagonal super-table would blow the VMEM budget.
+    """
+    return jnp.concatenate(
+        [jnp.take(t, bitunpack_divisor_ref(w, db, n), axis=0, mode="clip")
+         for w, db, t in zip(windows, dbs, tables)],
         axis=-1)

@@ -20,12 +20,17 @@ def repack_for_device(codes: np.ndarray, bits: int) -> tuple[np.ndarray, int]:
 
 def bitunpack(words: jnp.ndarray, device_bits: int, n: int,
               bw: int = 512, interpret: bool = True) -> jnp.ndarray:
-    """Unpack ``n`` codes from device-width packed words."""
+    """Unpack ``n`` codes from device-width packed words.
+
+    ``words`` may be over-provisioned (more words than ``n`` codes need —
+    e.g. a whole-IMCU buffer queried for a prefix): the excess is sliced off
+    before block padding.
+    """
     s = 32 // device_bits
     w_needed = (n + s - 1) // s
     w_pad = _pad_to(max(w_needed, 1), bw)
-    words_p = jnp.pad(jnp.asarray(words, jnp.uint32),
-                      (0, w_pad - words.shape[0]))
+    words = jnp.asarray(words, jnp.uint32)[:w_needed]
+    words_p = jnp.pad(words, (0, w_pad - words.shape[0]))
     out = bitunpack_pallas(words_p, device_bits, bw=bw, interpret=interpret)
     return out[:n]
 

@@ -1,6 +1,27 @@
-"""Pure-jnp oracle for bitunpack (general widths, incl. straddling fields)."""
+"""Pure-jnp oracles for bitunpack (general widths, incl. straddling fields)."""
+import jax.numpy as jnp
+
 from repro.columnar.bitpack import unpack_bits_jnp
 
 
 def bitunpack_ref(words, bits: int, n: int):
     return unpack_bits_jnp(words, bits, n)
+
+
+def bitunpack_divisor_ref(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Gather-free unpack for divisor widths (bits | 32) — the vector recipe
+    the Pallas kernel uses, expressed in XLA. Fields never straddle words, so
+    the unpack is a reshape + shift + mask with no cross-lane indexing.
+
+    ``words`` (W,) uint32 packed at ``bits``; returns (n,) int32 codes.
+    Over-provisioned ``words`` are sliced to the ``n`` codes requested.
+    """
+    if 32 % bits:
+        raise ValueError(f"divisor unpack needs bits | 32, got {bits}")
+    s = 32 // bits
+    w = jnp.asarray(words, jnp.uint32)[: (n + s - 1) // s]
+    shifts = jnp.arange(s, dtype=jnp.uint32) * jnp.uint32(bits)
+    fields = w[:, None] >> shifts[None, :]          # (W, S) word-major
+    if bits < 32:
+        fields = fields & jnp.uint32((1 << bits) - 1)
+    return fields.reshape(-1)[:n].astype(jnp.int32)

@@ -18,6 +18,20 @@ Partitioned serving: with ``sharded=True`` the service builds per-IMCU shard
 plans (:meth:`FeaturePlan.imcu_shards`) and routes each request's rows to
 their owning partitions, so only partition-local code streams are touched —
 device ADV tables are shared across shards.
+
+Packed serving: over a ``FeaturePlan(packed=True)`` the word streams are
+DEVICE-resident (32/bits x smaller than the int32 matrix they replace) and a
+request whose rows form a word-aligned contiguous range dispatches as a pure
+device-side range gather — the fused unpack+gather kernel path — moving
+nothing to the device but a start index. Up to ``coalesce`` queued range
+chunks of the same bucket shape are served by ONE device launch
+(:meth:`FeatureExecutor._multi_range_future`), amortizing launch overhead
+across requests; ``poll``/``result``/``drain`` flush the coalescing buffer,
+so partial groups never add more than one queue-depth of latency.
+Arbitrary-row requests still work: they fall back to a per-batch host
+word-gather (O(batch) words touched, the full int32 stream is never
+materialized). ``stats['packed_ranges']`` / ``stats['bytes_h2d']`` report
+how much traffic the fast path saved.
 """
 from __future__ import annotations
 
@@ -52,7 +66,7 @@ class FeatureService:
     def __init__(self, plan: FeaturePlan | FeaturePipeline, *,
                  use_kernel: bool = False, prefetch: int = 2,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 sharded: bool = False):
+                 sharded: bool = False, coalesce: int = 4):
         if isinstance(plan, FeaturePipeline):
             plan = plan.plan
         if prefetch < 2:
@@ -60,6 +74,10 @@ class FeatureService:
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"bad bucket sizes {buckets!r}")
         self.plan = plan
+        self.packed = plan.packed
+        if self.packed and sharded:
+            raise ValueError("sharded serving routes int32 slices; packed "
+                             "plans serve ranges from device-resident words")
         self.prefetch = prefetch
         self.buckets = tuple(sorted(buckets))
         self.use_kernel = use_kernel
@@ -74,21 +92,40 @@ class FeatureService:
             bn = plan.fused_tables().bn
             self.buckets = tuple(sorted(
                 {-(-b // bn) * bn for b in self.buckets}))
+        elif self.packed:
+            # word-aligned buckets so range chunks slice on word boundaries
+            self.buckets = tuple(sorted(
+                {-(-b // 32) * 32 for b in self.buckets}))
+        if self.packed:
+            # one capacity put up front: any in-range request chunk can then
+            # be served without mid-stream device re-puts
+            self._executor.ensure_range_capacity(
+                plan.n_rows + self.buckets[-1])
         if sharded:
             self._shard_bounds = plan.imcu_bounds()
             self._shards = plan.imcu_shards()
             self._starts = np.array([b[0] for b in self._shard_bounds])
-        # one entry per dispatched CHUNK: (ticket, n_valid_rows, device
-        # buffer, is_last_chunk) — the prefetch window bounds chunks, so an
-        # oversized request can't pile unbounded output buffers on device
-        self._inflight: deque[tuple[int, int, jnp.ndarray, bool]] = deque()
-        self._partial: dict[int, list[np.ndarray]] = {}
+        if coalesce < 1:
+            raise ValueError("coalesce must be >= 1")
+        self.coalesce = coalesce if self.packed else 1
+        # one entry per dispatched LAUNCH: (device buffer, parts) where each
+        # part is (ticket, n_valid_rows, chunk_idx, k) — k indexes into a
+        # coalesced (K, bucket, F) buffer, None for a single-chunk buffer.
+        # The prefetch window bounds launches, so an oversized request can't
+        # pile unbounded output buffers on device.
+        self._inflight: deque[tuple[jnp.ndarray, list]] = deque()
+        # queued-but-unlaunched range chunks, per bucket shape:
+        # bucket -> [(ticket, start_row, n_valid, chunk_idx), ...]
+        self._range_buf: dict[int, list] = {}
+        self._partial: dict[int, dict[int, np.ndarray]] = {}
+        self._chunks_total: dict[int, int] = {}
         self._results: dict[int, np.ndarray] = {}
         self._next_ticket = 0
         self._submitted_at: dict[int, float] = {}
         self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
-                      "batches": 0, "max_inflight": 0,
-                      "latency_s_total": 0.0, "completed": 0}
+                      "batches": 0, "launches": 0, "max_inflight": 0,
+                      "latency_s_total": 0.0, "completed": 0,
+                      "packed_ranges": 0, "bytes_h2d": 0}
 
     # -- request intake -------------------------------------------------------------
     def submit(self, rows: np.ndarray) -> int:
@@ -128,7 +165,8 @@ class FeatureService:
             self.stats["padded_rows"] += pad
         if self.sharded:
             return self._gather_sharded_codes(rows)
-        return self.plan.codes_matrix[:, rows]
+        # packed plans word-gather just these rows (no int32 stream exists)
+        return self.plan.host_codes(rows)
 
     def _gather_sharded_codes(self, rows: np.ndarray) -> np.ndarray:
         """Route rows to their owning IMCU partitions (partition-local slices).
@@ -151,43 +189,101 @@ class FeatureService:
         return out
 
     # -- the async pump ----------------------------------------------------------
+    @staticmethod
+    def _aligned_range(rows: np.ndarray) -> bool:
+        """True for a word-aligned contiguous run (the packed fast path)."""
+        return (int(rows[0]) % 32 == 0
+                and int(rows[-1]) - int(rows[0]) == rows.shape[0] - 1
+                and bool((np.diff(rows) == 1).all()))
+
     def _dispatch(self, req: FeatureRequest) -> None:
         starts = list(range(0, req.n, self.buckets[-1]))
+        self._chunks_total[req.ticket] = len(starts)
         for j, start in enumerate(starts):
-            if len(self._inflight) >= self.prefetch:
-                self._retire_one()
             rows = req.rows[start:start + self.buckets[-1]]
             bucket = self._bucket(rows.shape[0])
-            codes = jax.device_put(self._slice_padded(rows, bucket))
-            self._inflight.append((req.ticket, rows.shape[0],
-                                   self._executor.gather_device(codes),
-                                   j == len(starts) - 1))
-            self.stats["batches"] += 1
-            self.stats["max_inflight"] = max(self.stats["max_inflight"],
-                                             len(self._inflight))
+            if self.packed and self._aligned_range(rows):
+                # pure device-side range gather off the resident words: the
+                # only host->device traffic is the start index. Queue the
+                # chunk; a full coalescing group launches as ONE gather.
+                buf = self._range_buf.setdefault(bucket, [])
+                buf.append((req.ticket, int(rows[0]), rows.shape[0], j))
+                self.stats["packed_ranges"] += 1
+                self.stats["padded_rows"] += bucket - rows.shape[0]
+                if len(buf) >= self.coalesce:
+                    self._flush_bucket(bucket)
+                continue
+            if len(self._inflight) >= self.prefetch:
+                self._retire_one()
+            codes = self._slice_padded(rows, bucket)
+            self.stats["bytes_h2d"] += int(codes.nbytes)
+            dev = self._executor.gather_device(jax.device_put(codes))
+            self._push_inflight(dev, [(req.ticket, rows.shape[0], j, None)])
+
+    def _push_inflight(self, dev, parts: list) -> None:
+        self._inflight.append((dev, parts))
+        self.stats["batches"] += len(parts)
+        self.stats["launches"] += 1
+        self.stats["max_inflight"] = max(self.stats["max_inflight"],
+                                         len(self._inflight))
+
+    def _flush_bucket(self, bucket: int) -> None:
+        """Launch one coalesced multi-range gather for a bucket's queue.
+
+        The start vector is padded to the full ``coalesce`` width (repeating
+        the last start; surplus outputs are simply never read) so every
+        launch shares ONE compiled (K, bucket) shape — a partial group must
+        not pay a fresh XLA trace.
+        """
+        buf = self._range_buf.pop(bucket, [])
+        if not buf:
+            return
+        if len(self._inflight) >= self.prefetch:
+            self._retire_one()
+        starts = [c[1] for c in buf]
+        starts += [starts[-1]] * (self.coalesce - len(starts))
+        dev = self._executor._multi_range_future(np.array(starts), bucket)
+        self._push_inflight(dev, [(t, n, j, k)
+                                  for k, (t, _, n, j) in enumerate(buf)])
+
+    def _flush_ranges(self) -> None:
+        for bucket in list(self._range_buf):
+            self._flush_bucket(bucket)
 
     def _retire_one(self) -> None:
-        ticket, n, dev, is_last = self._inflight.popleft()
-        self._partial.setdefault(ticket, []).append(np.asarray(dev)[:n])
-        if is_last:
-            parts = self._partial.pop(ticket)
-            self._results[ticket] = (parts[0] if len(parts) == 1
-                                     else np.concatenate(parts, axis=0))
+        dev, parts = self._inflight.popleft()
+        arr = np.asarray(dev)
+        for ticket, n, j, k in parts:
+            piece = (arr if k is None else arr[k])[:n]
+            chunks = self._partial.setdefault(ticket, {})
+            chunks[j] = piece
+            if len(chunks) < self._chunks_total[ticket]:
+                continue
+            del self._partial[ticket]
+            del self._chunks_total[ticket]
+            ordered = [chunks[i] for i in range(len(chunks))]
+            self._results[ticket] = (ordered[0] if len(ordered) == 1
+                                     else np.concatenate(ordered, axis=0))
             t0 = self._submitted_at.pop(ticket, None)
             if t0 is not None:
                 self.stats["latency_s_total"] += time.perf_counter() - t0
                 self.stats["completed"] += 1
 
     def _pending(self, ticket: int) -> bool:
-        return any(t == ticket for t, _, _, _ in self._inflight)
+        return (any(t == ticket for _, parts in self._inflight
+                    for t, _, _, _ in parts)
+                or any(t == ticket for buf in self._range_buf.values()
+                       for t, _, _, _ in buf))
 
     # -- result retrieval ----------------------------------------------------------
     def poll(self, ticket: int) -> bool:
-        """True once the ticket's result is on host (non-blocking): in-flight
-        chunks whose device buffers are already finished are retired first.
-        Raises KeyError for unknown/already-collected tickets (like
-        ``result``) so a poll loop can't spin forever on a bad ticket."""
-        while self._inflight and self._inflight[0][2].is_ready():
+        """True once the ticket's result is on host (non-blocking): queued
+        range groups are launched and in-flight buffers that are already
+        finished are retired first. Raises KeyError for unknown/already-
+        collected tickets (like ``result``) so a poll loop can't spin
+        forever on a bad ticket."""
+        self._flush_ranges()
+        while self._inflight and self._inflight[0][0].is_ready():
             self._retire_one()
         if ticket in self._results:
             return True
@@ -199,12 +295,14 @@ class FeatureService:
         """Block until the ticket's features are on host and return them."""
         if ticket not in self._results and not self._pending(ticket):
             raise KeyError(f"unknown or already-collected ticket {ticket}")
+        self._flush_ranges()
         while ticket not in self._results:
             self._retire_one()
         return self._results.pop(ticket)
 
     def drain(self) -> dict[int, np.ndarray]:
         """Retire everything in flight; return {ticket: features} collected."""
+        self._flush_ranges()
         while self._inflight:
             self._retire_one()
         out, self._results = self._results, {}

@@ -162,10 +162,16 @@ def test_pipeline_data_movement_win():
     t = _toy_table(n=4096)
     fs = FeatureSet().add("state", "onehot").add("age", "zscore")
     pipe = FeaturePipeline(t, fs)
+    packed = FeaturePipeline(t, fs, packed=True)
     b = 1024
+    # accounting reports each layout's REAL transfer: 4B int32 codes vs
+    # device-width packed words vs row-space f32 features
     assert pipe.bytes_moved_adv(b) < pipe.bytes_moved_recompute(b)
-    # state: 2-bit codes vs 4 one-hot floats = 64x; age: ~6 bits vs 4B
-    assert pipe.bytes_moved_recompute(b) / pipe.bytes_moved_adv(b) > 10
+    assert packed.bytes_moved_adv(b) < pipe.bytes_moved_adv(b)
+    # state: 2-bit device words vs 4 one-hot floats = 64x; age: 8-bit vs 4B
+    assert pipe.bytes_moved_recompute(b) / packed.bytes_moved_adv(b) > 10
+    # packed path ships >= 4x fewer bytes than the int32 code matrix
+    assert pipe.bytes_moved_adv(b) / packed.bytes_moved_adv(b) >= 4
 
 
 def test_pipeline_batches_iterator():

@@ -65,6 +65,23 @@ def test_bitunpack_sweep(bits, n):
     np.testing.assert_array_equal(np.asarray(out), codes)
 
 
+def test_bitunpack_overprovisioned_words():
+    """Regression: a words buffer LONGER than n codes need (e.g. a whole
+    IMCU queried for a prefix) used to crash jnp.pad with a negative pad
+    width; the excess must be sliced off before block padding."""
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 256, size=4096)
+    words = pack_bits(codes, 8)                    # 1024 words
+    n = 100                                        # needs only 25 words
+    out = bitunpack(jnp.asarray(words), 8, n)
+    np.testing.assert_array_equal(np.asarray(out), codes[:n])
+    # boundary case: buffer exactly one block over the padded width
+    out = bitunpack(jnp.asarray(np.concatenate([words,
+                                                np.zeros(512, np.uint32)])),
+                    8, 4096)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
 @pytest.mark.parametrize("bits,expected", [(1, 1), (3, 4), (6, 8), (9, 16),
                                            (17, 32), (32, 32)])
 def test_tpu_width(bits, expected):
