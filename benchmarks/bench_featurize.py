@@ -1,38 +1,45 @@
 """Paper Table 6: the featurization catalog, one benchmark per row —
 dictionary-domain cost (K) for each transform + the device gather path
 through the Pallas kernels (interpret mode on CPU) + the serving path:
-seed-style synchronous FeaturePipeline.batch() loop vs the double-buffered
+seed-style synchronous FeaturePipeline.batch() loop vs the pump-driven
 FeatureService (the ≥1.5x throughput gate) vs the packed fast path
-(device-resident word streams, range requests, ~0 per-batch code traffic)."""
+(device-resident word streams: scan ranges AND uniform arbitrary-row
+requests, both served by coalesced index-only launches)."""
 from __future__ import annotations
 
-import gc
-import time
+from collections import deque
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.columnar import Dictionary, Table
-from repro.core import (AugmentedDictionary, FeaturePipeline, FeaturePlan,
-                        FeatureSet)
+from repro.core import (AugmentedDictionary, FeatureExecutor,
+                        FeaturePipeline, FeaturePlan, FeatureSet)
+from repro.core.pipeline import pad_rows_edge
 from repro.kernels.adv_gather import adv_gather
 from repro.kernels.hist import hist
 from repro.serve import FeatureService
-from benchmarks.common import time_call, emit, scaled
+from benchmarks.common import (MIN_REPEATS, time_call, emit, scaled,
+                               interleaved_best)
 
 K = 999
 
 
 def _serve_comparison() -> None:
     """Seed loop (per-column dict transfer, sync retire per batch) vs
-    FeatureService (stacked single transfer, prefetch-2 double buffer) vs
-    packed FeatureService (word-aligned scan ranges off resident words)."""
+    FeatureService (stacked single transfer, background pump) vs the packed
+    paths (device-resident words; scan ranges and random rows).
+
+    All five loops are timed with ROUND-ROBIN best-of-N
+    (``interleaved_best``): the CI gate compares ratios between them, and
+    interleaving keeps machine-speed drift from landing on one contender.
+    """
     rng = np.random.default_rng(11)
     n = scaled(200_000, 8_000)
     batch = scaled(512, 128)
     n_batches = scaled(200, 50)    # smoke needs enough batches for a stable
-    repeats = 3                    # CI perf gate; each loop timed best-of-3
+                                   # CI perf gate; loops timed best-of-N
     table = Table.from_data({
         "age": rng.integers(18, 90, n),
         "state": rng.integers(0, 50, n),
@@ -49,8 +56,8 @@ def _serve_comparison() -> None:
     idx_list = [rng.integers(0, n, batch) for _ in range(n_batches)]
     rows = batch * n_batches
 
-    # seed FeaturePipeline.batch() semantics: one transfer per column (dict
-    # input), synchronous host retire of every batch
+    # 1. seed FeaturePipeline.batch() semantics: one transfer per column
+    # (dict input), synchronous host retire of every batch
     cols = plan.columns
     codes_host = {c: plan.codes_matrix[i] for i, c in enumerate(cols)}
     tables = {c: plan.plans[i].fused_table for i, c in enumerate(cols)}
@@ -60,53 +67,82 @@ def _serve_comparison() -> None:
         outs = [jnp.take(tables[c], code_batch[c], axis=0) for c in cols]
         return jnp.concatenate(outs, axis=-1)
 
-    def seed_batch(ix):
-        return gather_dict({c: jnp.asarray(codes_host[c][ix]) for c in cols})
+    def seed_loop():
+        for ix in idx_list:
+            np.asarray(gather_dict({c: jnp.asarray(codes_host[c][ix])
+                                    for c in cols}))
 
-    def best_of(loop) -> float:
-        """Best-of-``repeats`` wall time: the gateable low-noise estimate."""
-        best = float("inf")
-        for _ in range(repeats):
-            gc.collect()   # GC pauses from earlier modules distort the async
-            t0 = time.perf_counter()
-            loop()
-            best = min(best, time.perf_counter() - t0)
-        return best
-
-    np.asarray(seed_batch(idx_list[0]))                    # compile
-    seed_s = best_of(lambda: [np.asarray(seed_batch(ix)) for ix in idx_list])
-
+    # 2. pump-driven service over the int32 plan
     svc = FeatureService(plan, prefetch=2, buckets=(batch,))
-    svc.result(svc.submit(idx_list[0]))                    # compile
 
     def svc_loop():
         for ix in idx_list:
             svc.submit(ix)
         svc.drain()
-    svc_s = best_of(svc_loop)
 
-    emit("serve/seed_batch_loop", seed_s / n_batches * 1e6,
-         f"rows_per_s={rows/seed_s:.0f}")
-    emit("serve/feature_service_prefetch2", svc_s / n_batches * 1e6,
-         f"rows_per_s={rows/svc_s:.0f};speedup={seed_s/svc_s:.2f}x")
-
-    # packed fast path: word streams device-resident, requests are
-    # word-aligned scan ranges (the training-epoch serve pattern) — the only
-    # per-batch host->device traffic is the start index
+    # 3. packed scan pattern: word-aligned ranges (the training-epoch serve
+    # pattern) — the pump coalesces them into index-only launches
     plan_packed = FeaturePlan(table, fs, packed=True)
     svcp = FeatureService(plan_packed, prefetch=2, buckets=(batch,))
     start_list = [int(s) * batch
                   for s in rng.integers(0, n // batch, n_batches)]
-    for st in start_list[:svcp.coalesce]:                  # compile the
-        svcp.submit(np.arange(st, st + batch))             # coalesced shape
-    svcp.drain()
 
     def packed_loop():
         for st in start_list:
             svcp.submit(np.arange(st, st + batch))
         svcp.drain()
-    packed_s = best_of(packed_loop)
+
+    # 4/5. uniform arbitrary-row requests, mixed sizes — the realistic
+    # 'millions of users' lookup pattern — served two ways over the SAME
+    # packed plan: the pre-PR host-gather path (host word-gather + (C, B)
+    # code shipping + one un-coalesced launch per request, prefetch-2
+    # retire) vs the pump's coalesced indexed launches (the device computes
+    # word index + bit offset itself; only 4B x rows of indices move)
+    sizes = [int(s) for s in
+             rng.choice([batch // 4, batch // 2, batch], n_batches)]
+    req_list = [rng.integers(0, n, sz) for sz in sizes]
+    rand_rows = int(np.sum(sizes))
+    ex = FeatureExecutor(plan_packed, prefetch=2)
+
+    def host_gather_loop():
+        inflight = deque()
+        for req in req_list:
+            padded = pad_rows_edge(req, batch)
+            codes = plan_packed.host_codes(padded)        # host materializes
+            inflight.append(ex.gather_device(jax.device_put(codes)))
+            if len(inflight) >= 2:
+                np.asarray(inflight.popleft())
+        while inflight:
+            np.asarray(inflight.popleft())
+
+    svcr = FeatureService(plan_packed, prefetch=2, buckets=(batch,))
+
+    def random_loop():
+        for req in req_list:
+            svcr.submit(req)
+        svcr.drain()
+
+    loops = [seed_loop, svc_loop, packed_loop, host_gather_loop, random_loop]
+    for loop in loops:
+        loop()                                             # compile each
+    h2d_before = svcr.stats["bytes_h2d"]
+    launches_before = svcr.stats["launches"]
+    # 10 interleaved repeats (not the 5-minimum): the pump-driven loops are
+    # the most sensitive to transient box load (thread handoffs balloon
+    # under contention), and extra rounds raise the odds every contender's
+    # min comes from a comparably quiet window
+    repeats = 2 * MIN_REPEATS
+    seed_s, svc_s, packed_s, host_s, random_s = \
+        interleaved_best(loops, repeats=repeats)
     assert svcp.stats["packed_ranges"] >= n_batches        # fast path taken
+    # per-loop averages over the interleaved repeats (stats accumulate)
+    launches = (svcr.stats["launches"] - launches_before) / repeats
+    h2d = (svcr.stats["bytes_h2d"] - h2d_before) / repeats
+
+    emit("serve/seed_batch_loop", seed_s / n_batches * 1e6,
+         f"rows_per_s={rows/seed_s:.0f}")
+    emit("serve/feature_service_prefetch2", svc_s / n_batches * 1e6,
+         f"rows_per_s={rows/svc_s:.0f};speedup={seed_s/svc_s:.2f}x")
     emit("serve/feature_service_packed", packed_s / n_batches * 1e6,
          f"rows_per_s={rows/packed_s:.0f};"
          f"speedup_vs_prefetch2={svc_s/packed_s:.2f}x;"
@@ -114,6 +150,16 @@ def _serve_comparison() -> None:
          f"h2d_bytes_packed={plan_packed.bytes_moved_adv(batch)};"
          f"bytes_reduction="
          f"{plan.bytes_moved_adv(batch)/plan_packed.bytes_moved_adv(batch):.1f}x")
+    emit("serve/feature_service_random_hostgather", host_s / n_batches * 1e6,
+         f"rows_per_s={rand_rows/host_s:.0f};"
+         f"code_bytes_per_req={4 * len(plan_packed.plans) * batch}")
+    emit("serve/feature_service_random", random_s / n_batches * 1e6,
+         f"rows_per_s={rand_rows/random_s:.0f};"
+         f"speedup_vs_hostgather={host_s/random_s:.2f}x;"
+         f"launches_per_loop={launches:.0f};"
+         f"index_bytes_per_loop={h2d:.0f}")
+    for s in (svc, svcp, svcr):        # pump threads don't outlive the module
+        s.shutdown()
 
 
 def run() -> None:

@@ -14,6 +14,11 @@ the gate outright — a silently dropped benchmark must not pass CI.
 time before comparing, so a baseline recorded on one machine gates a fresh
 run on different hardware: absolute wall-clock cancels out and only the
 code's relative cost vs the reference workload is compared.
+
+Gated serving records are produced with interleaved best-of-N timing
+(``benchmarks/common.interleaved_best``), so a single slow repeat or a
+machine-speed drift mid-run cannot be the gated number — the gate compares
+low-noise minima, not one-shot medians.
 """
 from __future__ import annotations
 

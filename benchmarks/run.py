@@ -7,7 +7,8 @@ all records (``BENCH_full.json`` / ``BENCH_smoke.json``) for CI artifacts.
   table3  count-metadata stats vs scans                (paper §6.2)
   table4/5  ADV featurization vs recompute             (paper §6.3)
   table6  featurization catalog build/apply            (paper §6.1)
-  serve   seed batch loop vs async FeatureService      (serving trajectory)
+  serve   seed loop vs pump FeatureService vs packed
+          range/random coalesced serving               (serving trajectory)
   fig1/2  end-to-end pipeline: traditional vs ADV      (paper Figs 1-2)
   roofline  dry-run derived terms (if results present) (EXPERIMENTS.md)
 

@@ -1,11 +1,29 @@
-"""FeatureService walkthrough: async, double-buffered ADV feature serving.
+"""FeatureService walkthrough: pump-driven, coalescing ADV feature serving.
+
+Serving architecture — every request flows through the same pipeline::
+
+    request --> bucket --> unified coalescer --> pump --> launch
+    submit()    chunk to    ONE queue; up to      background thread: the
+    returns a   static      `coalesce` chunks     ONLY dispatcher. Keeps
+    ticket      bucket      of one bucket shape   `prefetch` launches in
+                shapes      share a launch        flight, retires oldest
+
+``submit`` only enqueues; ``poll``/``result``/``drain`` only inspect or
+wait. Over a packed plan (``FeaturePlan(packed=True)``) the word streams
+are device-resident and EVERY chunk — word-aligned scan range or arbitrary
+row set — is served by the indexed gather kernel, which computes word index
++ bit offset on the device. ``stats['bytes_h2d']`` therefore reports INDEX
+bytes (4B x padded rows, independent of column count): random requests ship
+indices, never codes. int32 plans still ship (C, bucket) code slices.
 
 Builds a columnar table, compiles a FeaturePlan (device-resident fused ADV
-tables), then serves featurization requests three ways:
+tables), then serves featurization requests four ways:
 
 1. request queue with tickets (submit / result),
-2. streaming double-buffered iteration (serve_stream),
-3. a streaming insert followed by an incremental plan refresh — only the
+2. arbitrary-row ("millions of users") lookups over a packed plan — the
+   coalescer folds them into single index-only launches,
+3. streaming double-buffered iteration (serve_stream),
+4. a streaming insert followed by an incremental plan refresh — only the
    columns whose dictionaries changed are re-put on device.
 
 Run:  PYTHONPATH=src python examples/feature_service.py
@@ -47,13 +65,24 @@ def main() -> None:
     print(f"served 64 requests: first result {feats.shape}, "
           f"{svc.throughput_stats(wall)['rows_per_s']:.0f} rows/s")
 
-    # 2. streaming
+    # 2. packed plan: arbitrary-row requests ship ONLY indices — the pump
+    # coalesces them and the device computes word/bit offsets itself
+    with FeatureService(FeaturePlan(table, features, packed=True),
+                        prefetch=2, buckets=(512,)) as svcp:
+        tickets = [svcp.submit(rng.integers(0, n, 512)) for _ in range(64)]
+        svcp.drain()
+        st = svcp.stats
+        print(f"packed random serving: {st['launches']} launches for "
+              f"{st['requests']} requests, h2d={st['bytes_h2d']}B "
+              f"(indices only, ~4B/row x {svcp.coalesce} coalesced)")
+
+    # 3. streaming
     stream = svc.serve_stream(rng.integers(0, n, 256) for _ in range(8))
     for rows, out in stream:
         pass
     print(f"streamed 8 batches, last={out.shape}")
 
-    # 3. streaming insert + incremental refresh
+    # 4. streaming insert + incremental refresh
     new_codes = {
         "age": table["age"].dictionary.add_rows(np.array([101, 102])),
         "state": table["state"].dictionary.add_rows(np.array([7, 7])),
@@ -65,6 +94,7 @@ def main() -> None:
           f"(stats={plan.stats}); n_rows={plan.n_rows}")
     tail = svc.submit(np.array([n, n + 1]))
     print("features for the inserted rows:\n", svc.result(tail))
+    svc.shutdown()                     # join the pump thread when disposing
 
 
 if __name__ == "__main__":

@@ -80,66 +80,99 @@ def _pad32(n: int) -> int:
     return ((max(n, 1) + 31) // 32) * 32
 
 
-def _slice_words(words: jnp.ndarray, start, batch: int, db: int):
-    """Device-side window: the batch's words for one column (start % 32 == 0,
+def pad_rows_edge(rows: np.ndarray, to: int) -> np.ndarray:
+    """Right-pad a row-index vector to a static shape by repeating the last
+    row — always a valid index; callers slice the padded outputs off. The
+    ONE encoding of the pad-to-static-bucket contract on the host side."""
+    pad = to - rows.shape[0]
+    if pad <= 0:
+        return rows
+    return np.concatenate([rows, np.full(pad, rows[-1], dtype=rows.dtype)])
+
+
+def _slice_words(flat: jnp.ndarray, off: int, start, batch: int, db: int):
+    """Device-side window into the flat resident stream: the batch's words
+    for the column whose stream begins at ``off`` (start % 32 == 0,
     batch % 32 == 0, so the division is exact at any divisor width)."""
     s = 32 // db
-    return jax.lax.dynamic_slice(words, (start // s,), (batch // s,))
+    return jax.lax.dynamic_slice(flat, (off + start // s,), (batch // s,))
 
 
-def _multi_windows(words: jnp.ndarray, starts, batch: int, db: int):
+def _multi_windows(flat: jnp.ndarray, off: int, starts, batch: int, db: int):
     """K stacked word windows flattened into one (K * batch/s,) stream —
     windows are word-aligned, so concatenation preserves code order."""
     s = 32 // db
     return jax.vmap(
-        lambda st: jax.lax.dynamic_slice(words, (st // s,),
+        lambda st: jax.lax.dynamic_slice(flat, (off + st // s,),
                                          (batch // s,)))(starts).reshape(-1)
 
 
-@functools.partial(jax.jit, static_argnames=("dbs", "batch"))
-def _packed_split_range(words, tables, start, *, dbs, batch):
+@functools.partial(jax.jit, static_argnames=("dbs", "offs", "batch"))
+def _packed_split_range(flat, tables, start, *, dbs, offs, batch):
     """Packed range batch, split path: per-column device unpack + gather."""
-    wins = [_slice_words(w, start, batch, db) for w, db in zip(words, dbs)]
+    wins = [_slice_words(flat, off, start, batch, db)
+            for off, db in zip(offs, dbs)]
     return adv_ops.adv_gather_packed_split(wins, dbs, tables, batch)
 
 
-@functools.partial(jax.jit, static_argnames=("dbs", "batch", "out_dim",
-                                             "bn", "bk", "bw"))
-def _packed_fused_range(words, table, row_offsets, card_limits, start, *,
-                        dbs, batch, out_dim, bn, bk, bw):
+@functools.partial(jax.jit, static_argnames=("dbs", "offs", "batch",
+                                             "out_dim", "bn", "bk", "bw"))
+def _packed_fused_range(flat, table, row_offsets, card_limits, start, *,
+                        dbs, offs, batch, out_dim, bn, bk, bw):
     """Packed range batch through the fused one-pass Pallas kernel."""
-    wins = [_slice_words(w, start, batch, db) for w, db in zip(words, dbs)]
+    wins = [_slice_words(flat, off, start, batch, db)
+            for off, db in zip(offs, dbs)]
     return adv_ops.adv_gather_packed(wins, dbs, table, row_offsets,
                                      card_limits, batch, out_dim,
                                      bn=bn, bk=bk, bw=bw)
 
 
-@functools.partial(jax.jit, static_argnames=("dbs", "batch"))
-def _packed_split_multi(words, tables, starts, *, dbs, batch):
+@functools.partial(jax.jit, static_argnames=("dbs", "offs", "batch"))
+def _packed_split_multi(flat, tables, starts, *, dbs, offs, batch):
     """K coalesced range batches in ONE launch -> (K, batch, out_dim).
 
     Amortizes per-launch overhead (dispatch + per-op fixed cost) across K
     batches — the serving pump's answer to many small range requests.
     """
     k = starts.shape[0]
-    wins = [_multi_windows(w, starts, batch, db)
-            for w, db in zip(words, dbs)]
+    wins = [_multi_windows(flat, off, starts, batch, db)
+            for off, db in zip(offs, dbs)]
     out = adv_ops.adv_gather_packed_split(wins, dbs, tables, k * batch)
     return out.reshape(k, batch, -1)
 
 
-@functools.partial(jax.jit, static_argnames=("dbs", "batch", "out_dim",
-                                             "bn", "bk", "bw"))
-def _packed_fused_multi(words, table, row_offsets, card_limits, starts, *,
-                        dbs, batch, out_dim, bn, bk, bw):
+@functools.partial(jax.jit, static_argnames=("dbs", "offs", "batch",
+                                             "out_dim", "bn", "bk", "bw"))
+def _packed_fused_multi(flat, table, row_offsets, card_limits, starts, *,
+                        dbs, offs, batch, out_dim, bn, bk, bw):
     """K coalesced range batches through the fused Pallas kernel."""
     k = starts.shape[0]
-    wins = [_multi_windows(w, starts, batch, db)
-            for w, db in zip(words, dbs)]
+    wins = [_multi_windows(flat, off, starts, batch, db)
+            for off, db in zip(offs, dbs)]
     out = adv_ops.adv_gather_packed(wins, dbs, table, row_offsets,
                                     card_limits, k * batch, out_dim,
                                     bn=bn, bk=bk, bw=bw)
     return out.reshape(k, batch, out_dim)
+
+
+@functools.partial(jax.jit, static_argnames=("dbs", "word_offs"))
+def _packed_split_rows(flat_words, tables, rows, *, dbs, word_offs):
+    """Arbitrary-row indexed gather, split path: one coalesced word gather
+    + broadcast field extract + per-table gathers. Index-only host->device
+    traffic — the device computes word index + bit offset itself."""
+    return adv_ops.adv_gather_packed_rows_split(flat_words, word_offs, dbs,
+                                                tables, rows)
+
+
+@functools.partial(jax.jit, static_argnames=("dbs", "word_offs", "out_dim",
+                                             "bn", "bk"))
+def _packed_fused_rows(flat_words, table, row_offsets, card_limits, rows, *,
+                       dbs, word_offs, out_dim, bn, bk):
+    """Arbitrary-row indexed gather through the fused one-pass Pallas
+    kernel: unpack -> clamp -> multi-hot gather against resident words."""
+    return adv_ops.adv_gather_packed_rows(flat_words, word_offs, dbs, table,
+                                          row_offsets, card_limits, rows,
+                                          out_dim, bn=bn, bk=bk)
 
 
 @dataclass
@@ -398,8 +431,14 @@ class FeatureExecutor:
     Packed plans additionally keep the word streams device-resident
     (re-put incrementally when a refresh bumps a column's version) and serve
     word-aligned ranges via :meth:`batch_range` with zero per-batch
-    host->device code traffic. ``autotune=True`` sweeps the fused packed
-    kernel's (bn, bk, bw) block shapes once per workload shape.
+    host->device code traffic — and ARBITRARY rows via the jit-cached
+    indexed gather (:meth:`_rows_future`,
+    compiled once per static batch shape like the range path): the device
+    computes word index + bit offset against its resident streams, so the
+    only per-call traffic is the 4B x N index vector, independent of column
+    count. ``autotune=True`` sweeps the fused packed kernel's (bn, bk, bw)
+    block shapes once per workload shape, and the int32 fused kernel's
+    (bn, bk) likewise (:func:`adv_ops.autotune_fused`).
     """
 
     def __init__(self, plan: FeaturePlan, use_kernel: bool = False,
@@ -414,12 +453,18 @@ class FeatureExecutor:
         self._jit_take = jax.jit(self._take_impl)
         self._jit_fused = jax.jit(self._fused_impl,
                                   static_argnames=("out_dim", "bn", "bk"))
+        self._fused_blocks_cache: dict[int, tuple[int, int]] = {}
         if self.packed:
-            self._dev_words: list[jnp.ndarray | None] = [None] * len(plan.plans)
-            self._dev_versions = [-1] * len(plan.plans)
-            self._dev_dbs = [0] * len(plan.plans)
+            # ONE flat device-resident stream holds every column's words
+            # (column c's start at _word_offs[c]); range windows are
+            # dynamic_slices into it and the random-row kernels gather from
+            # it directly — no per-column duplicate buffers
+            self._flat_words: jnp.ndarray | None = None
+            self._word_offs: tuple[int, ...] = ()
+            self._words_sig: tuple | None = None
             self._capacity = 0
             self._blocks: dict[int, tuple[int, int, int]] = {}
+            self._rows_blocks_cache: dict[int, tuple[int, int]] = {}
             self.ensure_range_capacity(plan.n_rows)
         if self.kernel_active:
             plan.fused_tables()        # build eagerly, not inside the jit trace
@@ -428,15 +473,13 @@ class FeatureExecutor:
     def kernel_active(self) -> bool:
         """Fused one-hot kernel path, guarded like the single-table op: huge-K
         plans fall back to the XLA gather (one-hot tiling is wasteful there),
-        and packed plans additionally respect the ΣK×ΣF VMEM budget (past it
-        the packed range gather splits into unfused per-table gathers)."""
-        cards = [p.cardinality for p in self.plan.plans]
+        and BOTH fused kernels (packed and int32) respect the ΣK×ΣF VMEM
+        budget (past it the gathers split into unfused per-table takes)."""
         if not self.use_kernel:
             return False
-        if self.packed:
-            return adv_ops.packed_kernel_fits(
-                cards, [p.out_dim for p in self.plan.plans])
-        return sum(cards) <= adv_ops.MAX_ONEHOT_K
+        return adv_ops.fused_kernel_fits(
+            [p.cardinality for p in self.plan.plans],
+            [p.out_dim for p in self.plan.plans])
 
     def _take_impl(self, codes: jnp.ndarray, tables) -> jnp.ndarray:
         # mode="clip" matches the fused kernel's OOB clamp (jax's default
@@ -453,63 +496,108 @@ class FeatureExecutor:
                                           card_limits=card_limits,
                                           bn=bn, bk=bk)
 
+    def _fused_blocks(self, batch: int) -> tuple[int, int]:
+        """(bn, bk) for the int32 fused kernel — swept per batch shape when
+        ``autotune=True`` (the packed path's sweep, ported), else the
+        fuse-time defaults."""
+        blocks = self._fused_blocks_cache.get(batch)
+        if blocks is None:
+            fused = self.plan.fused_tables()
+            if self.autotune:
+                probe = jnp.zeros((len(self.plan.plans), batch), jnp.int32)
+                blocks = adv_ops.autotune_fused(probe, fused, batch)
+            else:
+                blocks = (fused.bn, fused.bk)
+            self._fused_blocks_cache[batch] = blocks
+        return blocks
+
     def gather_device(self, dev_codes: jnp.ndarray) -> jnp.ndarray:
         """(C, B) stacked device codes -> (B, out_dim) concatenated features."""
         if self.kernel_active:
             fused = self.plan.fused_tables()
+            bn, bk = self._fused_blocks(int(dev_codes.shape[1]))
             return self._jit_fused(dev_codes, fused.table, fused.row_offsets,
                                    fused.card_limits, out_dim=fused.out_dim,
-                                   bn=fused.bn, bk=fused.bk)
+                                   bn=bn, bk=bk)
         return self._jit_take(dev_codes,
                               tuple(p.fused_table for p in self.plan.plans))
 
     # -- packed fast path: device-resident words, range batches -------------------
     def ensure_range_capacity(self, limit: int) -> None:
-        """Grow the device word streams to cover rows [0, pad32(limit)).
+        """Grow the device word stream to cover rows [0, pad32(limit)).
 
         Padding words are zeros -> code 0 (a valid row of every table); any
         features gathered past the real row count are sliced off by callers.
         """
         if not self.packed:
             raise RuntimeError("range capacity applies to packed plans only")
-        limit = _pad32(limit)
-        if limit > self._capacity:
-            self._capacity = limit
-            self._dev_versions = [-1] * len(self.plan.plans)   # re-put all
+        self._capacity = max(self._capacity, _pad32(limit))
         self._sync_device_words()
 
     def _sync_device_words(self) -> None:
-        """Re-put only columns whose words changed since the last put."""
-        for i in range(len(self.plan.plans)):
-            ver = self.plan.packed_versions[i]
-            db = self.plan.device_bits[i]
-            if self._dev_versions[i] == ver and self._dev_dbs[i] == db:
-                continue
-            need = self._capacity * db // 32
-            w = self.plan.packed_words[i]
+        """Re-put the flat resident stream when any column's words moved.
+
+        One concatenated buffer replaces per-column arrays, so a refresh
+        that touches any column re-puts the whole stream — word streams are
+        32/db x smaller than the codes they encode, so one put stays cheap,
+        and holding a single copy (instead of flat + per-column duplicates)
+        keeps device residency at exactly Σ stream bytes.
+        """
+        plan = self.plan
+        sig = (tuple(plan.packed_versions), tuple(plan.device_bits),
+               self._capacity)
+        if self._words_sig == sig:
+            return
+        parts, offs, off = [], [], 0
+        for i in range(len(plan.plans)):
+            need = self._capacity * plan.device_bits[i] // 32
+            w = plan.packed_words[i]
             if w.shape[0] < need:
-                w = np.concatenate([w, np.zeros(need - w.shape[0], np.uint32)])
+                w = np.concatenate([w, np.zeros(need - w.shape[0],
+                                                np.uint32)])
             else:
                 w = w[:need]
-            self._dev_words[i] = jax.device_put(np.ascontiguousarray(w))
-            self._dev_versions[i] = ver
-            self._dev_dbs[i] = db
-            self.plan.stats["words_put"] += 1
+            parts.append(w)
+            offs.append(off)
+            off += need
+        flat = (np.concatenate(parts) if parts
+                else np.zeros(0, np.uint32))
+        self._flat_words = jax.device_put(np.ascontiguousarray(flat))
+        self._word_offs = tuple(offs)
+        self._words_sig = sig
+        plan.stats["words_put"] += 1
 
     def _kernel_blocks(self, batch: int) -> tuple[int, int, int]:
-        """(bn, bk, bw) for the fused packed kernel — autotuned per batch
-        shape on first use when requested, else the fuse-time defaults."""
+        """(bn, bk, bw) for the fused packed RANGE kernel — autotuned per
+        batch shape on first use when requested, else fuse-time defaults."""
         blocks = self._blocks.get(batch)
         if blocks is None:
             fused = self.plan.fused_tables()
             if self.autotune:
                 dbs = tuple(self.plan.device_bits)
-                wins = [w[:batch * db // 32]
-                        for w, db in zip(self._dev_words, dbs)]
+                wins, flat = [], self._flat_words
+                for off, db in zip(self._word_offs, dbs):
+                    wins.append(flat[off:off + batch * db // 32])
                 blocks = adv_ops.autotune_packed(wins, dbs, fused, batch)
             else:
                 blocks = (fused.bn, fused.bk, 512)
             self._blocks[batch] = blocks
+        return blocks
+
+    def _rows_kernel_blocks(self, n: int) -> tuple[int, int]:
+        """(bn, bk) for the fused random-row kernel — swept on the rows
+        kernel ITSELF (its gather cost profile differs from the range
+        kernel's) when ``autotune=True``, else fuse-time defaults."""
+        blocks = self._rows_blocks_cache.get(n)
+        if blocks is None:
+            fused = self.plan.fused_tables()
+            if self.autotune:
+                blocks = adv_ops.autotune_packed_rows(
+                    self._flat_words, self._word_offs,
+                    tuple(self.plan.device_bits), fused, n)
+            else:
+                blocks = (fused.bn, fused.bk)
+            self._rows_blocks_cache[n] = blocks
         return blocks
 
     def _range_future(self, start: int, batch: int) -> jnp.ndarray:
@@ -523,22 +611,19 @@ class FeatureExecutor:
             raise ValueError("packed ranges must be word-aligned "
                              f"(start % 32 == 0, batch % 32 == 0); got "
                              f"[{start}, {start + batch})")
-        if start + batch > self._capacity:
-            self.ensure_range_capacity(start + batch)
-        else:
-            self._sync_device_words()
+        self.ensure_range_capacity(max(start + batch, self.plan.n_rows))
         dbs = tuple(self.plan.device_bits)
         if self.kernel_active:
             fused = self.plan.fused_tables()
             bn, bk, bw = self._kernel_blocks(batch)
             return _packed_fused_range(
-                tuple(self._dev_words), fused.table, fused.row_offsets,
-                fused.card_limits, start, dbs=dbs, batch=batch,
-                out_dim=fused.out_dim, bn=bn, bk=bk, bw=bw)
+                self._flat_words, fused.table, fused.row_offsets,
+                fused.card_limits, start, dbs=dbs, offs=self._word_offs,
+                batch=batch, out_dim=fused.out_dim, bn=bn, bk=bk, bw=bw)
         return _packed_split_range(
-            tuple(self._dev_words),
+            self._flat_words,
             tuple(p.fused_table for p in self.plan.plans),
-            start, dbs=dbs, batch=batch)
+            start, dbs=dbs, offs=self._word_offs, batch=batch)
 
     def _multi_range_future(self, starts, batch: int) -> jnp.ndarray:
         """Async gather of K coalesced ranges -> (K, batch, out_dim) buffer.
@@ -553,29 +638,62 @@ class FeatureExecutor:
         if batch % 32 or (starts % 32).any():
             raise ValueError("packed ranges must be word-aligned "
                              "(starts % 32 == 0, batch % 32 == 0)")
-        need = int(starts.max()) + batch
-        if need > self._capacity:
-            self.ensure_range_capacity(need)
-        else:
-            self._sync_device_words()
+        self.ensure_range_capacity(max(int(starts.max()) + batch,
+                                       self.plan.n_rows))
         sv = jnp.asarray(starts, jnp.int32)
         dbs = tuple(self.plan.device_bits)
         if self.kernel_active:
             fused = self.plan.fused_tables()
             bn, bk, bw = self._kernel_blocks(batch)
             return _packed_fused_multi(
-                tuple(self._dev_words), fused.table, fused.row_offsets,
-                fused.card_limits, sv, dbs=dbs, batch=batch,
-                out_dim=fused.out_dim, bn=bn, bk=bk, bw=bw)
+                self._flat_words, fused.table, fused.row_offsets,
+                fused.card_limits, sv, dbs=dbs, offs=self._word_offs,
+                batch=batch, out_dim=fused.out_dim, bn=bn, bk=bk, bw=bw)
         return _packed_split_multi(
-            tuple(self._dev_words),
+            self._flat_words,
             tuple(p.fused_table for p in self.plan.plans),
-            sv, dbs=dbs, batch=batch)
+            sv, dbs=dbs, offs=self._word_offs, batch=batch)
 
     def batch_range(self, start: int, n: int) -> jnp.ndarray:
         """Featurize the contiguous rows [start, start+n) (start % 32 == 0)
         without any host code work: unpack happens inside the gather."""
         return self._range_future(start, _pad32(n))[:n]
+
+    # -- packed random-row path: indices in, features out -------------------------
+    def _rows_future(self, rows) -> jnp.ndarray:
+        """Async indexed gather of arbitrary rows from the resident words.
+
+        Per-call host->device traffic: the (N,) int32 index vector — 4B per
+        row, independent of column count. One compiled shape per index
+        length (callers pad to static bucket shapes, the range path's
+        compiled-shape discipline). The serving pump's unified launch:
+        K coalesced bucket-padded row sets arrive here flattened.
+        """
+        if not self.packed:
+            raise RuntimeError("indexed row gather applies to packed plans "
+                               "only; int32 plans ship code slices")
+        # the stream must cover every live row: refresh() appends can push
+        # n_rows past the capacity the stream was last put at, and an index
+        # past the stream would silently clip into another column's words
+        self.ensure_range_capacity(self.plan.n_rows)
+        # np rows go straight into the jit: its argument transfer IS the
+        # 4B x N host->device index shipment (a separate device_put would
+        # just add one more dispatch on the serving hot path)
+        dev_rows = rows if isinstance(rows, jnp.ndarray) \
+            else np.ascontiguousarray(rows, dtype=np.int32)
+        dbs = tuple(self.plan.device_bits)
+        if self.kernel_active:
+            fused = self.plan.fused_tables()
+            bn, bk = self._rows_kernel_blocks(int(dev_rows.shape[0]))
+            return _packed_fused_rows(
+                self._flat_words, fused.table, fused.row_offsets,
+                fused.card_limits, dev_rows, dbs=dbs,
+                word_offs=self._word_offs, out_dim=fused.out_dim,
+                bn=bn, bk=bk)
+        return _packed_split_rows(
+            self._flat_words,
+            tuple(p.fused_table for p in self.plan.plans),
+            dev_rows, dbs=dbs, word_offs=self._word_offs)
 
     # -- single batch -------------------------------------------------------------
     def slice_codes(self, row_idx: np.ndarray) -> np.ndarray:
@@ -584,7 +702,23 @@ class FeatureExecutor:
         return self.plan.host_codes(row_idx)
 
     def batch(self, row_idx: np.ndarray) -> jnp.ndarray:
-        """Featurize the given rows: ship int32 codes, gather ADVs on device."""
+        """Featurize the given rows. int32 plans ship the stacked code slice;
+        packed plans ship ONLY the row indices — the device computes word
+        index + bit offset against its resident streams (no host code
+        materialization for any access pattern)."""
+        if self.packed:
+            rows = np.asarray(row_idx, np.int64).reshape(-1)
+            n = rows.shape[0]
+            if n == 0:                 # match the int32 path's empty gather
+                return jnp.zeros((0, self.plan.out_dim), jnp.float32)
+            if rows.min() < 0 or rows.max() >= self.plan.n_rows:
+                # numpy fancy-indexing raised on the old host-gather path;
+                # the device gather clips, which would silently read
+                # ANOTHER column's words — keep the error contract
+                raise IndexError(
+                    f"row indices out of range [0, {self.plan.n_rows})")
+            rows = pad_rows_edge(rows, _pad32(n))
+            return self._rows_future(rows.astype(np.int32))[:n]
         return self.gather_device(jax.device_put(self.slice_codes(row_idx)))
 
     # -- double-buffered iteration --------------------------------------------------

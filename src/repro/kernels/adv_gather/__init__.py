@@ -2,9 +2,17 @@ from repro.kernels.adv_gather import ops, ref
 from repro.kernels.adv_gather.ops import (adv_gather, adv_gather_fused,
                                           adv_gather_packed,
                                           adv_gather_packed_split,
-                                          autotune_packed, packed_kernel_fits,
+                                          adv_gather_packed_rows,
+                                          adv_gather_packed_rows_split,
+                                          autotune_packed, autotune_fused,
+                                          autotune_packed_rows,
+                                          fused_kernel_fits,
+                                          packed_kernel_fits,
                                           fuse_tables, FusedTables)
 
 __all__ = ["ops", "ref", "adv_gather", "adv_gather_fused",
-           "adv_gather_packed", "adv_gather_packed_split", "autotune_packed",
-           "packed_kernel_fits", "fuse_tables", "FusedTables"]
+           "adv_gather_packed", "adv_gather_packed_split",
+           "adv_gather_packed_rows", "adv_gather_packed_rows_split",
+           "autotune_packed", "autotune_fused", "autotune_packed_rows",
+           "fused_kernel_fits", "packed_kernel_fits",
+           "fuse_tables", "FusedTables"]

@@ -108,6 +108,86 @@ def _adv_gather_packed_kernel(words_ref, row_off_ref, limits_ref, table_ref,
                             preferred_element_type=out_ref.dtype)
 
 
+def _adv_gather_packed_rows_kernel(rows_ref, words_ref, row_off_ref,
+                                   limits_ref, table_ref, out_ref, *,
+                                   bk: int, dbs: tuple, word_offs: tuple):
+    """Random-row variant of the packed kernel: indices in, features out.
+
+    ``rows_ref`` holds a BN-row tile of arbitrary table row indices. For each
+    column c the kernel computes the word index (``row // s``, s = 32/db,
+    fields never straddle words at divisor widths) and bit offset
+    (``(row % s) * db``) against the RESIDENT word stream, extracts the
+    field, clamps, shifts into the block-diagonal super-table's row space and
+    accumulates the multi-hot x table matmul — one pass, int32 code streams
+    never exist, and the only per-launch host->device traffic is the index
+    vector itself (4B x N, independent of column count).
+
+    The in-kernel word gather (``jnp.take``) is exact in interpret mode; a
+    real-TPU lowering needs a DMA-based gather (ROADMAP: validate on TPU).
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tbl = table_ref[...]                        # (BK, F_total) f32
+    rows = rows_ref[...][0]                     # (BN,) int32
+    words = words_ref[...][0]                   # (W,) uint32, all columns
+    bn = rows.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (bn, tbl.shape[0]), 1)
+    multihot = jnp.zeros((bn, tbl.shape[0]), tbl.dtype)
+    for c, db in enumerate(dbs):                # static unroll over columns
+        s = 32 // db
+        w = jnp.take(words, word_offs[c] + rows // s)       # (BN,) u32
+        fields = w >> ((rows % s).astype(jnp.uint32) * jnp.uint32(db))
+        if db < 32:
+            fields = fields & jnp.uint32((1 << db) - 1)
+        codes = fields.astype(jnp.int32)
+        codes = jnp.clip(codes, 0, limits_ref[c, 0]) + row_off_ref[c, 0]
+        multihot += ((codes.reshape(bn, 1) - k * bk) == col).astype(tbl.dtype)
+    out_ref[...] += jnp.dot(multihot, tbl,
+                            preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "bn", "bk", "dbs", "word_offs",
+                                    "interpret"))
+def adv_gather_packed_rows_pallas(rows: jnp.ndarray, words: jnp.ndarray,
+                                  row_offsets: jnp.ndarray,
+                                  card_limits: jnp.ndarray,
+                                  table: jnp.ndarray, n: int, bn: int = 256,
+                                  bk: int = 512, dbs: tuple = (),
+                                  word_offs: tuple = (),
+                                  interpret: bool = True) -> jnp.ndarray:
+    """rows (n,) int32 arbitrary row indices, words (W,) uint32 resident
+    streams, table (K_total, F_total) block-diagonal -> (n, F_total).
+
+    Preconditions (enforced by ops.py): n % bn == 0, K_total % bk == 0,
+    every row index covered by column c's stream at word_offs[c].
+    """
+    c_count = row_offsets.shape[0]
+    k_rows, f = table.shape
+    w = words.shape[0]
+    grid = (n // bn, k_rows // bk)
+    return pl.pallas_call(
+        functools.partial(_adv_gather_packed_rows_kernel, bk=bk, dbs=dbs,
+                          word_offs=word_offs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i, k: (0, i)),
+            pl.BlockSpec((1, w), lambda i, k: (0, 0)),
+            pl.BlockSpec((c_count, 1), lambda i, k: (0, 0)),
+            pl.BlockSpec((c_count, 1), lambda i, k: (0, 0)),
+            pl.BlockSpec((bk, f), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, f), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), table.dtype),
+        interpret=interpret,
+    )(rows.reshape(1, n), words.reshape(1, w), row_offsets, card_limits,
+      table)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n", "bn", "bk", "dbs", "word_offs",
                                     "interpret"))

@@ -17,10 +17,17 @@ Three entry points:
 - :func:`adv_gather_packed` — the packed fast path: per-column device-width
   packed word windows go straight into a fused unpack→clamp→multi-hot-gather
   kernel, so int32 code streams never exist on host or device. Guarded by
-  :func:`packed_kernel_fits` (ΣK×ΣF VMEM budget): oversized plans fall back
+  :func:`fused_kernel_fits` (ΣK×ΣF VMEM budget): oversized plans fall back
   to :func:`adv_gather_packed_split` (device unpack + per-table gathers —
   still packed transfer, just unfused compute). :func:`autotune_packed`
   sweeps (bn, bk, bw) block shapes and caches the winner per workload shape.
+- :func:`adv_gather_packed_rows` — random-row packed gather: a device vector
+  of arbitrary row indices goes into a kernel that computes word index + bit
+  offset against the RESIDENT word streams, then unpack→clamp→multi-hot
+  gather in the same pass. Host->device traffic per call is the index vector
+  (4B × N), independent of column count; the same VMEM budget falls back to
+  :func:`adv_gather_packed_rows_split`. :func:`autotune_fused` is the int32
+  fused kernel's (bn, bk) sweep, ported from the packed path.
 """
 from __future__ import annotations
 
@@ -28,13 +35,16 @@ import timeit
 from dataclasses import dataclass
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.adv_gather.kernel import (adv_gather_pallas,
                                              adv_gather_multi_pallas,
-                                             adv_gather_packed_pallas)
+                                             adv_gather_packed_pallas,
+                                             adv_gather_packed_rows_pallas)
 from repro.kernels.adv_gather.ref import (adv_gather_ref, adv_gather_multi_ref,
-                                          adv_gather_packed_ref)
+                                          adv_gather_packed_ref,
+                                          adv_gather_packed_rows_ref)
 
 MAX_ONEHOT_K = 1 << 16
 # fused block-diagonal super-table must fit comfortably in VMEM (~16MB/core)
@@ -165,16 +175,22 @@ def adv_gather_fused(fused: FusedTables, codes: jnp.ndarray,
 # -- packed fast path: unpack fused into the gather -------------------------------
 
 
-def packed_kernel_fits(cards, dims,
-                       budget: int = PACKED_VMEM_BUDGET) -> bool:
-    """VMEM-budget guard for the fused packed kernel.
+def fused_kernel_fits(cards, dims,
+                      budget: int = PACKED_VMEM_BUDGET) -> bool:
+    """VMEM-budget guard for every fused block-diagonal kernel.
 
-    The block-diagonal super-table costs ΣK × ΣF f32; past ~16MB it no
-    longer fits in VMEM alongside the code windows, so callers must split
-    into unfused per-table gathers (:func:`adv_gather_packed_split`).
+    The super-table costs ΣK × ΣF f32; past ~16MB it no longer fits in VMEM
+    alongside the code/word tiles, so callers must split into unfused
+    per-table gathers. Originally the packed path's guard; the int32 fused
+    gather-concat kernel shares the exact same layout and therefore the
+    exact same budget (the ported ROADMAP item).
     """
     sk, sf = sum(cards), sum(dims)
     return sk <= MAX_ONEHOT_K and 4 * sk * sf <= budget
+
+
+# back-compat name from PR 2, when only the packed path was guarded
+packed_kernel_fits = fused_kernel_fits
 
 
 def adv_gather_packed(windows, dbs, fused_table: jnp.ndarray,
@@ -212,6 +228,79 @@ def adv_gather_packed(windows, dbs, fused_table: jnp.ndarray,
                                    dbs=tuple(dbs), word_offs=tuple(offs),
                                    interpret=interpret)
     return out[:n, :out_dim]
+
+
+def adv_gather_packed_rows(flat_words: jnp.ndarray, word_offs, dbs,
+                           fused_table: jnp.ndarray,
+                           row_offsets: jnp.ndarray,
+                           card_limits: jnp.ndarray, rows: jnp.ndarray,
+                           out_dim: int, bn: int = 256, bk: int = 512,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Random-row fused unpack+gather: row indices -> (len(rows), out_dim).
+
+    ``flat_words`` concatenates every column's resident device-width word
+    stream (column c's words start at ``word_offs[c]``, packed at ``dbs[c]``
+    bits); ``rows`` is a device vector of arbitrary table row indices. The
+    kernel computes word index + bit offset in-kernel, so the per-call
+    host->device traffic is the 4B × N index vector — int32 code streams
+    never exist, for ANY access pattern, not just aligned ranges.
+    """
+    if len(word_offs) != len(dbs):
+        raise ValueError("one word offset per device width required")
+    for db in dbs:
+        if 32 % db:
+            raise ValueError(f"device width {db} does not divide 32")
+    rows = jnp.asarray(rows, jnp.int32).reshape(-1)
+    n = rows.shape[0]
+    n_pad = _pad_to(max(n, 1), bn)
+    if n_pad > n:
+        # repeat the last row: always a valid index, outputs sliced off
+        rows = jnp.pad(rows, (0, n_pad - n), mode="edge")
+    out = adv_gather_packed_rows_pallas(rows, flat_words, row_offsets,
+                                        card_limits, fused_table, n=n_pad,
+                                        bn=bn, bk=bk, dbs=tuple(dbs),
+                                        word_offs=tuple(word_offs),
+                                        interpret=interpret)
+    return out[:n, :out_dim]
+
+
+def adv_gather_packed_rows_split(flat_words: jnp.ndarray, word_offs, dbs,
+                                 tables, rows: jnp.ndarray) -> jnp.ndarray:
+    """Unfused fallback for the random-row path: word gather + field
+    extract + XLA table gathers, all on device, index-only transfer.
+
+    Op-count-minimal XLA rendering (CPU per-op overhead dominates small
+    batches, so the per-column shift/mask pipeline of the oracle would cost
+    ~9 ops × C): ONE gather pulls every column's words from the
+    concatenated resident stream via a (C, N) word-index matrix, then one
+    broadcasted shift/mask extracts all fields at once — per-column work is
+    just the final table take. Bit-exact vs
+    :func:`adv_gather_packed_rows_ref`; used when ΣK×ΣF exceeds the VMEM
+    budget or ΣK exceeds the one-hot tiling guard.
+    """
+    rows = jnp.asarray(rows, jnp.int32).reshape(-1)
+    if not dbs:
+        return jnp.zeros((rows.shape[0], 0), jnp.float32)
+    # per-column constants, broadcast over the row axis (s = 32/db is a
+    # power of two, so // and % become shift and mask)
+    log2s = np.array([(32 // db).bit_length() - 1 for db in dbs], np.int32)
+    sub_mask = np.array([(32 // db) - 1 for db in dbs], np.int32)
+    dbv = np.array(dbs, np.uint32)
+    field_mask = np.array([(1 << db) - 1 if db < 32 else 0xFFFFFFFF
+                           for db in dbs], np.uint32)
+    offv = np.array(word_offs, np.int32)
+    widx = offv[:, None] + (rows[None, :] >> log2s[:, None])     # (C, N)
+    w = jnp.take(flat_words, widx.reshape(-1),
+                 mode="clip").reshape(len(dbs), -1)
+    sub = (rows[None, :] & sub_mask[:, None]).astype(jnp.uint32)
+    codes = ((w >> (sub * dbv[:, None])) & field_mask[:, None]) \
+        .astype(jnp.int32)
+    # stop XLA CPU from fusing the extraction into every table gather —
+    # the re-fused loop de-vectorizes and costs ~4x the two plain stages
+    codes = jax.lax.optimization_barrier(codes)
+    return jnp.concatenate(
+        [jnp.take(t, codes[c], axis=0, mode="clip")
+         for c, t in enumerate(tables)], axis=-1)
 
 
 def adv_gather_packed_split(windows, dbs, tables, n: int) -> jnp.ndarray:
@@ -259,4 +348,80 @@ def autotune_packed(windows, dbs, fused: FusedTables, n: int,
         if t < best_t:
             best, best_t = (bn, bk, bw), t
     _PACKED_TUNE_CACHE[key] = best
+    return best
+
+
+# the int32 fused kernel has no word-stream width to tune, so candidates are
+# (bn, bk) pairs — the same row/table tilings the packed sweep explores
+_FUSED_TUNE_CACHE: dict[tuple, tuple[int, int]] = {}
+FUSED_BLOCK_CANDIDATES = ((128, 512), (256, 256), (256, 512), (512, 512))
+_ROWS_TUNE_CACHE: dict[tuple, tuple[int, int]] = {}
+
+
+def autotune_packed_rows(flat_words, word_offs, dbs, fused: FusedTables,
+                         n: int, candidates=FUSED_BLOCK_CANDIDATES,
+                         repeats: int = 3,
+                         interpret: bool = True) -> tuple[int, int]:
+    """Sweep (bn, bk) for the random-row packed kernel; return the fastest.
+
+    Times :func:`adv_gather_packed_rows` ITSELF (its in-kernel word gather
+    has a different cost profile than the range kernel's contiguous
+    windows, so the range sweep's winner does not transfer). Cached per
+    (dbs, n, table-shape); uses row 0 repeated — gather cost in interpret
+    mode is index-value independent.
+    """
+    key = (tuple(dbs), n, tuple(fused.table.shape))
+    hit = _ROWS_TUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    rows = jnp.zeros(n, jnp.int32)
+    best, best_t = (fused.bn, fused.bk), float("inf")
+    for bn, bk in candidates:
+        if bn % 32 or fused.table.shape[0] % bk:
+            continue
+
+        def call(bn=bn, bk=bk):
+            adv_gather_packed_rows(flat_words, word_offs, dbs, fused.table,
+                                   fused.row_offsets, fused.card_limits,
+                                   rows, fused.out_dim, bn=bn, bk=bk,
+                                   interpret=interpret).block_until_ready()
+        call()                                     # compile outside the clock
+        t = min(timeit.repeat(call, number=1, repeat=repeats))
+        if t < best_t:
+            best, best_t = (bn, bk), t
+    _ROWS_TUNE_CACHE[key] = best
+    return best
+
+
+def autotune_fused(codes: jnp.ndarray, fused: FusedTables, n: int,
+                   candidates=FUSED_BLOCK_CANDIDATES, repeats: int = 3,
+                   interpret: bool = True) -> tuple[int, int]:
+    """Sweep (bn, bk) for the int32 fused gather-concat kernel (the packed
+    path's autotune, ported per the ROADMAP item); return the fastest.
+
+    ``codes`` is a representative (C, n) int32 batch used purely for wall-
+    clock timing. Invalid candidates (bk that does not tile the padded
+    super-table) are skipped; results are cached per (C, n, table-shape) so
+    a serving plan pays the sweep once per bucket shape.
+    """
+    codes = jnp.asarray(codes, jnp.int32)
+    key = (codes.shape[0], n, tuple(fused.table.shape))
+    hit = _FUSED_TUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    best, best_t = (fused.bn, fused.bk), float("inf")
+    for bn, bk in candidates:
+        if fused.table.shape[0] % bk:
+            continue
+
+        def call(bn=bn, bk=bk):
+            gather_fused_parts(fused.table, fused.row_offsets, codes,
+                               fused.out_dim, card_limits=fused.card_limits,
+                               bn=bn, bk=bk,
+                               interpret=interpret).block_until_ready()
+        call()                                     # compile outside the clock
+        t = min(timeit.repeat(call, number=1, repeat=repeats))
+        if t < best_t:
+            best, best_t = (bn, bk), t
+    _FUSED_TUNE_CACHE[key] = best
     return best

@@ -23,6 +23,30 @@ def adv_gather_multi_ref(codes: jnp.ndarray, tables) -> jnp.ndarray:
         axis=-1)
 
 
+def adv_gather_packed_rows_ref(words, dbs, tables,
+                               rows: jnp.ndarray) -> jnp.ndarray:
+    """Split/unfused XLA rendering of the random-row packed gather.
+
+    ``words[c]`` is column c's FULL device-width (dbs[c] | 32) resident word
+    stream; ``rows`` are arbitrary table row indices. Per column: gather the
+    owning word (``row // s``), shift/mask out the field (divisor widths
+    never straddle words), then gather from the column's table — the
+    device-side mirror of ``bitpack.packed_gather`` and the oracle (and
+    VMEM-budget fallback) for the fused ``adv_gather_packed_rows`` kernel.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    outs = []
+    for w, db, t in zip(words, dbs, tables):
+        s = 32 // db
+        wv = jnp.take(jnp.asarray(w, jnp.uint32), rows // s, mode="clip")
+        fields = wv >> ((rows % s).astype(jnp.uint32) * jnp.uint32(db))
+        if db < 32:
+            fields = fields & jnp.uint32((1 << db) - 1)
+        outs.append(jnp.take(t, fields.astype(jnp.int32), axis=0,
+                             mode="clip"))
+    return jnp.concatenate(outs, axis=-1)
+
+
 def adv_gather_packed_ref(windows, dbs, tables, n: int) -> jnp.ndarray:
     """Split/unfused XLA rendering of the packed fast path.
 

@@ -1,4 +1,4 @@
 from repro.serve.engine import ServeEngine, Request
-from repro.serve.feature_service import FeatureService, FeatureRequest
+from repro.serve.feature_service import FeatureService
 
-__all__ = ["ServeEngine", "Request", "FeatureService", "FeatureRequest"]
+__all__ = ["ServeEngine", "Request", "FeatureService"]

@@ -1,63 +1,72 @@
-"""FeatureService: async, double-buffered ADV feature serving.
+"""FeatureService: pump-driven, coalescing ADV feature serving.
 
 The serving-side rendering of the paper's §6 pipeline: learned features are
 served directly out of the data system ('codes in, features out'), not
-exported and recomputed. A request names table rows; the service slices the
-plan's stacked code matrix on the host, pads the batch to a static bucket
-shape (the same trick :class:`repro.serve.engine.ServeEngine` uses for token
-batches, so jit compiles once per bucket), ships ONE int32 code matrix to the
-device, and runs the fused ADV gather — optionally the one-pass multi-table
-Pallas kernel.
+exported and recomputed. A request names table rows; the service chunks it
+to static bucket shapes (the same trick :class:`repro.serve.engine.ServeEngine`
+uses for token batches, so jit compiles once per bucket) and queues the
+chunks on ONE unified launch queue.
 
-Dispatch is asynchronous and double-buffered: up to ``prefetch`` (>= 2)
-device gathers are kept in flight, so host code-slicing + ``device_put`` for
-request i+1 overlaps the device gather for request i. Results are retired to
-host only when the in-flight window is full or the caller asks for them.
+Serving architecture (request -> bucket -> unified coalescer -> pump ->
+launch)::
 
-Partitioned serving: with ``sharded=True`` the service builds per-IMCU shard
-plans (:meth:`FeaturePlan.imcu_shards`) and routes each request's rows to
-their owning partitions, so only partition-local code streams are touched —
-device ADV tables are shared across shards.
+    submit(rows) --chunk--> [unified launch queue] --group--> pump thread
+                                                                 |
+              results <-- retire (host) <-- in-flight ring <-- launch
+
+A dedicated background pump thread drains the queue: per tick it pops up to
+``coalesce`` queued chunks of the same bucket shape — aligned ranges and
+arbitrary row sets alike — and serves the whole group with ONE device
+launch. ``submit`` only enqueues; ``poll``/``result``/``drain`` only inspect
+or wait for results. No caller ever dispatches device work, so many client
+threads can submit/poll/result concurrently while exactly one thread talks
+to the device.
 
 Packed serving: over a ``FeaturePlan(packed=True)`` the word streams are
-DEVICE-resident (32/bits x smaller than the int32 matrix they replace) and a
-request whose rows form a word-aligned contiguous range dispatches as a pure
-device-side range gather — the fused unpack+gather kernel path — moving
-nothing to the device but a start index. Up to ``coalesce`` queued range
-chunks of the same bucket shape are served by ONE device launch
-(:meth:`FeatureExecutor._multi_range_future`), amortizing launch overhead
-across requests; ``poll``/``result``/``drain`` flush the coalescing buffer,
-so partial groups never add more than one queue-depth of latency.
-Arbitrary-row requests still work: they fall back to a per-batch host
-word-gather (O(batch) words touched, the full int32 stream is never
-materialized). ``stats['packed_ranges']`` / ``stats['bytes_h2d']`` report
-how much traffic the fast path saved.
+DEVICE-resident (32/bits x smaller than the int32 matrix they replace) and
+EVERY chunk — word-aligned range or arbitrary row set — is served by the
+indexed gather (:meth:`FeatureExecutor._rows_future`): the kernel computes
+word index + bit offset in-kernel against the resident streams, so the
+only host->device traffic is the padded (coalesce x bucket) int32 index
+vector. ``stats['bytes_h2d']`` therefore reports INDEX bytes (4B x padded
+rows, independent of column count), not code bytes; int32 plans still ship
+(C, bucket) code slices and account those. ``stats['packed_ranges']`` counts
+chunks that were word-aligned contiguous runs (the scan pattern), served by
+the same unified launch as everything else.
+
+The pump keeps up to ``prefetch`` (>= 2) launches in flight, retiring the
+oldest when the window fills — device gathers for tick i+1 overlap the host
+retire of tick i. Backpressure grows groups naturally: while the device
+works, fresh chunks pile into the queue and the next tick coalesces more.
+``pause``/``resume`` hold launches (queueing continues) so callers can force
+maximal coalescing; ``shutdown`` (also via the context-manager protocol)
+drains the queue and joins the pump thread. Services hold a live thread —
+call :meth:`shutdown` (or use ``with``) when disposing of one.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core.pipeline import FeatureExecutor, FeaturePipeline, FeaturePlan
+from repro.core.pipeline import (FeatureExecutor, FeaturePipeline,
+                                 FeaturePlan, pad_rows_edge)
 
 DEFAULT_BUCKETS = (64, 256, 1024)
 
 
 @dataclass
-class FeatureRequest:
-    """One queued featurization request (``rows`` are table row indices)."""
-    rows: np.ndarray
+class _Chunk:
+    """One bucket-shaped slice of a request, queued for the pump."""
     ticket: int
-    submitted_at: float = field(default_factory=time.perf_counter)
-
-    @property
-    def n(self) -> int:
-        return int(self.rows.shape[0])
+    rows: np.ndarray        # raw (unpadded) row indices for this chunk
+    n: int                  # valid rows (== rows.shape[0])
+    j: int                  # chunk index within the request
+    bucket: int             # static launch shape this chunk pads to
 
 
 class FeatureService:
@@ -77,7 +86,8 @@ class FeatureService:
         self.packed = plan.packed
         if self.packed and sharded:
             raise ValueError("sharded serving routes int32 slices; packed "
-                             "plans serve ranges from device-resident words")
+                             "plans serve indexed gathers from "
+                             "device-resident words")
         self.prefetch = prefetch
         self.buckets = tuple(sorted(buckets))
         self.use_kernel = use_kernel
@@ -93,14 +103,10 @@ class FeatureService:
             self.buckets = tuple(sorted(
                 {-(-b // bn) * bn for b in self.buckets}))
         elif self.packed:
-            # word-aligned buckets so range chunks slice on word boundaries
+            # word-aligned buckets keep the range iterator's discipline and
+            # one compiled indexed shape per bucket
             self.buckets = tuple(sorted(
                 {-(-b // 32) * 32 for b in self.buckets}))
-        if self.packed:
-            # one capacity put up front: any in-range request chunk can then
-            # be served without mid-stream device re-puts
-            self._executor.ensure_range_capacity(
-                plan.n_rows + self.buckets[-1])
         if sharded:
             self._shard_bounds = plan.imcu_bounds()
             self._shards = plan.imcu_shards()
@@ -108,44 +114,131 @@ class FeatureService:
         if coalesce < 1:
             raise ValueError("coalesce must be >= 1")
         self.coalesce = coalesce if self.packed else 1
+        # -- pump-shared state: everything below is guarded by _lock --
+        # unified launch queue: every chunk of every request, FIFO
+        self._queue: deque[_Chunk] = deque()
         # one entry per dispatched LAUNCH: (device buffer, parts) where each
-        # part is (ticket, n_valid_rows, chunk_idx, k) — k indexes into a
-        # coalesced (K, bucket, F) buffer, None for a single-chunk buffer.
-        # The prefetch window bounds launches, so an oversized request can't
-        # pile unbounded output buffers on device.
+        # part is (ticket, n_valid_rows, chunk_idx, row_off) — row_off is
+        # the chunk's start row in the flat (rows, F) launch buffer
         self._inflight: deque[tuple[jnp.ndarray, list]] = deque()
-        # queued-but-unlaunched range chunks, per bucket shape:
-        # bucket -> [(ticket, start_row, n_valid, chunk_idx), ...]
-        self._range_buf: dict[int, list] = {}
         self._partial: dict[int, dict[int, np.ndarray]] = {}
         self._chunks_total: dict[int, int] = {}
         self._results: dict[int, np.ndarray] = {}
+        self._claimed: set[int] = set()     # tickets a result() call waits on
         self._next_ticket = 0
         self._submitted_at: dict[int, float] = {}
+        self._busy = 0              # launches/retires mid-flight in the pump
+        self._paused = False
+        self._shutdown = False
+        self._pump_error: BaseException | None = None
         self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
                       "batches": 0, "launches": 0, "max_inflight": 0,
                       "latency_s_total": 0.0, "completed": 0,
                       "packed_ranges": 0, "bytes_h2d": 0}
+        # three conditions over ONE lock, so each event wakes only the
+        # threads that care (on small-core hosts a spurious wake steals GIL
+        # time from the XLA compute the pump is trying to overlap):
+        #   _work — the pump sleeps here; submit/pause/shutdown notify
+        #   _cv   — result()/poll() waiters; notified when a ticket lands
+        #   _idle — drain() waiters; notified when the pump goes fully idle
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._cv = threading.Condition(self._lock)
+        self._idle = threading.Condition(self._lock)
+        self._pump = threading.Thread(target=self._pump_loop,
+                                      name="feature-service-pump",
+                                      daemon=True)
+        self._pump.start()
+
+    # -- lifecycle ------------------------------------------------------------------
+    def __enter__(self) -> "FeatureService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop the pump thread and join it.
+
+        ``drain=True`` (default) serves everything already queued first (an
+        orderly drain — results stay retrievable via :meth:`result` /
+        :meth:`drain`); ``drain=False`` discards queued-but-unlaunched
+        chunks, forgetting their tickets. Idempotent.
+        """
+        with self._lock:
+            if not drain:
+                dropped = {ch.ticket for ch in self._queue}
+                self._queue.clear()
+                for t in dropped:
+                    self._chunks_total.pop(t, None)
+                    self._partial.pop(t, None)
+                    self._submitted_at.pop(t, None)
+            self._shutdown = True
+            self._notify_everyone()
+        self._pump.join()
+
+    def _notify_everyone(self) -> None:
+        """Wake every waiter class (lock held) — shutdown/error paths."""
+        self._work.notify_all()
+        self._cv.notify_all()
+        self._idle.notify_all()
+
+    def _check_pump(self) -> None:
+        if self._pump_error is not None:
+            raise RuntimeError("feature-service pump thread died") \
+                from self._pump_error
+
+    def pause(self) -> None:
+        """Hold launches (submissions still queue) — lets a caller batch a
+        burst of submits into maximally coalesced launches."""
+        with self._lock:
+            self._paused = True
+            self._work.notify_all()
+
+    def resume(self) -> None:
+        with self._lock:
+            self._paused = False
+            self._work.notify_all()
 
     # -- request intake -------------------------------------------------------------
     def submit(self, rows: np.ndarray) -> int:
         """Enqueue a featurization request; returns a ticket for the result.
 
-        Dispatch happens immediately (async): the device starts gathering
-        while the caller goes on to submit more work.
+        Only queues: the background pump picks the chunks up, coalesces them
+        with other queued work and launches — the caller goes on submitting
+        while the device gathers.
         """
         rows = np.asarray(rows, dtype=np.int64).reshape(-1)
         if rows.size == 0:
             raise ValueError("empty request")
         if rows.min() < 0 or rows.max() >= self.plan.n_rows:
             raise IndexError(f"row indices out of range [0, {self.plan.n_rows})")
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        req = FeatureRequest(rows=rows, ticket=ticket)
-        self._submitted_at[ticket] = req.submitted_at
-        self.stats["requests"] += 1
-        self.stats["rows"] += rows.size
-        self._dispatch(req)
+        # chunking and the O(chunk) alignment scan are pure functions of
+        # the request — do them OUTSIDE the lock the pump contends for
+        cap = self.buckets[-1]
+        pieces, padded, aligned = [], 0, 0
+        for j, start in enumerate(range(0, rows.shape[0], cap)):
+            chunk = rows[start:start + cap]
+            bucket = self._bucket(chunk.shape[0])
+            padded += bucket - chunk.shape[0]
+            if self.packed and self._aligned_range(chunk):
+                aligned += 1
+            pieces.append((chunk, chunk.shape[0], j, bucket))
+        with self._lock:
+            self._check_pump()
+            if self._shutdown:
+                raise RuntimeError("service is shut down")
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._submitted_at[ticket] = time.perf_counter()
+            self.stats["requests"] += 1
+            self.stats["rows"] += rows.size
+            self.stats["padded_rows"] += padded
+            self.stats["packed_ranges"] += aligned
+            self._chunks_total[ticket] = len(pieces)
+            for chunk, n, j, bucket in pieces:
+                self._queue.append(_Chunk(ticket, chunk, n, j, bucket))
+            self._work.notify_all()
         return ticket
 
     # -- bucketing ------------------------------------------------------------------
@@ -157,15 +250,10 @@ class FeatureService:
         return self.buckets[-1]
 
     def _slice_padded(self, rows: np.ndarray, bucket: int) -> np.ndarray:
-        """Host work for one chunk: fancy-index + right-pad to bucket shape."""
-        pad = bucket - rows.shape[0]
-        if pad:
-            # repeat the last row: always a valid index, rows sliced off later
-            rows = np.concatenate([rows, np.full(pad, rows[-1])])
-            self.stats["padded_rows"] += pad
+        """Host work for one int32 chunk: fancy-index + right-pad to bucket."""
+        rows = pad_rows_edge(rows, bucket)
         if self.sharded:
             return self._gather_sharded_codes(rows)
-        # packed plans word-gather just these rows (no int32 stream exists)
         return self.plan.host_codes(rows)
 
     def _gather_sharded_codes(self, rows: np.ndarray) -> np.ndarray:
@@ -188,136 +276,230 @@ class FeatureService:
             out[:, idx_in[mask]] = self._shards[s].codes_matrix[:, local]
         return out
 
-    # -- the async pump ----------------------------------------------------------
     @staticmethod
     def _aligned_range(rows: np.ndarray) -> bool:
-        """True for a word-aligned contiguous run (the packed fast path)."""
-        return (int(rows[0]) % 32 == 0
-                and int(rows[-1]) - int(rows[0]) == rows.shape[0] - 1
-                and bool((np.diff(rows) == 1).all()))
+        """True for a word-aligned contiguous run (the scan pattern) —
+        tracked in ``stats['packed_ranges']``; served by the same unified
+        indexed launch as arbitrary row sets. The O(1) prefix checks gate
+        the O(n) scan: this runs under the service lock on every submit."""
+        if int(rows[0]) % 32 or \
+                int(rows[-1]) - int(rows[0]) != rows.shape[0] - 1:
+            return False
+        return bool((np.diff(rows) == 1).all())
 
-    def _dispatch(self, req: FeatureRequest) -> None:
-        starts = list(range(0, req.n, self.buckets[-1]))
-        self._chunks_total[req.ticket] = len(starts)
-        for j, start in enumerate(starts):
-            rows = req.rows[start:start + self.buckets[-1]]
-            bucket = self._bucket(rows.shape[0])
-            if self.packed and self._aligned_range(rows):
-                # pure device-side range gather off the resident words: the
-                # only host->device traffic is the start index. Queue the
-                # chunk; a full coalescing group launches as ONE gather.
-                buf = self._range_buf.setdefault(bucket, [])
-                buf.append((req.ticket, int(rows[0]), rows.shape[0], j))
-                self.stats["packed_ranges"] += 1
-                self.stats["padded_rows"] += bucket - rows.shape[0]
-                if len(buf) >= self.coalesce:
-                    self._flush_bucket(bucket)
-                continue
-            if len(self._inflight) >= self.prefetch:
-                self._retire_one()
-            codes = self._slice_padded(rows, bucket)
-            self.stats["bytes_h2d"] += int(codes.nbytes)
-            dev = self._executor.gather_device(jax.device_put(codes))
-            self._push_inflight(dev, [(req.ticket, rows.shape[0], j, None)])
+    # -- the background pump ---------------------------------------------------------
+    def _pump_loop(self) -> None:
+        """Drain the unified queue until shutdown: coalesce -> launch ->
+        retire, with a ``prefetch``-deep in-flight window. The ONLY thread
+        that dispatches device work or blocks on device buffers.
 
-    def _push_inflight(self, dev, parts: list) -> None:
-        self._inflight.append((dev, parts))
-        self.stats["batches"] += len(parts)
-        self.stats["launches"] += 1
-        self.stats["max_inflight"] = max(self.stats["max_inflight"],
-                                         len(self._inflight))
-
-    def _flush_bucket(self, bucket: int) -> None:
-        """Launch one coalesced multi-range gather for a bucket's queue.
-
-        The start vector is padded to the full ``coalesce`` width (repeating
-        the last start; surplus outputs are simply never read) so every
-        launch shares ONE compiled (K, bucket) shape — a partial group must
-        not pay a fresh XLA trace.
+        Wake discipline: the pump only notifies ``_cv`` when a ticket's
+        result actually landed and ``_idle`` when it has nothing left to do
+        — launching and window churn wake nobody, so client threads stay
+        parked (and off the GIL) while the device works.
         """
-        buf = self._range_buf.pop(bucket, [])
-        if not buf:
-            return
-        if len(self._inflight) >= self.prefetch:
-            self._retire_one()
-        starts = [c[1] for c in buf]
-        starts += [starts[-1]] * (self.coalesce - len(starts))
-        dev = self._executor._multi_range_future(np.array(starts), bucket)
-        self._push_inflight(dev, [(t, n, j, k)
-                                  for k, (t, _, n, j) in enumerate(buf)])
+        try:
+            while True:
+                with self._lock:
+                    while True:
+                        # shutdown overrides pause so a drain always finishes
+                        held = self._paused and not self._shutdown
+                        can_launch = (bool(self._queue) and not held
+                                      and len(self._inflight) < self.prefetch)
+                        can_retire = bool(self._inflight) and (
+                            len(self._inflight) >= self.prefetch
+                            or not self._queue or held)
+                        if can_launch or can_retire:
+                            break
+                        if self._shutdown and not self._queue \
+                                and not self._inflight:
+                            return
+                        self._idle.notify_all()
+                        self._work.wait()
+                    if can_launch:
+                        job = self._take_group()
+                    else:
+                        job = None
+                        entry = self._inflight.popleft()
+                    self._busy += 1
+                if job is not None:
+                    dev, parts, nbytes = self._launch(job)
+                    with self._lock:
+                        self._inflight.append((dev, parts))
+                        self.stats["launches"] += 1
+                        self.stats["batches"] += len(parts)
+                        self.stats["bytes_h2d"] += nbytes
+                        self.stats["max_inflight"] = max(
+                            self.stats["max_inflight"], len(self._inflight))
+                        self._busy -= 1
+                else:
+                    dev, parts = entry
+                    arr = np.asarray(dev)       # blocks on device, unlocked
+                    with self._lock:
+                        if self._retire(arr, parts):
+                            self._cv.notify_all()
+                        self._busy -= 1
+                        if not self._queue and not self._inflight:
+                            self._idle.notify_all()
+        except BaseException as e:            # pragma: no cover - defensive
+            with self._lock:
+                self._pump_error = e
+                self._notify_everyone()
 
-    def _flush_ranges(self) -> None:
-        for bucket in list(self._range_buf):
-            self._flush_bucket(bucket)
+    def _take_group(self) -> list[_Chunk]:
+        """Pop up to ``coalesce`` queued chunks sharing the head chunk's
+        bucket shape (FIFO otherwise preserved) — one launch group. Stops
+        scanning once the group is full and splices the tail back in bulk,
+        so a long queued burst costs O(Q) per tick, not O(Q) per chunk."""
+        bucket = self._queue[0].bucket
+        group: list[_Chunk] = []
+        rest: deque[_Chunk] = deque()
+        while self._queue and len(group) < self.coalesce:
+            ch = self._queue.popleft()
+            (group if ch.bucket == bucket else rest).append(ch)
+        rest.extend(self._queue)
+        self._queue = rest
+        return group
 
-    def _retire_one(self) -> None:
-        dev, parts = self._inflight.popleft()
-        arr = np.asarray(dev)
-        for ticket, n, j, k in parts:
-            piece = (arr if k is None else arr[k])[:n]
+    def _launch(self, group: list[_Chunk]):
+        """Dispatch ONE device launch for a coalesced group (pump thread).
+
+        Packed plans: a flat (coalesce * bucket,) int32 index vector —
+        padded to the full coalesce width so every launch shares one
+        compiled shape — into the indexed gather; host->device traffic is
+        the indices alone. int32 plans: the classic stacked code slice for
+        a single chunk. Either way the launch buffer is a flat (rows, F)
+        array and each part records its chunk's row offset into it.
+        """
+        bucket = group[0].bucket
+        if self.packed:
+            mat = np.empty((self.coalesce, bucket), np.int32)
+            for i, ch in enumerate(group):
+                mat[i] = pad_rows_edge(ch.rows, bucket)
+            mat[len(group):] = mat[len(group) - 1]   # surplus lanes unread
+            dev = self._executor._rows_future(mat.reshape(-1))
+            parts = [(ch.ticket, ch.n, ch.j, i * bucket)
+                     for i, ch in enumerate(group)]
+            return dev, parts, mat.nbytes
+        ch = group[0]
+        codes = self._slice_padded(ch.rows, bucket)
+        # np codes go straight into the jit'd gather — its argument
+        # transfer is the one host->device code shipment
+        dev = self._executor.gather_device(codes)
+        return dev, [(ch.ticket, ch.n, ch.j, 0)], int(codes.nbytes)
+
+    def _retire(self, arr: np.ndarray, parts: list) -> bool:
+        """Distribute one retired launch buffer to its tickets (lock held);
+        True if any ticket completed (its waiters need a wake)."""
+        landed = False
+        for ticket, n, j, off in parts:
+            total = self._chunks_total.get(ticket)
+            if total is None:
+                continue                    # dropped by shutdown(drain=False)
+            piece = arr[off:off + n]
+            if piece.size * 2 < arr.size:
+                # a small chunk of a big coalesced launch buffer: copy so
+                # the result doesn't pin the whole (coalesce*bucket, F)
+                # array for its lifetime (views keep the base alive)
+                piece = piece.copy()
             chunks = self._partial.setdefault(ticket, {})
             chunks[j] = piece
-            if len(chunks) < self._chunks_total[ticket]:
+            if len(chunks) < total:
                 continue
             del self._partial[ticket]
             del self._chunks_total[ticket]
             ordered = [chunks[i] for i in range(len(chunks))]
             self._results[ticket] = (ordered[0] if len(ordered) == 1
                                      else np.concatenate(ordered, axis=0))
+            landed = True
             t0 = self._submitted_at.pop(ticket, None)
             if t0 is not None:
                 self.stats["latency_s_total"] += time.perf_counter() - t0
                 self.stats["completed"] += 1
-
-    def _pending(self, ticket: int) -> bool:
-        return (any(t == ticket for _, parts in self._inflight
-                    for t, _, _, _ in parts)
-                or any(t == ticket for buf in self._range_buf.values()
-                       for t, _, _, _ in buf))
+        return landed
 
     # -- result retrieval ----------------------------------------------------------
     def poll(self, ticket: int) -> bool:
-        """True once the ticket's result is on host (non-blocking): queued
-        range groups are launched and in-flight buffers that are already
-        finished are retired first. Raises KeyError for unknown/already-
-        collected tickets (like ``result``) so a poll loop can't spin
-        forever on a bad ticket."""
-        self._flush_ranges()
-        while self._inflight and self._inflight[0][0].is_ready():
-            self._retire_one()
-        if ticket in self._results:
-            return True
-        if not self._pending(ticket):
-            raise KeyError(f"unknown or already-collected ticket {ticket}")
-        return False
+        """True once the ticket's result is on host. Non-blocking and
+        dispatch-free: the pump owns all launching/retiring. Raises KeyError
+        for unknown/already-collected tickets (like ``result``) so a poll
+        loop can't spin forever on a bad ticket."""
+        with self._lock:
+            self._check_pump()
+            if ticket in self._results:
+                return True
+            if ticket not in self._chunks_total:
+                raise KeyError(f"unknown or already-collected ticket {ticket}")
+            return False
+
+    def _queued_while_paused(self, ticket: int | None) -> bool:
+        """True when blocking on this work would deadlock: the pump is
+        paused (and not shutting down, which overrides pause) and the
+        awaited chunks are still queued — nothing will ever launch them
+        until ``resume()``. Lock held."""
+        if not self._paused or self._shutdown:
+            return False
+        if ticket is None:
+            return bool(self._queue)
+        return any(ch.ticket == ticket for ch in self._queue)
 
     def result(self, ticket: int) -> np.ndarray:
-        """Block until the ticket's features are on host and return them."""
-        if ticket not in self._results and not self._pending(ticket):
-            raise KeyError(f"unknown or already-collected ticket {ticket}")
-        self._flush_ranges()
-        while ticket not in self._results:
-            self._retire_one()
-        return self._results.pop(ticket)
+        """Block until the ticket's features are on host and return them.
+
+        Purely a wait: the pump launches and retires; this just sleeps on
+        the service condition until the ticket lands (or is unknown).
+        Raises RuntimeError instead of deadlocking if the service is
+        paused with this ticket's chunks still unlaunched.
+        """
+        with self._lock:
+            # claim the ticket so a concurrent drain() can't sweep it away
+            # between the pump landing it and this thread waking up
+            self._claimed.add(ticket)
+            try:
+                while True:
+                    self._check_pump()
+                    if ticket in self._results:
+                        return self._results.pop(ticket)
+                    if ticket not in self._chunks_total:
+                        raise KeyError(
+                            f"unknown or already-collected ticket {ticket}")
+                    if self._queued_while_paused(ticket):
+                        raise RuntimeError(
+                            f"ticket {ticket} is queued but the service is "
+                            "paused — resume() before blocking on results")
+                    self._cv.wait(timeout=0.5)
+            finally:
+                self._claimed.discard(ticket)
 
     def drain(self) -> dict[int, np.ndarray]:
-        """Retire everything in flight; return {ticket: features} collected."""
-        self._flush_ranges()
-        while self._inflight:
-            self._retire_one()
-        out, self._results = self._results, {}
-        return out
+        """Wait for the pump to finish everything queued/in flight; return
+        {ticket: features} collected — except tickets another thread is
+        blocked on in result(), which stay theirs. Raises RuntimeError
+        instead of deadlocking if called while paused with chunks queued."""
+        with self._lock:
+            while self._queue or self._inflight or self._busy:
+                self._check_pump()
+                if self._queued_while_paused(None):
+                    raise RuntimeError("queue is held by pause() — "
+                                       "resume() before drain()")
+                self._idle.wait(timeout=0.5)
+            self._check_pump()
+            out = {t: r for t, r in self._results.items()
+                   if t not in self._claimed}
+            for t in out:
+                del self._results[t]
+            return out
 
     # -- streaming convenience -------------------------------------------------------
     def serve_stream(self, row_batches):
-        """Featurize an iterator of row-index batches with the double buffer.
+        """Featurize an iterator of row-index batches through the pump.
 
-        Yields (rows, features) in submission order while keeping ``prefetch``
-        batches in flight.
+        Yields (rows, features) in submission order while keeping up to
+        ``prefetch`` launches in flight on the pump side.
         """
         def gen():
-            # submit() already runs the prefetch-deep double buffer; this
-            # FIFO only stops the producer racing ahead of the consumer
+            # the pump runs the prefetch-deep window; this FIFO only stops
+            # the producer racing ahead of the consumer
             pending: deque[tuple[np.ndarray, int]] = deque()
             for rows in row_batches:
                 rows = np.asarray(rows)

