@@ -16,15 +16,35 @@ row set — is served by the indexed gather kernel, which computes word index
 bytes (4B x padded rows, independent of column count): random requests ship
 indices, never codes. int32 plans still ship (C, bucket) code slices.
 
+Mesh-sharded serving (``sharded=True`` over a packed plan): the table's
+IMCU partitions become per-shard RESIDENT word-stream slices, each
+committed to its own mesh device (``jax.device_put`` placement via
+``repro.distributed.sharding.serve_devices`` — round-robin when shards and
+devices differ in count). A request's rows are bucketed by owning IMCU at
+submit; whole-shard requests (the clustered per-user pattern) route with
+two scalar bisects and no per-row work. One multiplexing pump keeps
+``prefetch`` launches in flight PER SHARD and coalesces each shard's
+same-bucket chunks into single launches, so independent shards' gathers
+run concurrently on their own devices — compute moves to the shard that
+owns the data, never shard bytes to one compute device. ``linger_us``
+bounds how long a pump holds a partial coalescing group open under light
+load (fuller groups for a bounded latency); ``drain()`` force-flushes
+lingering groups. Per-shard attribution: ``stats['shard_launches'/
+'shard_bytes_h2d']`` and ``plan.stats['per_shard']`` roll up into totals.
+
 Builds a columnar table, compiles a FeaturePlan (device-resident fused ADV
-tables), then serves featurization requests four ways:
+tables), then serves featurization requests five ways:
 
 1. request queue with tickets (submit / result),
 2. arbitrary-row ("millions of users") lookups over a packed plan — the
    coalescer folds them into single index-only launches,
-3. streaming double-buffered iteration (serve_stream),
-4. a streaming insert followed by an incremental plan refresh — only the
-   columns whose dictionaries changed are re-put on device.
+3. mesh-sharded serving: per-IMCU resident shards + routed pump launches
+   (run under XLA_FLAGS=--xla_force_host_platform_device_count=4 to see
+   true multi-device placement on CPU),
+4. streaming double-buffered iteration (serve_stream),
+5. a streaming insert followed by an incremental plan refresh — only the
+   columns whose dictionaries changed are re-put on device; appended rows
+   extend the open-ended LAST shard, so sharded services keep serving.
 
 Run:  PYTHONPATH=src python examples/feature_service.py
 """
@@ -76,13 +96,35 @@ def main() -> None:
               f"{st['requests']} requests, h2d={st['bytes_h2d']}B "
               f"(indices only, ~4B/row x {svcp.coalesce} coalesced)")
 
-    # 3. streaming
+    # 3. mesh-sharded serving: per-IMCU resident word-stream shards, each
+    # on its own device; rows route to their owning shard and each shard's
+    # launches coalesce independently (linger trades <=1ms for fuller
+    # groups). Requests here are clustered per-user blocks — the whole
+    # request lands on one shard, so routing is two bisects.
+    from repro.distributed.sharding import serve_mesh
+    mesh = serve_mesh()                # 1-D ('shard',) mesh over the devices
+    plan_mesh = FeaturePlan(table, features, packed=True)
+    with FeatureService(plan_mesh, sharded=True, buckets=(512,),
+                        coalesce=8, linger_us=1000,
+                        devices=mesh.devices.tolist()) as svcs:
+        for s in rng.integers(0, (n - 512) // 32, 64) * 32:
+            svcs.submit(np.arange(s, s + 512))
+        svcs.drain()
+        st = svcs.stats
+        print(f"mesh serving: {svcs.n_shards} shards over "
+              f"{mesh.shape['shard']} mesh device(s), "
+              f"launches per shard={st['shard_launches']}, "
+              f"h2d per shard={st['shard_bytes_h2d']}B (indices only); "
+              f"plan per-shard words_put="
+              f"{[s['words_put'] for s in plan_mesh.stats['per_shard']]}")
+
+    # 4. streaming
     stream = svc.serve_stream(rng.integers(0, n, 256) for _ in range(8))
     for rows, out in stream:
         pass
     print(f"streamed 8 batches, last={out.shape}")
 
-    # 4. streaming insert + incremental refresh
+    # 5. streaming insert + incremental refresh
     new_codes = {
         "age": table["age"].dictionary.add_rows(np.array([101, 102])),
         "state": table["state"].dictionary.add_rows(np.array([7, 7])),

@@ -9,7 +9,8 @@
 from repro.core.adv import AugmentedDictionary, ADV
 from repro.core.feature_spec import FeatureSpec, FeatureSet
 from repro.core.pipeline import (FeaturePipeline, FeaturePlan,
-                                 FeatureExecutor)
+                                 FeatureExecutor, ShardedFeatureExecutor)
 
 __all__ = ["AugmentedDictionary", "ADV", "FeatureSpec", "FeatureSet",
-           "FeaturePipeline", "FeaturePlan", "FeatureExecutor"]
+           "FeaturePipeline", "FeaturePlan", "FeatureExecutor",
+           "ShardedFeatureExecutor"]

@@ -37,6 +37,12 @@ Layering (this module):
   start index — the fused ``adv_gather_packed`` kernel (or its split XLA
   fallback past the VMEM budget) unpacks in-register and gathers in one
   pass.
+- :class:`ShardedFeatureExecutor` — the mesh half. ``imcu_shards()`` of a
+  packed plan yields per-IMCU word-stream SLICES (zero-copy at word-aligned
+  boundaries, seam repack otherwise); each slice is committed to its own
+  serve-mesh device with replicated ADV tables, and arbitrary-row requests
+  are routed to the shard that owns them — featurization compute moves to
+  the columnar data, never shard bytes to one compute device.
 - :class:`FeaturePipeline` — the original facade, kept API-compatible.
 
 Data-movement accounting is built in (``bytes_moved_*``) so benchmarks and
@@ -56,6 +62,7 @@ path (b = dictionary bits, db = tpu_width(b) <= 2b, F = feature dim):
 """
 from __future__ import annotations
 
+import bisect
 import functools
 from collections import deque
 from dataclasses import dataclass
@@ -175,6 +182,28 @@ def _packed_fused_rows(flat_words, table, row_offsets, card_limits, rows, *,
                                           out_dim, bn=bn, bk=bk)
 
 
+class _ShardStats(dict):
+    """Per-shard stats that roll every numeric delta up into the parent.
+
+    ``imcu_shards()`` used to hand every shard the PARENT's dict, so
+    per-shard ``words_put``/``tables_put`` counts were unattributable. Each
+    shard now owns one of these: ``shard.stats['words_put'] += 1`` bumps the
+    shard-local counter AND forwards the delta to the plan total, so the
+    parent's numbers keep meaning 'whole plan' while each shard's dict
+    answers 'who did it'.
+    """
+
+    def __init__(self, parent: dict, init: Mapping | None = None):
+        super().__init__(init or {})
+        self._parent = parent
+
+    def __setitem__(self, key, value):
+        old = self.get(key, 0)
+        if isinstance(value, (int, float)) and isinstance(old, (int, float)):
+            self._parent[key] = self._parent.get(key, 0) + (value - old)
+        super().__setitem__(key, value)
+
+
 @dataclass
 class ColumnPlan:
     """One column's compiled gather plan."""
@@ -219,12 +248,19 @@ class FeaturePlan:
             self._n_rows = table.n_rows
             self.packed_words: list[np.ndarray] = []
             self.device_bits: list[int] = []
+            # packed_versions bumps on ANY stream change (repack or append);
+            # packed_layout_versions bumps ONLY on a width-boundary repack.
+            # Interior IMCU shards key their slices on the layout version —
+            # a streaming append rewrites the tail, so only the open-ended
+            # LAST shard (and the parent) must re-sync for it
             self.packed_versions: list[int] = []
+            self.packed_layout_versions: list[int] = []
             for p in self.plans:
                 words, db = table[p.column].device_words()
                 self.packed_words.append(words)
                 self.device_bits.append(db)
                 self.packed_versions.append(0)
+                self.packed_layout_versions.append(0)
         else:
             codes = [table[p.column].codes() for p in self.plans]
             # (C, N): one row-aligned int32 code stream per planned column —
@@ -336,6 +372,7 @@ class FeaturePlan:
                     self.packed_words[i] = pack_bits(codes, db)
                     self.device_bits[i] = db
                     self.packed_versions[i] += 1
+                    self.packed_layout_versions[i] += 1
                     self.stats["words_repacked"] += 1
             if fresh is not None:
                 for i in range(len(self.plans)):
@@ -363,23 +400,38 @@ class FeaturePlan:
     def imcu_shards(self) -> list["FeaturePlan"]:
         """One plan per IMCU partition, sharing this plan's device tables.
 
-        Shard k's code matrix is a zero-copy view into this plan's already
-        materialized matrix, windowed to the IMCU's row range.
-        Device-resident ADV tables (and the fused super-table) are shared
-        and co-invalidated, not re-put.
+        int32 plans: shard k's code matrix is a zero-copy view into this
+        plan's already materialized matrix, windowed to the IMCU's row
+        range. Packed plans: shard k carries its own per-column word-stream
+        slice (:class:`_PackedShardPlan`) — zero-copy when the IMCU boundary
+        is word-aligned at the column's device width, repacked once per
+        refresh generation only at unaligned seams — so a sharded executor
+        can keep each slice resident on its own mesh device. The LAST shard
+        is open-ended: rows appended by :meth:`refresh` extend it. Either
+        way device-resident ADV tables (and the fused super-table) are
+        shared and co-invalidated, not re-put, and every shard gets its own
+        stats dict whose counts roll up into this plan's totals
+        (``stats['per_shard']`` indexes them).
         """
+        bounds = self.imcu_bounds()
+        shard_stats = [
+            _ShardStats(self.stats, {k: 0 for k, v in self.stats.items()
+                                     if isinstance(v, (int, float))})
+            for _ in bounds]
+        self.stats["per_shard"] = shard_stats
         if self.packed:
-            raise NotImplementedError(
-                "per-IMCU shard plans serve from the int32 layout; packed "
-                "plans serve ranges directly from device-resident words")
+            return [_PackedShardPlan(self, start, stop, st,
+                                     last=(i == len(bounds) - 1))
+                    for i, ((start, stop), st) in
+                    enumerate(zip(bounds, shard_stats))]
         shards = []
-        for start, stop in self.imcu_bounds():
+        for (start, stop), st in zip(bounds, shard_stats):
             shard = FeaturePlan.__new__(FeaturePlan)
             shard.table = self.table
             shard.features = self.features
             shard.augmented = self.augmented
             shard.packed = False
-            shard.stats = self.stats               # shared accounting
+            shard.stats = st                       # rolls up into self.stats
             shard.plans = self.plans               # shared device tables
             shard._codes_matrix = self._codes_matrix[:, start:stop]
             shard._fused_box = self._fused_box      # shared, co-invalidated
@@ -421,6 +473,110 @@ class FeaturePlan:
         return int(self._codes_matrix.nbytes)
 
 
+class _PackedShardPlan(FeaturePlan):
+    """One IMCU partition of a packed plan: a per-column word-stream slice.
+
+    Shares the parent's AugmentedDictionaries, device-resident ADV tables
+    and fused super-table box (co-invalidated on refresh); what is
+    partitioned is exactly the resident word streams. A shard's slice of
+    column i is zero-copy when the partition boundary is word-aligned at
+    the column's device width (``start % (32/db) == 0`` — always true for
+    the default 2**19-row IMCUs); an unaligned seam repacks JUST this
+    shard's rows, once per parent refresh generation (cached against
+    ``packed_versions[i]``). ``last=True`` marks the open-ended tail shard:
+    rows appended by the PARENT's :meth:`FeaturePlan.refresh` extend it, so
+    a sharded service keeps serving streaming inserts without resharding.
+    Refresh always goes through the parent — the word streams, dictionaries
+    and versions live there.
+    """
+
+    def __init__(self, parent: FeaturePlan, start: int, stop: int,
+                 stats: _ShardStats, last: bool = False):
+        # deliberately NOT calling FeaturePlan.__init__: every layout
+        # artifact is derived from the parent
+        self._parent = parent
+        self._start = start
+        self._stop = stop
+        self._last = last
+        self.packed = True
+        self.table = parent.table
+        self.features = parent.features
+        self.augmented = parent.augmented
+        self.plans = parent.plans               # shared device tables
+        self._fused_box = parent._fused_box     # shared, co-invalidated
+        self.stats = stats                      # rolls up into parent totals
+        self._words_cache: dict[int, tuple[int, np.ndarray]] = {}
+
+    @property
+    def shard_bounds(self) -> tuple[int, int]:
+        """[start, stop) in parent rows (stop tracks appends when last)."""
+        stop = self._parent.n_rows if self._last else self._stop
+        return self._start, max(stop, self._start)
+
+    @property
+    def _n_rows(self) -> int:                   # FeaturePlan.n_rows reads this
+        start, stop = self.shard_bounds
+        return stop - start
+
+    @property
+    def device_bits(self) -> list[int]:
+        return self._parent.device_bits
+
+    @property
+    def packed_versions(self) -> list[int]:
+        # executors key their resident-stream sync on these, so a parent
+        # refresh transparently re-puts the shard views it actually moved:
+        # a width-boundary repack changes every shard's slice (layout
+        # version), but a streaming APPEND only rewrites the open-ended
+        # tail — interior shards' bytes are untouched, so they keep their
+        # resident streams (no n_shards x full re-put per insert)
+        if self._last:
+            return self._parent.packed_versions
+        return self._parent.packed_layout_versions
+
+    @property
+    def packed_words(self) -> list[np.ndarray]:
+        return [self._shard_words(i) for i in range(len(self.plans))]
+
+    def _shard_words(self, i: int) -> np.ndarray:
+        parent = self._parent
+        version = self.packed_versions[i]
+        hit = self._words_cache.get(i)
+        if hit is not None and hit[0] == version:
+            return hit[1]
+        db = parent.device_bits[i]
+        s = 32 // db
+        start, stop = self.shard_bounds
+        if start % s == 0:                      # word-aligned boundary
+            words = parent.packed_words[i][start // s:(stop + s - 1) // s]
+        else:                                   # seam: repack this shard only
+            codes = packed_gather(parent.packed_words[i], db,
+                                  np.arange(start, stop))
+            words = pack_bits(codes, db)
+            self.stats["words_repacked"] += 1
+        self._words_cache[i] = (version, words)
+        return words
+
+    def refresh(self, new_codes=None) -> int:
+        raise RuntimeError("shard plans are views — refresh the parent "
+                           "FeaturePlan; every shard re-syncs automatically")
+
+
+class _DeviceTableCache:
+    """Per-DEVICE cache of placed ADV tables (plain + fused).
+
+    Shard executors that share a device (more IMCU shards than mesh
+    devices) share one of these, so the replicated tables exist once per
+    device — never once per shard — and ``tables_put`` counts real
+    transfers."""
+
+    def __init__(self):
+        self.tables: tuple | None = None
+        self.tables_key: tuple | None = None
+        self.fused_src = None
+        self.fused = None
+
+
 class FeatureExecutor:
     """Run-time half: jit'd stacked gather + double-buffered batch iterator.
 
@@ -442,7 +598,8 @@ class FeatureExecutor:
     """
 
     def __init__(self, plan: FeaturePlan, use_kernel: bool = False,
-                 prefetch: int = 2, autotune: bool = False):
+                 prefetch: int = 2, autotune: bool = False, device=None,
+                 table_cache: _DeviceTableCache | None = None):
         if prefetch < 1:
             raise ValueError("prefetch depth must be >= 1")
         self.plan = plan
@@ -450,6 +607,16 @@ class FeatureExecutor:
         self.prefetch = prefetch
         self.autotune = autotune
         self.packed = plan.packed
+        # mesh placement: device=None serves from the process default (the
+        # original single-device behavior); a concrete device COMMITS every
+        # resident operand (word stream, per-plan tables, fused super-table)
+        # there, so launches against this executor run on that device — the
+        # sharded-serving building block (one executor per IMCU shard).
+        # ``table_cache`` lets executors sharing a device share the placed
+        # table copies (ShardedFeatureExecutor passes one per device).
+        self.device = device
+        self._tcache = table_cache if table_cache is not None \
+            else _DeviceTableCache()
         self._jit_take = jax.jit(self._take_impl)
         self._jit_fused = jax.jit(self._fused_impl,
                                   static_argnames=("out_dim", "bn", "bk"))
@@ -496,13 +663,42 @@ class FeatureExecutor:
                                           card_limits=card_limits,
                                           bn=bn, bk=bk)
 
+    def _device_tables(self) -> tuple:
+        """Per-plan fused tables as launch arguments, on this executor's
+        device. device=None passes the plan's own resident tables through
+        (shared across executors, refresh flows as jit arguments); a
+        committed executor keeps its own device copies, re-put only when a
+        column's AugmentedDictionary version moves."""
+        if self.device is None:
+            return tuple(p.fused_table for p in self.plan.plans)
+        key = tuple(p.aug_version for p in self.plan.plans)
+        if self._tcache.tables_key != key:
+            self._tcache.tables = tuple(
+                jax.device_put(p.fused_host, self.device)
+                for p in self.plan.plans)
+            self._tcache.tables_key = key
+            self.plan.stats["tables_put"] += len(self.plan.plans)
+        return self._tcache.tables
+
+    def _device_fused(self) -> adv_ops.FusedTables:
+        """The shared block-diagonal super-table, committed to this
+        executor's device (replicated per shard; the word streams are what
+        stays partitioned). Re-placed only when a refresh rebuilds it."""
+        fused = self.plan.fused_tables()
+        if self.device is None:
+            return fused
+        if self._tcache.fused_src is not fused:
+            self._tcache.fused = adv_ops.place_fused(fused, self.device)
+            self._tcache.fused_src = fused
+        return self._tcache.fused
+
     def _fused_blocks(self, batch: int) -> tuple[int, int]:
         """(bn, bk) for the int32 fused kernel — swept per batch shape when
         ``autotune=True`` (the packed path's sweep, ported), else the
         fuse-time defaults."""
         blocks = self._fused_blocks_cache.get(batch)
         if blocks is None:
-            fused = self.plan.fused_tables()
+            fused = self._device_fused()
             if self.autotune:
                 probe = jnp.zeros((len(self.plan.plans), batch), jnp.int32)
                 blocks = adv_ops.autotune_fused(probe, fused, batch)
@@ -514,13 +710,12 @@ class FeatureExecutor:
     def gather_device(self, dev_codes: jnp.ndarray) -> jnp.ndarray:
         """(C, B) stacked device codes -> (B, out_dim) concatenated features."""
         if self.kernel_active:
-            fused = self.plan.fused_tables()
+            fused = self._device_fused()
             bn, bk = self._fused_blocks(int(dev_codes.shape[1]))
             return self._jit_fused(dev_codes, fused.table, fused.row_offsets,
                                    fused.card_limits, out_dim=fused.out_dim,
                                    bn=bn, bk=bk)
-        return self._jit_take(dev_codes,
-                              tuple(p.fused_table for p in self.plan.plans))
+        return self._jit_take(dev_codes, self._device_tables())
 
     # -- packed fast path: device-resident words, range batches -------------------
     def ensure_range_capacity(self, limit: int) -> None:
@@ -562,7 +757,8 @@ class FeatureExecutor:
             off += need
         flat = (np.concatenate(parts) if parts
                 else np.zeros(0, np.uint32))
-        self._flat_words = jax.device_put(np.ascontiguousarray(flat))
+        self._flat_words = jax.device_put(np.ascontiguousarray(flat),
+                                          self.device)
         self._word_offs = tuple(offs)
         self._words_sig = sig
         plan.stats["words_put"] += 1
@@ -572,7 +768,7 @@ class FeatureExecutor:
         batch shape on first use when requested, else fuse-time defaults."""
         blocks = self._blocks.get(batch)
         if blocks is None:
-            fused = self.plan.fused_tables()
+            fused = self._device_fused()
             if self.autotune:
                 dbs = tuple(self.plan.device_bits)
                 wins, flat = [], self._flat_words
@@ -590,7 +786,7 @@ class FeatureExecutor:
         kernel's) when ``autotune=True``, else fuse-time defaults."""
         blocks = self._rows_blocks_cache.get(n)
         if blocks is None:
-            fused = self.plan.fused_tables()
+            fused = self._device_fused()
             if self.autotune:
                 blocks = adv_ops.autotune_packed_rows(
                     self._flat_words, self._word_offs,
@@ -614,15 +810,14 @@ class FeatureExecutor:
         self.ensure_range_capacity(max(start + batch, self.plan.n_rows))
         dbs = tuple(self.plan.device_bits)
         if self.kernel_active:
-            fused = self.plan.fused_tables()
+            fused = self._device_fused()
             bn, bk, bw = self._kernel_blocks(batch)
             return _packed_fused_range(
                 self._flat_words, fused.table, fused.row_offsets,
                 fused.card_limits, start, dbs=dbs, offs=self._word_offs,
                 batch=batch, out_dim=fused.out_dim, bn=bn, bk=bk, bw=bw)
         return _packed_split_range(
-            self._flat_words,
-            tuple(p.fused_table for p in self.plan.plans),
+            self._flat_words, self._device_tables(),
             start, dbs=dbs, offs=self._word_offs, batch=batch)
 
     def _multi_range_future(self, starts, batch: int) -> jnp.ndarray:
@@ -643,15 +838,14 @@ class FeatureExecutor:
         sv = jnp.asarray(starts, jnp.int32)
         dbs = tuple(self.plan.device_bits)
         if self.kernel_active:
-            fused = self.plan.fused_tables()
+            fused = self._device_fused()
             bn, bk, bw = self._kernel_blocks(batch)
             return _packed_fused_multi(
                 self._flat_words, fused.table, fused.row_offsets,
                 fused.card_limits, sv, dbs=dbs, offs=self._word_offs,
                 batch=batch, out_dim=fused.out_dim, bn=bn, bk=bk, bw=bw)
         return _packed_split_multi(
-            self._flat_words,
-            tuple(p.fused_table for p in self.plan.plans),
+            self._flat_words, self._device_tables(),
             sv, dbs=dbs, offs=self._word_offs, batch=batch)
 
     def batch_range(self, start: int, n: int) -> jnp.ndarray:
@@ -683,7 +877,7 @@ class FeatureExecutor:
             else np.ascontiguousarray(rows, dtype=np.int32)
         dbs = tuple(self.plan.device_bits)
         if self.kernel_active:
-            fused = self.plan.fused_tables()
+            fused = self._device_fused()
             bn, bk = self._rows_kernel_blocks(int(dev_rows.shape[0]))
             return _packed_fused_rows(
                 self._flat_words, fused.table, fused.row_offsets,
@@ -691,8 +885,7 @@ class FeatureExecutor:
                 word_offs=self._word_offs, out_dim=fused.out_dim,
                 bn=bn, bk=bk)
         return _packed_split_rows(
-            self._flat_words,
-            tuple(p.fused_table for p in self.plan.plans),
+            self._flat_words, self._device_tables(),
             dev_rows, dbs=dbs, word_offs=self._word_offs)
 
     # -- single batch -------------------------------------------------------------
@@ -719,7 +912,8 @@ class FeatureExecutor:
                     f"row indices out of range [0, {self.plan.n_rows})")
             rows = pad_rows_edge(rows, _pad32(n))
             return self._rows_future(rows.astype(np.int32))[:n]
-        return self.gather_device(jax.device_put(self.slice_codes(row_idx)))
+        return self.gather_device(jax.device_put(self.slice_codes(row_idx),
+                                                 self.device))
 
     # -- double-buffered iteration --------------------------------------------------
     def batches(self, batch_size: int, seed: int = 0,
@@ -774,12 +968,118 @@ class FeatureExecutor:
 
         inflight: deque[tuple[np.ndarray, jnp.ndarray]] = deque()
         for idx in indices():
-            dev_codes = jax.device_put(self.slice_codes(idx))
+            dev_codes = jax.device_put(self.slice_codes(idx), self.device)
             inflight.append((idx, self.gather_device(dev_codes)))
             if len(inflight) >= self.prefetch:
                 yield inflight.popleft()
         while inflight:
             yield inflight.popleft()
+
+
+class ShardedFeatureExecutor:
+    """Mesh half of per-IMCU serving: one committed executor per shard.
+
+    The plan is partitioned by :meth:`FeaturePlan.imcu_shards` and each
+    shard's resident word stream is placed on its own mesh device
+    (:func:`repro.distributed.sharding.serve_devices` round-robins shards
+    over the serve mesh when devices outnumber or undernumber shards) —
+    'move compute to the data': a featurization launch for rows owned by
+    shard k runs on shard k's device against shard-local operands only.
+    ADV tables (K-row, amortized) are replicated per device; the word
+    streams — the part that scales with table rows — are what stays
+    partitioned, so aggregate resident bytes stay at Σ stream bytes.
+
+    :meth:`batch` is the synchronous routed gather (host buckets the rows
+    by owning shard, per-shard sub-launches run concurrently, results are
+    reassembled in request order). The serving pump drives the per-shard
+    executors directly (one launch queue per shard) for the async path.
+    """
+
+    def __init__(self, plan: FeaturePlan, use_kernel: bool = False,
+                 prefetch: int = 2, autotune: bool = False, devices=None):
+        if not plan.packed:
+            raise ValueError("sharded executors serve packed plans; int32 "
+                             "plans route host code slices instead")
+        from repro.distributed.sharding import serve_devices
+        self.plan = plan
+        self.shards = plan.imcu_shards()
+        self.starts = np.array([b[0] for b in plan.imcu_bounds()], np.int64)
+        self._starts_list = self.starts.tolist()   # bisect beats np for O(1)
+        self.devices = serve_devices(len(self.shards), devices)
+        # tables replicate once per DEVICE, not per shard: shards placed on
+        # the same device (more IMCUs than mesh devices) share the copies
+        caches = {id(dev): _DeviceTableCache() for dev in self.devices}
+        self.executors = [
+            FeatureExecutor(sp, use_kernel=use_kernel, prefetch=prefetch,
+                            autotune=autotune, device=dev,
+                            table_cache=caches[id(dev)])
+            for sp, dev in zip(self.shards, self.devices)]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def shard_of(self, rows: np.ndarray) -> np.ndarray:
+        """Owning shard per row. Rows past the last compile-time bound
+        (streaming appends) belong to the open-ended last shard."""
+        s = np.searchsorted(self.starts, rows, side="right") - 1
+        return np.minimum(s, len(self.starts) - 1)
+
+    def _shard_scalar(self, row: int) -> int:
+        return min(bisect.bisect_right(self._starts_list, row) - 1,
+                   len(self._starts_list) - 1)
+
+    def route(self, rows: np.ndarray, lo: int | None = None,
+              hi: int | None = None):
+        """Bucket request rows by owning shard: [(shard, local_rows, dest)].
+
+        ``dest`` gives each local row's position in the original request
+        (``None`` = the whole request in order — the clustered-lookup fast
+        path: two scalar bisects, no per-row work, no index
+        materialization). Local rows are shard-relative, so every
+        sub-launch's indices stay within its device's stream. Callers that
+        already know the request's min/max row pass them in (the submit hot
+        path validates on them anyway).
+        """
+        rows = np.asarray(rows, np.int64).reshape(-1)
+        if lo is None:
+            lo, hi = int(rows.min()), int(rows.max())
+        s_lo, s_hi = self._shard_scalar(lo), self._shard_scalar(hi)
+        if s_lo == s_hi:                   # whole request owned by one shard
+            return [(s_lo, rows - self.starts[s_lo], None)]
+        shard = self.shard_of(rows)
+        out = []
+        for s in np.unique(shard):
+            (dest,) = np.nonzero(shard == s)
+            out.append((int(s), rows[dest] - self.starts[s], dest))
+        return out
+
+    def batch(self, row_idx: np.ndarray) -> jnp.ndarray:
+        """Routed featurization of arbitrary rows, request order preserved.
+
+        Dispatches every shard's sub-launch before blocking on any result,
+        so independent shards gather concurrently.
+        """
+        rows = np.asarray(row_idx, np.int64).reshape(-1)
+        n = rows.shape[0]
+        if n == 0:
+            return jnp.zeros((0, self.plan.out_dim), jnp.float32)
+        lo, hi = int(rows.min()), int(rows.max())
+        if lo < 0 or hi >= self.plan.n_rows:
+            raise IndexError(
+                f"row indices out of range [0, {self.plan.n_rows})")
+        routed = self.route(rows, lo, hi)
+        futs = []
+        for s, local, dest in routed:      # dispatch all, block after
+            padded = pad_rows_edge(local, _pad32(local.shape[0]))
+            futs.append((self.executors[s]._rows_future(
+                padded.astype(np.int32)), local.shape[0], dest))
+        if len(futs) == 1:
+            return futs[0][0][:n]
+        out = np.empty((n, self.plan.out_dim), np.float32)
+        for fut, m, dest in futs:
+            out[dest] = np.asarray(fut)[:m]
+        return jnp.asarray(out)
 
 
 class FeaturePipeline:

@@ -192,3 +192,37 @@ def state_pspecs(cfg: ModelConfig, state_tree, mesh: Mesh):
 def to_shardings(mesh: Mesh, pspec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# feature-serving rules (per-IMCU resident word-stream shards)
+# ---------------------------------------------------------------------------
+def serve_mesh(devices=None) -> Mesh:
+    """1-D ('shard',) mesh over the serving devices.
+
+    The serving analogue of the training meshes above: each mesh device
+    holds the resident word streams (and replicated ADV tables) of the IMCU
+    shards assigned to it, so featurization launches run where the columnar
+    data lives — compute moves to the shard, not shard bytes to one device.
+    """
+    devices = list(devices) if devices is not None else jax.devices()
+    if not devices:
+        raise ValueError("no devices to build a serve mesh over")
+    return Mesh(np.array(devices), ("shard",))
+
+
+def serve_devices(n_shards: int, devices=None) -> list:
+    """Owning device for each of ``n_shards`` IMCU shards, round-robin.
+
+    Round-robin (not blocked) assignment keeps a streaming-append workload
+    balanced: fresh IMCUs land on successive devices instead of piling onto
+    the last one. With fewer devices than shards, multiple shards share a
+    device (their resident streams stay distinct; only placement coincides
+    — the divisibility-aware fallback the param rules above use too).
+    """
+    if n_shards < 1:
+        raise ValueError(f"need at least one shard, got {n_shards}")
+    devices = list(devices) if devices is not None else jax.devices()
+    if not devices:
+        raise ValueError("no devices to place shards on")
+    return [devices[i % len(devices)] for i in range(n_shards)]

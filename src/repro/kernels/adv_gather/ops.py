@@ -134,6 +134,23 @@ def fuse_tables(tables, bn: int = 256, bk: int = 512,
                        dims=dims, cards=cards, bn=bn, bk=bk)
 
 
+def place_fused(fused: FusedTables, device) -> FusedTables:
+    """Copy of ``fused`` with its device arrays committed to ``device``.
+
+    Mesh-sharded serving replicates the block-diagonal super-table to every
+    shard's device (the tables are K-row sized — 'created once, easily
+    amortized' — while the word streams stay partitioned): per-shard
+    launches then run entirely against device-local operands, never pulling
+    the table across the mesh.
+    """
+    import dataclasses
+    return dataclasses.replace(
+        fused,
+        table=jax.device_put(fused.table, device),
+        row_offsets=jax.device_put(fused.row_offsets, device),
+        card_limits=jax.device_put(fused.card_limits, device))
+
+
 def gather_fused_parts(table: jnp.ndarray, row_offsets: jnp.ndarray,
                        codes: jnp.ndarray, out_dim: int,
                        card_limits: jnp.ndarray | None = None,

@@ -1,72 +1,90 @@
-"""FeatureService: pump-driven, coalescing ADV feature serving.
+"""FeatureService: pump-driven, coalescing, mesh-shardable ADV serving.
 
 The serving-side rendering of the paper's §6 pipeline: learned features are
 served directly out of the data system ('codes in, features out'), not
 exported and recomputed. A request names table rows; the service chunks it
 to static bucket shapes (the same trick :class:`repro.serve.engine.ServeEngine`
 uses for token batches, so jit compiles once per bucket) and queues the
-chunks on ONE unified launch queue.
+chunks on the launch queue of the shard that owns their rows.
 
-Serving architecture (request -> bucket -> unified coalescer -> pump ->
-launch)::
+Serving architecture (request -> route -> per-shard coalescer -> one
+multiplexing pump -> per-shard launch streams)::
 
-    submit(rows) --chunk--> [unified launch queue] --group--> pump thread
-                                                                 |
-              results <-- retire (host) <-- in-flight ring <-- launch
+    submit(rows) --route by IMCU--> [shard 0 queue] --group--\\   pump
+                               \\--> [shard 1 queue] --group--->  (one
+                                          ...                /   thread)
+                 launch async on dev 0 / dev 1 / ... <-------/
+              results <-- retire into per-ticket buffers (request order)
 
-A dedicated background pump thread drains the queue: per tick it pops up to
-``coalesce`` queued chunks of the same bucket shape — aligned ranges and
-arbitrary row sets alike — and serves the whole group with ONE device
-launch. ``submit`` only enqueues; ``poll``/``result``/``drain`` only inspect
-or wait for results. No caller ever dispatches device work, so many client
-threads can submit/poll/result concurrently while exactly one thread talks
-to the device.
+Unsharded services have exactly one queue (the PR 3 architecture,
+unchanged); ``sharded=True`` over a packed plan builds one
+:class:`repro.core.ShardedFeatureExecutor` — per-IMCU resident word-stream
+shards, each committed to its own mesh device. A request's rows are
+bucketed by owning IMCU on host at submit time (whole-request fast path
+when one shard owns them all — the clustered 'user block' pattern); each
+shard's queue coalesces up to ``coalesce`` same-bucket chunks into ONE
+launch against its local shard, with ``prefetch`` launches in flight *per
+shard*, so independent shards' gathers run concurrently on their own
+devices instead of serializing through one launch stream. ONE pump thread
+multiplexes every stream — launches dispatch asynchronously, so the
+devices overlap while the pump runs ahead; a thread per shard would fight
+the client for the GIL on exactly the small-core hosts that need the
+overlap most (measured 0.3-0.6x; dispatch is the cheap part). Results are
+reassembled in request order via per-chunk destination maps.
 
-Packed serving: over a ``FeaturePlan(packed=True)`` the word streams are
-DEVICE-resident (32/bits x smaller than the int32 matrix they replace) and
-EVERY chunk — word-aligned range or arbitrary row set — is served by the
-indexed gather (:meth:`FeatureExecutor._rows_future`): the kernel computes
-word index + bit offset in-kernel against the resident streams, so the
-only host->device traffic is the padded (coalesce x bucket) int32 index
-vector. ``stats['bytes_h2d']`` therefore reports INDEX bytes (4B x padded
-rows, independent of column count), not code bytes; int32 plans still ship
-(C, bucket) code slices and account those. ``stats['packed_ranges']`` counts
-chunks that were word-aligned contiguous runs (the scan pattern), served by
-the same unified launch as everything else.
+Packed serving ships indices only: every chunk — word-aligned range or
+arbitrary row set — is served by the indexed gather
+(:meth:`FeatureExecutor._rows_future`): the kernel computes word index +
+bit offset against the resident streams, so the per-launch host->device
+traffic is the padded (coalesce x bucket) int32 index vector.
+``stats['bytes_h2d']`` therefore reports INDEX bytes; int32 plans still
+ship (C, bucket) code slices and account those. Per-shard attribution
+lives in ``stats['shard_launches'] / ['shard_batches'] /
+['shard_bytes_h2d']`` (lists indexed by shard, summing to the totals).
 
-The pump keeps up to ``prefetch`` (>= 2) launches in flight, retiring the
-oldest when the window fills — device gathers for tick i+1 overlap the host
-retire of tick i. Backpressure grows groups naturally: while the device
-works, fresh chunks pile into the queue and the next tick coalesces more.
-``pause``/``resume`` hold launches (queueing continues) so callers can force
-maximal coalescing; ``shutdown`` (also via the context-manager protocol)
-drains the queue and joins the pump thread. Services hold a live thread —
-call :meth:`shutdown` (or use ``with``) when disposing of one.
+``linger_us`` adds a latency-aware pump policy (bounded-latency
+coalescing): under light load a pump may hold a PARTIAL launch group open
+until the group's oldest chunk has been queued ``linger_us`` microseconds,
+trading that bounded wait for fuller groups (backpressure already grows
+groups under heavy load, so lingering only ever engages when the queue is
+shallow). ``linger_us=0`` (default) launches whatever is queued per tick —
+the PR 3 behavior.
+
+``pause``/``resume`` hold launches (queueing continues) so callers can
+force maximal coalescing; ``shutdown`` (also via the context-manager
+protocol) drains the queues and joins every pump thread. Services hold
+live threads — call :meth:`shutdown` (or use ``with``) when disposing of
+one.
 """
 from __future__ import annotations
 
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.pipeline import (FeatureExecutor, FeaturePipeline,
-                                 FeaturePlan, pad_rows_edge)
+                                 FeaturePlan, ShardedFeatureExecutor,
+                                 pad_rows_edge)
 
 DEFAULT_BUCKETS = (64, 256, 1024)
 
 
 @dataclass
 class _Chunk:
-    """One bucket-shaped slice of a request, queued for the pump."""
+    """One bucket-shaped slice of a request, queued for a shard's pump."""
     ticket: int
-    rows: np.ndarray        # raw (unpadded) row indices for this chunk
+    rows: np.ndarray        # raw (unpadded) SHARD-LOCAL row indices
     n: int                  # valid rows (== rows.shape[0])
-    j: int                  # chunk index within the request
     bucket: int             # static launch shape this chunk pads to
+    shard: int              # owning shard (0 for unsharded services)
+    # destination of these rows in the request output: an int start for a
+    # contiguous run, or an explicit position vector for routed splits
+    dest: int | np.ndarray = 0
+    t_enq: float = field(default=0.0, compare=False)
 
 
 class FeatureService:
@@ -75,27 +93,40 @@ class FeatureService:
     def __init__(self, plan: FeaturePlan | FeaturePipeline, *,
                  use_kernel: bool = False, prefetch: int = 2,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 sharded: bool = False, coalesce: int = 4):
+                 sharded: bool = False, coalesce: int = 4,
+                 linger_us: float = 0.0, devices=None):
         if isinstance(plan, FeaturePipeline):
             plan = plan.plan
         if prefetch < 2:
             raise ValueError("FeatureService is double-buffered: prefetch >= 2")
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"bad bucket sizes {buckets!r}")
+        if linger_us < 0:
+            raise ValueError("linger_us must be >= 0")
         self.plan = plan
         self.packed = plan.packed
-        if self.packed and sharded:
-            raise ValueError("sharded serving routes int32 slices; packed "
-                             "plans serve indexed gathers from "
-                             "device-resident words")
         self.prefetch = prefetch
         self.buckets = tuple(sorted(buckets))
         self.use_kernel = use_kernel
         self.sharded = sharded
-        # ONE executor either way — device ADV tables are shared; sharding
-        # only changes where the host code slices come from
-        self._executor = FeatureExecutor(plan, use_kernel=use_kernel,
-                                         prefetch=prefetch)
+        self._linger_s = linger_us * 1e-6
+        if sharded and self.packed:
+            # mesh mode: per-IMCU word-stream shards, one committed executor
+            # + one launch queue/window per shard, all fed by the one pump
+            self._sharded_ex = ShardedFeatureExecutor(
+                plan, use_kernel=use_kernel, prefetch=prefetch,
+                devices=devices)
+            self._executors = self._sharded_ex.executors
+            self._executor = self._executors[0]
+            self._n_shards = self._sharded_ex.n_shards
+        else:
+            # ONE executor — device ADV tables are shared; legacy int32
+            # sharding only changes where the host code slices come from
+            self._sharded_ex = None
+            self._executor = FeatureExecutor(plan, use_kernel=use_kernel,
+                                             prefetch=prefetch)
+            self._executors = [self._executor]
+            self._n_shards = 1
         if self._executor.kernel_active:
             # align buckets to the fused kernel's row tile, else every
             # bucket gets padded AGAIN to a bn multiple inside the kernel
@@ -107,7 +138,7 @@ class FeatureService:
             # one compiled indexed shape per bucket
             self.buckets = tuple(sorted(
                 {-(-b // 32) * 32 for b in self.buckets}))
-        if sharded:
+        if sharded and not self.packed:
             self._shard_bounds = plan.imcu_bounds()
             self._shards = plan.imcu_shards()
             self._starts = np.array([b[0] for b in self._shard_bounds])
@@ -115,36 +146,44 @@ class FeatureService:
             raise ValueError("coalesce must be >= 1")
         self.coalesce = coalesce if self.packed else 1
         # -- pump-shared state: everything below is guarded by _lock --
-        # unified launch queue: every chunk of every request, FIFO
-        self._queue: deque[_Chunk] = deque()
-        # one entry per dispatched LAUNCH: (device buffer, parts) where each
-        # part is (ticket, n_valid_rows, chunk_idx, row_off) — row_off is
-        # the chunk's start row in the flat (rows, F) launch buffer
-        self._inflight: deque[tuple[jnp.ndarray, list]] = deque()
-        self._partial: dict[int, dict[int, np.ndarray]] = {}
+        # one launch queue + one in-flight window PER SHARD; each in-flight
+        # entry is (device buffer, parts) where each part is
+        # (ticket, n_valid_rows, dest, row_off) — row_off is the chunk's
+        # start row in the flat (rows, F) launch buffer
+        self._queues = [deque() for _ in range(self._n_shards)]
+        self._inflights = [deque() for _ in range(self._n_shards)]
+        self._busy = [0] * self._n_shards   # launches/retires mid-flight
         self._chunks_total: dict[int, int] = {}
+        self._chunks_done: dict[int, int] = {}
+        self._ticket_rows: dict[int, int] = {}
+        self._out_buf: dict[int, np.ndarray] = {}
         self._results: dict[int, np.ndarray] = {}
         self._claimed: set[int] = set()     # tickets a result() call waits on
         self._next_ticket = 0
         self._submitted_at: dict[int, float] = {}
-        self._busy = 0              # launches/retires mid-flight in the pump
         self._paused = False
         self._shutdown = False
+        self._flushes = 0               # drain()s in progress: no lingering
         self._pump_error: BaseException | None = None
         self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
                       "batches": 0, "launches": 0, "max_inflight": 0,
                       "latency_s_total": 0.0, "completed": 0,
-                      "packed_ranges": 0, "bytes_h2d": 0}
-        # three conditions over ONE lock, so each event wakes only the
-        # threads that care (on small-core hosts a spurious wake steals GIL
-        # time from the XLA compute the pump is trying to overlap):
-        #   _work — the pump sleeps here; submit/pause/shutdown notify
-        #   _cv   — result()/poll() waiters; notified when a ticket lands
-        #   _idle — drain() waiters; notified when the pump goes fully idle
+                      "packed_ranges": 0, "bytes_h2d": 0, "split_requests": 0,
+                      "shard_launches": [0] * self._n_shards,
+                      "shard_batches": [0] * self._n_shards,
+                      "shard_bytes_h2d": [0] * self._n_shards}
+        # conditions over ONE lock, so each event wakes only the threads
+        # that care (on small-core hosts a spurious wake steals GIL time
+        # from the XLA compute the pumps are trying to overlap):
+        #   _work — the pump sleeps here; submits that queued work (and
+        #           pause/shutdown/drain-flush) notify
+        #   _cv       — result()/poll() waiters; notified when a ticket lands
+        #   _idle     — drain() waiters; notified when all pumps go idle
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._cv = threading.Condition(self._lock)
         self._idle = threading.Condition(self._lock)
+        self._seq = 0                       # global launch order for retires
         self._pump = threading.Thread(target=self._pump_loop,
                                       name="feature-service-pump",
                                       daemon=True)
@@ -157,8 +196,13 @@ class FeatureService:
     def __exit__(self, *exc) -> None:
         self.shutdown()
 
+    @property
+    def n_shards(self) -> int:
+        """Launch streams this service serves through (1 unsharded)."""
+        return self._n_shards
+
     def shutdown(self, drain: bool = True) -> None:
-        """Stop the pump thread and join it.
+        """Stop every pump thread and join them.
 
         ``drain=True`` (default) serves everything already queued first (an
         orderly drain — results stay retrievable via :meth:`result` /
@@ -167,11 +211,15 @@ class FeatureService:
         """
         with self._lock:
             if not drain:
-                dropped = {ch.ticket for ch in self._queue}
-                self._queue.clear()
+                dropped = set()
+                for q in self._queues:
+                    dropped.update(ch.ticket for ch in q)
+                    q.clear()
                 for t in dropped:
                     self._chunks_total.pop(t, None)
-                    self._partial.pop(t, None)
+                    self._chunks_done.pop(t, None)
+                    self._ticket_rows.pop(t, None)
+                    self._out_buf.pop(t, None)
                     self._submitted_at.pop(t, None)
             self._shutdown = True
             self._notify_everyone()
@@ -201,44 +249,79 @@ class FeatureService:
             self._work.notify_all()
 
     # -- request intake -------------------------------------------------------------
+    def _route(self, rows: np.ndarray, lo: int, hi: int):
+        """(shard, local_rows, dest) pieces for a request's rows.
+
+        Single-pump services own everything in shard 0 (dest None = whole
+        request in order). Multi-shard packed services bucket by owning
+        IMCU — the clustered fast path (all rows in one shard, the common
+        'per-user block' lookup) routes without materializing an index.
+        """
+        if self._n_shards == 1:
+            return [(0, rows, None)]
+        return self._sharded_ex.route(rows, lo, hi)
+
     def submit(self, rows: np.ndarray) -> int:
         """Enqueue a featurization request; returns a ticket for the result.
 
-        Only queues: the background pump picks the chunks up, coalesces them
-        with other queued work and launches — the caller goes on submitting
-        while the device gathers.
+        Only queues: the background pumps pick the chunks up, coalesce them
+        with other queued work owned by the same shard and launch — the
+        caller goes on submitting while the devices gather.
         """
         rows = np.asarray(rows, dtype=np.int64).reshape(-1)
         if rows.size == 0:
             raise ValueError("empty request")
-        if rows.min() < 0 or rows.max() >= self.plan.n_rows:
+        lo, hi = int(rows.min()), int(rows.max())
+        if lo < 0 or hi >= self.plan.n_rows:
             raise IndexError(f"row indices out of range [0, {self.plan.n_rows})")
-        # chunking and the O(chunk) alignment scan are pure functions of
-        # the request — do them OUTSIDE the lock the pump contends for
+        # routing, chunking and the O(chunk) alignment scan are pure
+        # functions of the request — do them OUTSIDE the lock
         cap = self.buckets[-1]
         pieces, padded, aligned = [], 0, 0
-        for j, start in enumerate(range(0, rows.shape[0], cap)):
-            chunk = rows[start:start + cap]
-            bucket = self._bucket(chunk.shape[0])
-            padded += bucket - chunk.shape[0]
-            if self.packed and self._aligned_range(chunk):
-                aligned += 1
-            pieces.append((chunk, chunk.shape[0], j, bucket))
+        routed = self._route(rows, lo, hi)
+        for shard, local, dest in routed:
+            for start in range(0, local.shape[0], cap):
+                chunk = local[start:start + cap]
+                bucket = self._bucket(chunk.shape[0])
+                padded += bucket - chunk.shape[0]
+                if self.packed and self._aligned_range(chunk):
+                    aligned += 1
+                d = start if dest is None else dest[start:start + cap]
+                pieces.append(_Chunk(0, chunk, chunk.shape[0], bucket,
+                                     shard, d))
         with self._lock:
             self._check_pump()
             if self._shutdown:
                 raise RuntimeError("service is shut down")
             ticket = self._next_ticket
             self._next_ticket += 1
-            self._submitted_at[ticket] = time.perf_counter()
+            now = time.perf_counter()
+            self._submitted_at[ticket] = now
             self.stats["requests"] += 1
             self.stats["rows"] += rows.size
             self.stats["padded_rows"] += padded
             self.stats["packed_ranges"] += aligned
+            if len(routed) > 1:
+                self.stats["split_requests"] += 1
             self._chunks_total[ticket] = len(pieces)
-            for chunk, n, j, bucket in pieces:
-                self._queue.append(_Chunk(ticket, chunk, n, j, bucket))
-            self._work.notify_all()
+            self._ticket_rows[ticket] = rows.size
+            before = {}
+            for ch in pieces:
+                ch.ticket = ticket
+                ch.t_enq = now
+                q = self._queues[ch.shard]
+                before.setdefault(ch.shard, len(q))
+                q.append(ch)
+            for s, n0 in before.items():
+                # wake discipline (each wake steals GIL time from XLA): the
+                # parked pump needs a wake when a shard queue goes empty ->
+                # nonempty (to start serving, or arm its linger timer) or
+                # when this submit completed a coalescing group; chunks
+                # landing mid-group are picked up by the pending tick
+                n1 = len(self._queues[s])
+                if n0 == 0 or (n0 < self.coalesce <= n1):
+                    self._work.notify_all()
+                    break
         return ticket
 
     # -- bucketing ------------------------------------------------------------------
@@ -252,12 +335,14 @@ class FeatureService:
     def _slice_padded(self, rows: np.ndarray, bucket: int) -> np.ndarray:
         """Host work for one int32 chunk: fancy-index + right-pad to bucket."""
         rows = pad_rows_edge(rows, bucket)
-        if self.sharded:
+        if self.sharded and not self.packed:
             return self._gather_sharded_codes(rows)
         return self.plan.host_codes(rows)
 
     def _gather_sharded_codes(self, rows: np.ndarray) -> np.ndarray:
-        """Route rows to their owning IMCU partitions (partition-local slices).
+        """Route rows to their owning IMCU partitions (partition-local
+        slices) — the legacy int32 sharding, where only the HOST side is
+        partitioned and one pump still serves every launch.
 
         Rows appended after plan compile (streaming inserts via
         ``FeaturePlan.refresh``) live past the last IMCU boundary and are
@@ -281,95 +366,171 @@ class FeatureService:
         """True for a word-aligned contiguous run (the scan pattern) —
         tracked in ``stats['packed_ranges']``; served by the same unified
         indexed launch as arbitrary row sets. The O(1) prefix checks gate
-        the O(n) scan: this runs under the service lock on every submit."""
-        if int(rows[0]) % 32 or \
+        the O(n) scan: this runs on every submit."""
+        if rows.shape[0] == 0 or int(rows[0]) % 32 or \
                 int(rows[-1]) - int(rows[0]) != rows.shape[0] - 1:
             return False
         return bool((np.diff(rows) == 1).all())
 
-    # -- the background pump ---------------------------------------------------------
+    # -- the background pumps ---------------------------------------------------------
+    def _linger_left(self, queue: deque) -> float:
+        """Seconds shard ``queue``'s head launch group should stay open.
+
+        0 when the group is already full (``coalesce`` same-bucket chunks
+        queued) or the head chunk has aged past the linger deadline —
+        lingering trades a BOUNDED latency for fuller groups, it never
+        holds work indefinitely."""
+        head = queue[0]
+        n_match = 0
+        for ch in queue:
+            if ch.bucket == head.bucket:
+                n_match += 1
+                if n_match >= self.coalesce:
+                    return 0.0
+        return head.t_enq + self._linger_s - time.perf_counter()
+
+    def _all_idle(self) -> bool:
+        return not any(q or i or b for q, i, b in
+                       zip(self._queues, self._inflights, self._busy))
+
+    def _pick_action(self):
+        """Choose the pump's next action (lock held).
+
+        Returns ``("launch", shard)``, ``("retire", shard)``,
+        ``("wait", timeout)`` or ``("exit", None)``. Preference order keeps
+        every shard's launch stream busy: launch wherever a window has room
+        and a group is ready; otherwise retire the OLDEST in-flight launch
+        — from a full-window shard first (unblocks its stream), else any.
+        Lingering shards (partial group, young head chunk) are skipped for
+        launching but their deadline bounds the wait timeout, so fuller
+        groups never cost unbounded latency.
+        """
+        held = self._paused and not self._shutdown
+        linger_min = None
+        for s in range(self._n_shards):
+            queue = self._queues[s]
+            if not queue or held or len(self._inflights[s]) >= self.prefetch:
+                continue
+            if self._linger_s > 0 and self.coalesce > 1 \
+                    and not self._shutdown and not self._flushes:
+                left = self._linger_left(queue)
+                if left > 0:
+                    linger_min = left if linger_min is None \
+                        else min(linger_min, left)
+                    continue
+            return "launch", s
+        # nothing launchable: retire the globally oldest in-flight entry,
+        # preferring a shard whose full window is damming its queue
+        oldest, oldest_full = None, None
+        for s in range(self._n_shards):
+            infl = self._inflights[s]
+            if not infl:
+                continue
+            seq = infl[0][0]
+            if oldest is None or seq < self._inflights[oldest][0][0]:
+                oldest = s
+            if len(infl) >= self.prefetch and (
+                    oldest_full is None
+                    or seq < self._inflights[oldest_full][0][0]):
+                oldest_full = s
+        if oldest_full is not None:
+            return "retire", oldest_full
+        if oldest is not None and linger_min is None:
+            return "retire", oldest
+        if self._shutdown and self._all_idle():
+            return "exit", None
+        return "wait", linger_min
+
     def _pump_loop(self) -> None:
-        """Drain the unified queue until shutdown: coalesce -> launch ->
-        retire, with a ``prefetch``-deep in-flight window. The ONLY thread
-        that dispatches device work or blocks on device buffers.
+        """ONE multiplexing pump drains every shard's queue until shutdown:
+        coalesce -> launch -> retire, with a ``prefetch``-deep in-flight
+        window PER SHARD. The only thread that dispatches device work or
+        blocks on device buffers; shards' launches are dispatched
+        asynchronously onto their own devices, so independent shards
+        compute concurrently while the pump runs ahead — one thread feeding
+        N launch streams (threads-per-shard would fight it for the GIL;
+        dispatch is the cheap part).
 
         Wake discipline: the pump only notifies ``_cv`` when a ticket's
-        result actually landed and ``_idle`` when it has nothing left to do
-        — launching and window churn wake nobody, so client threads stay
-        parked (and off the GIL) while the device works.
+        result actually landed and ``_idle`` when no shard has anything
+        left to do — launching and window churn wake nobody, so client
+        threads stay parked (and off the GIL) while the devices work.
         """
         try:
             while True:
                 with self._lock:
                     while True:
-                        # shutdown overrides pause so a drain always finishes
-                        held = self._paused and not self._shutdown
-                        can_launch = (bool(self._queue) and not held
-                                      and len(self._inflight) < self.prefetch)
-                        can_retire = bool(self._inflight) and (
-                            len(self._inflight) >= self.prefetch
-                            or not self._queue or held)
-                        if can_launch or can_retire:
+                        action, arg = self._pick_action()
+                        if action != "wait":
                             break
-                        if self._shutdown and not self._queue \
-                                and not self._inflight:
-                            return
-                        self._idle.notify_all()
-                        self._work.wait()
-                    if can_launch:
-                        job = self._take_group()
+                        if self._all_idle():
+                            self._idle.notify_all()
+                        self._work.wait(timeout=arg)
+                    if action == "exit":
+                        return
+                    s = arg
+                    if action == "launch":
+                        job = self._take_group(self._queues[s])
                     else:
                         job = None
-                        entry = self._inflight.popleft()
-                    self._busy += 1
+                        _, entry = self._inflights[s].popleft()
+                    self._busy[s] += 1
                 if job is not None:
-                    dev, parts, nbytes = self._launch(job)
+                    dev, parts, nbytes = self._launch(job, s)
                     with self._lock:
-                        self._inflight.append((dev, parts))
+                        self._seq += 1
+                        self._inflights[s].append((self._seq, (dev, parts)))
                         self.stats["launches"] += 1
                         self.stats["batches"] += len(parts)
                         self.stats["bytes_h2d"] += nbytes
+                        self.stats["shard_launches"][s] += 1
+                        self.stats["shard_batches"][s] += len(parts)
+                        self.stats["shard_bytes_h2d"][s] += nbytes
                         self.stats["max_inflight"] = max(
-                            self.stats["max_inflight"], len(self._inflight))
-                        self._busy -= 1
+                            self.stats["max_inflight"],
+                            sum(len(i) for i in self._inflights))
+                        self._busy[s] -= 1
                 else:
                     dev, parts = entry
                     arr = np.asarray(dev)       # blocks on device, unlocked
                     with self._lock:
                         if self._retire(arr, parts):
                             self._cv.notify_all()
-                        self._busy -= 1
-                        if not self._queue and not self._inflight:
+                        self._busy[s] -= 1
+                        if self._all_idle():
                             self._idle.notify_all()
         except BaseException as e:            # pragma: no cover - defensive
             with self._lock:
                 self._pump_error = e
                 self._notify_everyone()
 
-    def _take_group(self) -> list[_Chunk]:
+    def _take_group(self, queue: deque) -> list[_Chunk]:
         """Pop up to ``coalesce`` queued chunks sharing the head chunk's
         bucket shape (FIFO otherwise preserved) — one launch group. Stops
         scanning once the group is full and splices the tail back in bulk,
         so a long queued burst costs O(Q) per tick, not O(Q) per chunk."""
-        bucket = self._queue[0].bucket
+        bucket = queue[0].bucket
         group: list[_Chunk] = []
         rest: deque[_Chunk] = deque()
-        while self._queue and len(group) < self.coalesce:
-            ch = self._queue.popleft()
+        while queue and len(group) < self.coalesce:
+            ch = queue.popleft()
             (group if ch.bucket == bucket else rest).append(ch)
-        rest.extend(self._queue)
-        self._queue = rest
+        rest.extend(queue)
+        queue.clear()
+        queue.extend(rest)
         return group
 
-    def _launch(self, group: list[_Chunk]):
-        """Dispatch ONE device launch for a coalesced group (pump thread).
+    def _launch(self, group: list[_Chunk], s: int):
+        """Dispatch ONE launch for a coalesced group on shard s's device
+        (pump thread only).
 
-        Packed plans: a flat (coalesce * bucket,) int32 index vector —
-        padded to the full coalesce width so every launch shares one
-        compiled shape — into the indexed gather; host->device traffic is
-        the indices alone. int32 plans: the classic stacked code slice for
-        a single chunk. Either way the launch buffer is a flat (rows, F)
-        array and each part records its chunk's row offset into it.
+        Packed plans: a flat (coalesce * bucket,) int32 SHARD-LOCAL index
+        vector — padded to the full coalesce width so every launch shares
+        one compiled shape per bucket — into the shard executor's indexed
+        gather; host->device traffic is the indices alone. int32 plans:
+        the classic stacked code slice for a single chunk. Either way the
+        launch buffer is a flat (rows, F) array and each part records its
+        chunk's row offset into it.
         """
         bucket = group[0].bucket
         if self.packed:
@@ -377,8 +538,8 @@ class FeatureService:
             for i, ch in enumerate(group):
                 mat[i] = pad_rows_edge(ch.rows, bucket)
             mat[len(group):] = mat[len(group) - 1]   # surplus lanes unread
-            dev = self._executor._rows_future(mat.reshape(-1))
-            parts = [(ch.ticket, ch.n, ch.j, i * bucket)
+            dev = self._executors[s]._rows_future(mat.reshape(-1))
+            parts = [(ch.ticket, ch.n, ch.dest, i * bucket)
                      for i, ch in enumerate(group)]
             return dev, parts, mat.nbytes
         ch = group[0]
@@ -386,31 +547,58 @@ class FeatureService:
         # np codes go straight into the jit'd gather — its argument
         # transfer is the one host->device code shipment
         dev = self._executor.gather_device(codes)
-        return dev, [(ch.ticket, ch.n, ch.j, 0)], int(codes.nbytes)
+        return dev, [(ch.ticket, ch.n, ch.dest, 0)], int(codes.nbytes)
 
     def _retire(self, arr: np.ndarray, parts: list) -> bool:
         """Distribute one retired launch buffer to its tickets (lock held);
-        True if any ticket completed (its waiters need a wake)."""
+        True if any ticket completed (its waiters need a wake).
+
+        Single-chunk requests take the sliced piece directly (copied when
+        small, so the result doesn't pin the whole coalesced launch buffer
+        for its lifetime); multi-chunk requests assemble into a preallocated
+        per-ticket (rows, F) buffer via each chunk's destination map — the
+        request-order concatenation for routed/sharded splits.
+        """
         landed = False
-        for ticket, n, j, off in parts:
+        for ticket, n, dest, off in parts:
             total = self._chunks_total.get(ticket)
             if total is None:
                 continue                    # dropped by shutdown(drain=False)
             piece = arr[off:off + n]
-            if piece.size * 2 < arr.size:
-                # a small chunk of a big coalesced launch buffer: copy so
-                # the result doesn't pin the whole (coalesce*bucket, F)
-                # array for its lifetime (views keep the base alive)
-                piece = piece.copy()
-            chunks = self._partial.setdefault(ticket, {})
-            chunks[j] = piece
-            if len(chunks) < total:
-                continue
-            del self._partial[ticket]
+            if total == 1:
+                # copy only when the piece is a SLIVER of the coalesced
+                # launch buffer (a view would pin the whole (lanes*bucket,
+                # F) array for the result's lifetime); a full group's lanes
+                # collectively own the buffer anyway, and the copies are
+                # GIL-held pump time — 8x bounds the pinning overhead
+                if piece.size * 8 < arr.size:
+                    piece = piece.copy()
+                self._results[ticket] = piece
+            else:
+                buf = self._out_buf.get(ticket)
+                if buf is None:
+                    # width read at allocation time, NOT cached at
+                    # construction, so a refresh() that grows a dictionary
+                    # (wider out_dim) keeps the service serving. Refresh is
+                    # not atomic w.r.t. IN-FLIGHT requests — a ticket whose
+                    # chunks straddle a widening refresh would mix widths
+                    # whatever the buffer shape (the pre-mesh concatenate
+                    # had the same contract): drain() before refreshing
+                    buf = np.empty((self._ticket_rows[ticket],
+                                    self.plan.out_dim), arr.dtype)
+                    self._out_buf[ticket] = buf
+                if isinstance(dest, np.ndarray):
+                    buf[dest] = piece
+                else:
+                    buf[dest:dest + n] = piece
+                done = self._chunks_done.get(ticket, 0) + 1
+                if done < total:
+                    self._chunks_done[ticket] = done
+                    continue
+                self._chunks_done.pop(ticket, None)
+                self._results[ticket] = self._out_buf.pop(ticket)
             del self._chunks_total[ticket]
-            ordered = [chunks[i] for i in range(len(chunks))]
-            self._results[ticket] = (ordered[0] if len(ordered) == 1
-                                     else np.concatenate(ordered, axis=0))
+            self._ticket_rows.pop(ticket, None)
             landed = True
             t0 = self._submitted_at.pop(ticket, None)
             if t0 is not None:
@@ -421,7 +609,7 @@ class FeatureService:
     # -- result retrieval ----------------------------------------------------------
     def poll(self, ticket: int) -> bool:
         """True once the ticket's result is on host. Non-blocking and
-        dispatch-free: the pump owns all launching/retiring. Raises KeyError
+        dispatch-free: the pumps own all launching/retiring. Raises KeyError
         for unknown/already-collected tickets (like ``result``) so a poll
         loop can't spin forever on a bad ticket."""
         with self._lock:
@@ -433,27 +621,27 @@ class FeatureService:
             return False
 
     def _queued_while_paused(self, ticket: int | None) -> bool:
-        """True when blocking on this work would deadlock: the pump is
+        """True when blocking on this work would deadlock: the pumps are
         paused (and not shutting down, which overrides pause) and the
         awaited chunks are still queued — nothing will ever launch them
         until ``resume()``. Lock held."""
         if not self._paused or self._shutdown:
             return False
         if ticket is None:
-            return bool(self._queue)
-        return any(ch.ticket == ticket for ch in self._queue)
+            return any(self._queues)
+        return any(ch.ticket == ticket for q in self._queues for ch in q)
 
     def result(self, ticket: int) -> np.ndarray:
         """Block until the ticket's features are on host and return them.
 
-        Purely a wait: the pump launches and retires; this just sleeps on
+        Purely a wait: the pumps launch and retire; this just sleeps on
         the service condition until the ticket lands (or is unknown).
         Raises RuntimeError instead of deadlocking if the service is
         paused with this ticket's chunks still unlaunched.
         """
         with self._lock:
             # claim the ticket so a concurrent drain() can't sweep it away
-            # between the pump landing it and this thread waking up
+            # between a pump landing it and this thread waking up
             self._claimed.add(ticket)
             try:
                 while True:
@@ -472,18 +660,26 @@ class FeatureService:
                 self._claimed.discard(ticket)
 
     def drain(self) -> dict[int, np.ndarray]:
-        """Wait for the pump to finish everything queued/in flight; return
-        {ticket: features} collected — except tickets another thread is
-        blocked on in result(), which stay theirs. Raises RuntimeError
+        """Wait for every pump to finish everything queued/in flight;
+        return {ticket: features} collected — except tickets another thread
+        is blocked on in result(), which stay theirs. Raises RuntimeError
         instead of deadlocking if called while paused with chunks queued."""
         with self._lock:
-            while self._queue or self._inflight or self._busy:
+            try:
+                # a drain wants everything NOW: partial groups stop
+                # lingering while ANY drain is in progress (a counter, so
+                # one drain finishing cannot un-flush a concurrent one)
+                self._flushes += 1
+                self._work.notify_all()
+                while not self._all_idle():
+                    self._check_pump()
+                    if self._queued_while_paused(None):
+                        raise RuntimeError("queue is held by pause() — "
+                                           "resume() before drain()")
+                    self._idle.wait(timeout=0.5)
                 self._check_pump()
-                if self._queued_while_paused(None):
-                    raise RuntimeError("queue is held by pause() — "
-                                       "resume() before drain()")
-                self._idle.wait(timeout=0.5)
-            self._check_pump()
+            finally:
+                self._flushes -= 1
             out = {t: r for t, r in self._results.items()
                    if t not in self._claimed}
             for t in out:
@@ -492,13 +688,13 @@ class FeatureService:
 
     # -- streaming convenience -------------------------------------------------------
     def serve_stream(self, row_batches):
-        """Featurize an iterator of row-index batches through the pump.
+        """Featurize an iterator of row-index batches through the pumps.
 
         Yields (rows, features) in submission order while keeping up to
-        ``prefetch`` launches in flight on the pump side.
+        ``prefetch`` launches in flight per shard on the pump side.
         """
         def gen():
-            # the pump runs the prefetch-deep window; this FIFO only stops
+            # the pumps run the prefetch-deep windows; this FIFO only stops
             # the producer racing ahead of the consumer
             pending: deque[tuple[np.ndarray, int]] = deque()
             for rows in row_batches:

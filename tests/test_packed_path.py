@@ -424,16 +424,28 @@ def test_packed_service_poll_flushes_partial_group():
                                   np.asarray(pipe.batch(np.arange(64, 128))))
 
 
-def test_packed_service_rejects_sharded():
+def test_packed_sharding_supported_but_no_codes_matrix():
+    """Packed plans shard per IMCU (word-stream slices) since the mesh PR;
+    what they still never do is materialize the int32 code matrix, and a
+    shard view refuses refresh (that belongs to the parent)."""
     rng = np.random.default_rng(10)
-    t = Table.from_data({"a": rng.integers(0, 10, 256)})
+    t = Table.from_data({"a": rng.integers(0, 10, 256)}, imcu_rows=128)
     plan = FeaturePlan(t, FeatureSet().add("a", "zscore"), packed=True)
-    with pytest.raises(ValueError):
-        FeatureService(plan, sharded=True)
-    with pytest.raises(NotImplementedError):
-        plan.imcu_shards()
+    shards = plan.imcu_shards()
+    assert [s.n_rows for s in shards] == [128, 128]
     with pytest.raises(RuntimeError):
         plan.codes_matrix
+    with pytest.raises(RuntimeError):
+        shards[0].codes_matrix
+    with pytest.raises(RuntimeError):
+        shards[0].refresh()
+    with FeatureService(plan, sharded=True, buckets=(64,)) as svc:
+        assert svc.n_shards == 2
+        rows = rng.integers(0, 256, 100)
+        got = svc.result(svc.submit(rows))
+        want = np.asarray(FeaturePipeline(t, FeatureSet().add("a", "zscore"))
+                          .batch(rows))
+        np.testing.assert_array_equal(got, want)
 
 
 def test_packed_vmem_fallback_still_serves():

@@ -1,0 +1,348 @@
+"""Mesh-sharded packed serving: per-IMCU resident shards + routed pumps.
+
+The invariant under test everywhere: sharded serving output is BIT-exact
+(assert_array_equal) against the unsharded packed/int32 paths — sharding
+changes where launches run and which stream slice they read, never the
+math. Runs on any device count: with one process device every shard's
+executor commits to it (round-robin degenerates); CI additionally runs
+this file under XLA_FLAGS=--xla_force_host_platform_device_count=4 so the
+true multi-device routing is exercised on CPU.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.columnar import Table
+from repro.core import (FeatureSet, FeaturePipeline, FeaturePlan,
+                        FeatureExecutor, ShardedFeatureExecutor)
+from repro.core.pipeline import _PackedShardPlan
+from repro.kernels.bitunpack.kernel import tpu_width
+from repro.serve import FeatureService
+
+BITS_SWEEP = (1, 2, 3, 4, 6, 8, 12, 16)
+
+
+def _column_data(rng, bits, n):
+    """Integer column whose dictionary needs exactly ``bits`` bits."""
+    k = 2 if bits == 1 else (1 << (bits - 1)) + 1
+    base = np.arange(k)
+    return np.concatenate([base, rng.integers(0, k, n - k)])
+
+
+def _mixed_table(n=3000, imcu_rows=700, seed=0):
+    rng = np.random.default_rng(seed)
+    t = Table.from_data({
+        "age": rng.integers(18, 80, n),
+        "state": np.array(["CA", "OR", "WA", "NY"])[rng.integers(0, 4, n)],
+        "income": rng.integers(20, 200, n) * 1000,
+    }, imcu_rows=imcu_rows)
+    fs = (FeatureSet().add("age", "zscore").add("state", "onehot")
+          .add("income", "minmax"))
+    return t, fs
+
+
+# -- packed shard plans (the host-side half) -----------------------------------------
+def test_packed_imcu_shards_structure_and_seam_repack():
+    """Word-aligned boundaries slice zero-copy; unaligned seams repack only
+    the shard's own rows; the fused super-table stays shared."""
+    rng = np.random.default_rng(1)
+    t = Table.from_data({"a": rng.integers(0, 100, 1024),   # db=8, s=4
+                         "b": rng.integers(0, 3, 1024)},    # db=2, s=16
+                        imcu_rows=256)                      # 256 % 16 == 0
+    fs = FeatureSet().add("a", "zscore").add("b", "onehot")
+    plan = FeaturePlan(t, fs, packed=True)
+    shards = plan.imcu_shards()
+    assert len(shards) == 4 and all(isinstance(s, _PackedShardPlan)
+                                    for s in shards)
+    # aligned boundary -> shard words are views into the parent stream
+    w = shards[1]._shard_words(0)
+    assert w.base is plan.packed_words[0] or \
+        w.base is plan.packed_words[0].base
+    assert plan.stats["words_repacked"] == 0       # no seams at 256 rows
+    assert shards[0].fused_tables() is plan.fused_tables()
+    # local host_codes equal the parent's global window
+    np.testing.assert_array_equal(
+        shards[2].host_codes(np.arange(0, 256)),
+        plan.host_codes(np.arange(512, 768)))
+    # unaligned IMCU rows (700 % 16 != 0) force a seam repack for db=2 only
+    t2, fs2 = _mixed_table()
+    plan2 = FeaturePlan(t2, fs2, packed=True)
+    sh2 = plan2.imcu_shards()
+    sh2[1].packed_words                            # build the slices
+    assert sh2[1].stats["words_repacked"] >= 1
+    np.testing.assert_array_equal(
+        sh2[1].host_codes(np.arange(0, 700)),
+        plan2.host_codes(np.arange(700, 1400)))
+
+
+def test_shard_stats_attributed_and_rolled_up():
+    """Each shard's counters are its own AND every delta lands in the plan
+    total — the unattributable-shared-dict fix."""
+    t, fs = _mixed_table(n=2048, imcu_rows=1024)
+    plan = FeaturePlan(t, fs, packed=True)
+    base_puts = plan.stats["words_put"]
+    shx = ShardedFeatureExecutor(plan)
+    per_shard = plan.stats["per_shard"]
+    assert [s.stats for s in shx.shards] == per_shard
+    assert all(s["words_put"] == 1 for s in per_shard)   # one put each
+    assert plan.stats["words_put"] == base_puts + 2      # rolled up
+    # int32 shards get attributed stats too
+    plan_i = FeaturePlan(t, fs)
+    shards_i = plan_i.imcu_shards()
+    assert all(dict(s.stats)["tables_put"] == 0 for s in shards_i)
+
+
+# -- routed executor bit-exactness ---------------------------------------------------
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_sharded_executor_bit_exact_across_bits(use_kernel):
+    """Sharded serve == unsharded for aligned ranges AND arbitrary rows,
+    every storage width class 1-16 bits, rows straddling shard boundaries."""
+    rng = np.random.default_rng(7)
+    n = 33024                  # bits=16 needs cardinality 2**15 + 1 <= n
+    data = {f"c{b}": _column_data(rng, b, n) for b in BITS_SWEEP}
+    table = Table.from_data(data, imcu_rows=8256)       # 4 shards, 8256%32=0
+    fs = FeatureSet()
+    for b in BITS_SWEEP:
+        fs = fs.add(f"c{b}", "zscore")
+    plan_p = FeaturePlan(table, fs, packed=True)
+    assert [tpu_width(b) for b in BITS_SWEEP] == plan_p.device_bits
+    ex_i = FeatureExecutor(FeaturePlan(table, fs))
+    shx = ShardedFeatureExecutor(plan_p, use_kernel=use_kernel)
+    assert shx.n_shards == 4
+    # aligned ranges: inside one shard, and straddling shard boundaries
+    for start, m in ((0, 128), (8256 - 64, 128), (8256 * 2 - 32, 96)):
+        idx = np.arange(start, start + m)
+        np.testing.assert_array_equal(np.asarray(shx.batch(idx)),
+                                      np.asarray(ex_i.batch(idx)))
+    # arbitrary rows spanning every shard, biased onto boundary straddles
+    bounds = np.array([8256, 8256 * 2, 8256 * 3])
+    rows = np.concatenate([bounds - 1, bounds, bounds + 1,
+                           rng.integers(0, n, 300)])
+    np.testing.assert_array_equal(np.asarray(shx.batch(rows)),
+                                  np.asarray(ex_i.batch(rows)))
+
+
+def test_sharded_executor_routing_and_error_contract():
+    t, fs = _mixed_table()
+    shx = ShardedFeatureExecutor(FeaturePlan(t, fs, packed=True))
+    assert shx.n_shards == 5
+    # whole-request fast path: no dest index materialized
+    [(s, local, dest)] = shx.route(np.arange(1400, 1450))
+    assert s == 2 and dest is None and local[0] == 0
+    # split request: dests reassemble the original order
+    pieces = shx.route(np.array([2999, 0, 700]))
+    assert [p[0] for p in pieces] == [0, 1, 4]
+    with pytest.raises(IndexError):
+        shx.batch(np.array([3000]))
+    assert np.asarray(shx.batch(np.array([], np.int64))).shape == \
+        (0, shx.plan.out_dim)
+    with pytest.raises(ValueError):                # int32 plans don't shard
+        ShardedFeatureExecutor(FeaturePlan(t, fs))
+
+
+def test_sharded_executor_serves_refresh_appends_in_last_shard():
+    """Streaming inserts extend the open-ended last shard: appends past the
+    compile-time bounds (and past the pad32 capacity) serve bit-exact."""
+    rng = np.random.default_rng(3)
+    t, fs = _mixed_table(n=2048, imcu_rows=512)
+    plan_p = FeaturePlan(t, fs, packed=True)
+    plan_i = FeaturePlan(t, fs)
+    shx = ShardedFeatureExecutor(plan_p)
+    ex_i = FeatureExecutor(plan_i)
+    np.asarray(shx.batch(np.arange(2048 - 64, 2048)))   # put at old capacity
+    new = {"age": t["age"].dictionary.add_rows(rng.integers(18, 80, 40)),
+           "state": t["state"].dictionary.add_rows(
+               np.array(["CA", "NY"] * 20)),
+           "income": t["income"].dictionary.add_rows(
+               rng.integers(20, 200, 40) * 1000)}
+    plan_p.refresh(new)
+    plan_i.refresh(new)
+    assert shx.shards[-1].n_rows == 512 + 40            # open-ended tail
+    rows = np.concatenate([np.arange(2040, 2088),       # spans old capacity
+                           rng.integers(0, 2088, 200)])
+    np.testing.assert_array_equal(np.asarray(shx.batch(rows)),
+                                  np.asarray(ex_i.batch(rows)))
+
+
+# -- sharded FeatureService ----------------------------------------------------------
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_sharded_service_matches_pipeline(use_kernel):
+    t, fs = _mixed_table()
+    pipe = FeaturePipeline(t, fs)
+    rng = np.random.default_rng(5)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        use_kernel=use_kernel, buckets=(64, 256)) as svc:
+        assert svc.n_shards == 5
+        reqs = [np.arange(0, 256),                 # one shard, aligned
+                np.arange(672, 736),               # straddles shards 0/1
+                rng.integers(0, 3000, 400),        # scatter over all shards
+                np.array([699, 700, 1399, 1400, 2099, 2100]),  # boundaries
+                np.arange(2980, 3000)]             # tail of last shard
+        tickets = [svc.submit(r) for r in reqs]
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(svc.result(tk),
+                                          np.asarray(pipe.batch(r)))
+        assert svc.stats["split_requests"] >= 3
+        # per-shard launch attribution sums to the totals
+        assert sum(svc.stats["shard_launches"]) == svc.stats["launches"] > 0
+        assert sum(svc.stats["shard_bytes_h2d"]) == svc.stats["bytes_h2d"]
+        assert sum(1 for x in svc.stats["shard_launches"] if x) >= 4
+
+
+def test_sharded_service_serves_refresh_appends():
+    rng = np.random.default_rng(6)
+    t, fs = _mixed_table(n=2000, imcu_rows=800)
+    pipe = FeaturePipeline(t, fs)
+    plan_p = FeaturePlan(t, fs, packed=True)
+    with FeatureService(plan_p, sharded=True, buckets=(64,)) as svc:
+        svc.result(svc.submit(np.arange(64)))      # compile pre-refresh
+        new = {"age": t["age"].dictionary.add_rows(np.array([150, 151])),
+               "state": t["state"].dictionary.add_rows(
+                   np.array(["CA", "OR"])),
+               "income": t["income"].dictionary.add_rows(
+                   np.array([40000, 60000]))}
+        plan_p.refresh(new)
+        pipe.plan.refresh(new)
+        mixed = np.array([0, 799, 800, 1999, 2000, 2001])  # shards + tail
+        np.testing.assert_array_equal(svc.result(svc.submit(mixed)),
+                                      np.asarray(pipe.batch(mixed)))
+
+
+def test_sharded_service_concurrent_shard_pumps():
+    """Whole-shard requests land on their own pumps; drain joins them all
+    and every per-shard window respects prefetch."""
+    t, fs = _mixed_table(n=4096, imcu_rows=1024)
+    pipe = FeaturePipeline(t, fs)
+    rng = np.random.default_rng(8)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        prefetch=2, buckets=(64,)) as svc:
+        reqs = [np.arange(s, s + 64)
+                for s in rng.integers(0, 4096 - 64, 40)]
+        tickets = [svc.submit(r) for r in reqs]
+        out = svc.drain()
+        assert set(out) == set(tickets)
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(out[tk], np.asarray(pipe.batch(r)))
+        # aggregate in-flight is bounded by prefetch per shard
+        assert svc.stats["max_inflight"] <= 2 * svc.n_shards
+
+
+# -- latency-aware linger ------------------------------------------------------------
+def test_linger_coalesces_partial_groups():
+    """With a generous linger the pump holds partial groups open until the
+    burst arrives — the whole burst serves in ONE coalesced launch without
+    pause()/resume() choreography."""
+    rng = np.random.default_rng(9)
+    t = Table.from_data({"a": rng.integers(0, 100, 4096)})
+    fs = FeatureSet().add("a", "zscore")
+    pipe = FeaturePipeline(t, fs)
+    with FeatureService(FeaturePlan(t, fs, packed=True), buckets=(128,),
+                        coalesce=4, linger_us=2_000_000) as svc:
+        starts = [0, 512, 1024, 2048]
+        tickets = [svc.submit(np.arange(s, s + 128)) for s in starts]
+        out = [svc.result(tk) for tk in tickets]
+        assert svc.stats["launches"] == 1          # lingered into one group
+        for s, got in zip(starts, out):
+            np.testing.assert_array_equal(
+                got, np.asarray(pipe.batch(np.arange(s, s + 128))))
+
+
+def test_linger_latency_is_bounded():
+    """A lone request must complete within (roughly) the linger deadline —
+    lingering trades BOUNDED latency for coalescing, it never starves."""
+    rng = np.random.default_rng(10)
+    t = Table.from_data({"a": rng.integers(0, 100, 1024)})
+    fs = FeatureSet().add("a", "zscore")
+    with FeatureService(FeaturePlan(t, fs, packed=True), buckets=(64,),
+                        coalesce=4, linger_us=50_000) as svc:
+        t0 = time.perf_counter()
+        got = svc.result(svc.submit(np.arange(64)))
+        wall = time.perf_counter() - t0
+        assert got.shape == (64, 1)
+        # deadline 50ms; generous ceiling absorbs compile + scheduler noise
+        assert wall < 20.0
+        assert svc.stats["launches"] == 1
+    # a full group launches immediately even with linger configured
+    with FeatureService(FeaturePlan(t, fs, packed=True), buckets=(64,),
+                        coalesce=2, linger_us=10_000_000) as svc:
+        svc.pause()
+        a = svc.submit(np.arange(64))
+        b = svc.submit(np.arange(64, 128))
+        svc.resume()
+        t0 = time.perf_counter()
+        svc.result(a), svc.result(b)
+        assert time.perf_counter() - t0 < 5.0      # did not sit out 10s
+        assert svc.stats["launches"] == 1
+
+
+def test_linger_rejects_negative():
+    t = Table.from_data({"a": np.arange(64)})
+    with pytest.raises(ValueError):
+        FeatureService(FeaturePlan(t, FeatureSet().add("a", "zscore"),
+                                   packed=True), linger_us=-1)
+
+
+def test_append_resyncs_only_last_shard_stream():
+    """A streaming append rewrites the tail — interior shards' resident
+    streams must NOT be re-put (their bytes are untouched), and executors
+    sharing a device share ONE set of placed tables."""
+    rng = np.random.default_rng(31)
+    t, fs = _mixed_table(n=2048, imcu_rows=512)
+    plan_p = FeaturePlan(t, fs, packed=True)
+    plan_i = FeaturePlan(t, fs)
+    shx = ShardedFeatureExecutor(plan_p)
+    ex_i = FeatureExecutor(plan_i)
+    all_rows = np.arange(0, 2048, 7)
+    np.asarray(shx.batch(all_rows))                 # every shard puts once
+    puts0 = [s.stats["words_put"] for s in shx.shards]
+    new = {"age": t["age"].dictionary.add_rows(np.array([77])),
+           "state": t["state"].dictionary.add_rows(np.array(["CA"])),
+           "income": t["income"].dictionary.add_rows(np.array([50000]))}
+    plan_p.refresh(new)
+    plan_i.refresh(new)
+    rows = np.concatenate([all_rows, [2048]])       # touch every shard again
+    np.testing.assert_array_equal(np.asarray(shx.batch(rows)),
+                                  np.asarray(ex_i.batch(rows)))
+    puts1 = [s.stats["words_put"] for s in shx.shards]
+    assert puts1[-1] == puts0[-1] + 1               # tail shard re-put
+    assert puts1[:-1] == puts0[:-1]                 # interior shards did NOT
+    # executors on one device share placed tables (1 device in tier-1 runs)
+    import jax
+    if len(jax.devices()) == 1:
+        assert shx.executors[0]._tcache is shx.executors[1]._tcache
+
+
+def test_serve_mesh_and_devices_rules():
+    import jax
+    from repro.distributed.sharding import serve_mesh, serve_devices
+    mesh = serve_mesh()
+    assert mesh.axis_names == ("shard",)
+    assert mesh.shape["shard"] == len(jax.devices())
+    devs = serve_devices(5)
+    all_devs = jax.devices()
+    assert len(devs) == 5                         # round-robin wraps
+    assert all(d is all_devs[i % len(all_devs)] for i, d in enumerate(devs))
+    with pytest.raises(ValueError):
+        serve_devices(0)
+
+
+def test_sharded_service_serves_widened_plan_after_refresh():
+    """A refresh that GROWS a dictionary (onehot widens -> out_dim grows)
+    must keep the pump serving multi-chunk requests — retire buffers size
+    off the plan's CURRENT width, not a construction-time snapshot."""
+    rng = np.random.default_rng(30)
+    t, fs = _mixed_table(n=2048, imcu_rows=512)
+    pipe = FeaturePipeline(t, fs)
+    plan_p = FeaturePlan(t, fs, packed=True)
+    with FeatureService(plan_p, sharded=True, buckets=(64,)) as svc:
+        svc.result(svc.submit(np.arange(64)))        # serve pre-refresh
+        new = {"age": t["age"].dictionary.add_rows(np.array([150])),
+               "state": t["state"].dictionary.add_rows(np.array(["TX"])),
+               "income": t["income"].dictionary.add_rows(np.array([12345]))}
+        plan_p.refresh(new)
+        pipe.plan.refresh(new)
+        assert plan_p.out_dim == pipe.plan.out_dim > 6   # onehot widened
+        rows = rng.integers(0, plan_p.n_rows, 400)       # multi-chunk, split
+        np.testing.assert_array_equal(svc.result(svc.submit(rows)),
+                                      np.asarray(pipe.batch(rows)))
