@@ -32,8 +32,26 @@ load (fuller groups for a bounded latency); ``drain()`` force-flushes
 lingering groups. Per-shard attribution: ``stats['shard_launches'/
 'shard_bytes_h2d']`` and ``plan.stats['per_shard']`` roll up into totals.
 
+Adaptive shard management (the paper's feedback cycle, applied to layout):
+a mesh service's shard set is no longer frozen at plan-build time. A load
+monitor fed by the per-shard stats deltas (request-rate EWMA over
+``stats['shard_batches']``) drives two policies, automatically every
+``rebalance_every`` launches or on demand via ``service.rebalance()``:
+
+- hot-key skew -> **replicate**: when one shard's request rate runs
+  ``hot_factor`` x the mean, its resident word stream is committed to the
+  least-loaded device too and the pump round-robins that shard's launches
+  across the copies (read fan-out; every copy re-syncs from the plan's
+  versioned words after a refresh, so writes invalidate replicas for
+  free). Cold shards shed their replicas again.
+- streaming growth -> **re-shard**: appends extend only the open tail
+  shard; past ``row_budget`` rows the tail splits at a word-aligned cut,
+  the new shard's slice moves to an under-loaded device, and the routing
+  table swaps atomically — queued chunks are re-routed (split when they
+  straddle the cut) without dropping or reordering a single ticket.
+
 Builds a columnar table, compiles a FeaturePlan (device-resident fused ADV
-tables), then serves featurization requests five ways:
+tables), then serves featurization requests six ways:
 
 1. request queue with tickets (submit / result),
 2. arbitrary-row ("millions of users") lookups over a packed plan — the
@@ -41,8 +59,10 @@ tables), then serves featurization requests five ways:
 3. mesh-sharded serving: per-IMCU resident shards + routed pump launches
    (run under XLA_FLAGS=--xla_force_host_platform_device_count=4 to see
    true multi-device placement on CPU),
-4. streaming double-buffered iteration (serve_stream),
-5. a streaming insert followed by an incremental plan refresh — only the
+4. skewed traffic -> monitor -> replicate -> re-shard: the adaptive cycle
+   above, driven by Zipf-hot lookups and a streaming append,
+5. streaming double-buffered iteration (serve_stream),
+6. a streaming insert followed by an incremental plan refresh — only the
    columns whose dictionaries changed are re-put on device; appended rows
    extend the open-ended LAST shard, so sharded services keep serving.
 
@@ -118,7 +138,38 @@ def main() -> None:
               f"plan per-shard words_put="
               f"{[s['words_put'] for s in plan_mesh.stats['per_shard']]}")
 
-    # 4. streaming
+    # 4. adaptive shard management: skewed traffic -> monitor -> replicate
+    # -> re-shard. Zipf-hot lookups concentrate on shard 0; the monitor's
+    # request-rate EWMA flags it and fans reads out over a replica. A
+    # streaming append then pushes the open tail past its row budget and
+    # the next rebalance splits it — all while requests keep flowing.
+    plan_ad = FeaturePlan(table, features, packed=True)
+    with FeatureService(plan_ad, sharded=True, buckets=(512,), coalesce=8,
+                        linger_us=1000, rebalance_every=6,
+                        row_budget=1 << 15, hot_factor=2.0,
+                        max_replicas=2) as svca:
+        hot = rng.integers(0, (1 << 15) // 32 - 16, 96) * 32   # shard 0
+        for s in hot:
+            svca.submit(np.arange(s, s + 512))
+        svca.drain()                       # pump ticks the monitor en route
+        print(f"skew: monitor replicated hot shard 0 -> "
+              f"{svca.replicas} replicas/shard "
+              f"(EWMA={[round(e, 1) for e in svca.monitor_ewma]})")
+        m = 1 << 15
+        grow = {c: table[c].dictionary.add_rows(
+            table[c].dictionary.values[
+                rng.integers(0, table[c].dictionary.cardinality, m)])
+            for c in plan_ad.columns}
+        plan_ad.refresh(grow)              # tail now exceeds row_budget
+        actions = svca.rebalance()
+        print(f"growth: tail re-shard at {actions['split']}; now "
+              f"{svca.n_shards} shards, starts={svca.shard_starts}")
+        tail = svca.submit(np.arange(plan_ad.n_rows - 64, plan_ad.n_rows))
+        print(f"fresh tail serves: {svca.result(tail).shape}, stats: "
+              f"splits={svca.stats['shard_splits']}, "
+              f"replicas_added={svca.stats['replicas_added']}")
+
+    # 5. streaming
     stream = svc.serve_stream(rng.integers(0, n, 256) for _ in range(8))
     for rows, out in stream:
         pass

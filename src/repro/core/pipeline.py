@@ -443,6 +443,43 @@ class FeaturePlan:
             raise ValueError("plan has no feature columns to partition")
         return self.table[self.plans[0].column].imcu_bounds()
 
+    # -- adaptive re-shard (tail split under streaming growth) --------------------
+    def split_tail_shard(self, tail: "_PackedShardPlan", cut: int,
+                         close: bool = True) -> "_PackedShardPlan":
+        """Split the open tail shard at parent row ``cut``; return the NEW
+        open tail shard covering [cut, n_rows).
+
+        The answer to unbounded streaming growth: appends extend the LAST
+        shard only, so once it outgrows its row budget the tail is split —
+        the new shard's stream slice is zero-copy when ``cut`` is
+        word-aligned at a column's device width (``cut % 32 == 0`` aligns
+        at EVERY width) and seam-repacked otherwise, exactly like compile-
+        time IMCU boundaries. The new shard gets a fresh rolled-up stats
+        dict APPENDED to ``stats['per_shard']`` (existing shard indices —
+        and their accumulated deltas — never move: continuity across
+        shard-set changes). ``close=False`` leaves the old tail open so a
+        caller can swap its routing table first and close after
+        (:meth:`_PackedShardPlan.close_at`); until then both views serve
+        [cut, n_rows) bit-identically from the same parent bytes.
+        """
+        if not self.packed:
+            raise RuntimeError("tail re-shard applies to packed plans only")
+        if not isinstance(tail, _PackedShardPlan) or tail._parent is not self:
+            raise ValueError("tail is not a shard view of this plan")
+        if not tail._last:
+            raise ValueError("only the open tail shard can split")
+        start, stop = tail.shard_bounds
+        if not start < cut <= stop:
+            raise ValueError(f"cut {cut} outside open tail ({start}, {stop}]")
+        st = _ShardStats(self.stats,
+                         {k: 0 for k, v in self.stats.items()
+                          if isinstance(v, (int, float))})
+        new = _PackedShardPlan(self, cut, stop, st, last=True)
+        self.stats.setdefault("per_shard", []).append(st)
+        if close:
+            tail.close_at(cut)
+        return new
+
     # -- data-movement accounting (paper's central claim) --------------------------
     def bytes_moved_adv(self, batch_rows: int) -> int:
         """Host->device bytes per batch on the ADV path, for THIS plan's
@@ -560,6 +597,23 @@ class _PackedShardPlan(FeaturePlan):
     def refresh(self, new_codes=None) -> int:
         raise RuntimeError("shard plans are views — refresh the parent "
                            "FeaturePlan; every shard re-syncs automatically")
+
+    def close_at(self, cut: int) -> None:
+        """Close this open tail shard at parent row ``cut`` (it becomes an
+        interior shard bounded by [start, cut)). Internal half of
+        :meth:`FeaturePlan.split_tail_shard` — callers that swapped routing
+        first may close last, so readers never see rows go unowned. The
+        slice cache must drop: the version SOURCE switches from full packed
+        versions to layout versions on close, and a numerically equal
+        version must not revive a slice with the old open-ended bounds."""
+        if not self._last:
+            raise ValueError("only the open tail shard can close")
+        start, stop = self.shard_bounds
+        if not start < cut <= stop:
+            raise ValueError(f"cut {cut} outside open tail ({start}, {stop}]")
+        self._stop = cut
+        self._last = False
+        self._words_cache.clear()
 
 
 class _DeviceTableCache:
@@ -993,6 +1047,22 @@ class ShardedFeatureExecutor:
     by owning shard, per-shard sub-launches run concurrently, results are
     reassembled in request order). The serving pump drives the per-shard
     executors directly (one launch queue per shard) for the async path.
+
+    The shard set is ADAPTIVE (feedback re-shapes layout, the paper's
+    cycle): :meth:`add_replica` places a second committed copy of a hot
+    shard's resident stream on another device and :meth:`next_executor`
+    round-robins read launches across the copies (read fan-out — each
+    stream brings its own device queue, so a hot shard's capacity scales
+    with replicas; writes need no fan-in because every stream re-syncs
+    from the parent plan's versioned words at its next launch);
+    :meth:`split_tail` closes the open tail shard at a cut row and opens a
+    fresh tail on another device once streaming appends outgrow a row
+    budget. Routing state (``starts`` + bisect list) is swapped as one
+    atomic snapshot tuple, and the split orders create-new → swap-routing
+    → close-old so a reader holding either snapshot stays bit-exact.
+    Mutators themselves are NOT safe against a concurrent :meth:`batch` —
+    FeatureService serializes them behind its pump; standalone users must
+    quiesce first.
     """
 
     def __init__(self, plan: FeaturePlan, use_kernel: bool = False,
@@ -1002,32 +1072,150 @@ class ShardedFeatureExecutor:
                              "plans route host code slices instead")
         from repro.distributed.sharding import serve_devices
         self.plan = plan
+        self.use_kernel = use_kernel
+        self.prefetch = prefetch
+        self.autotune = autotune
         self.shards = plan.imcu_shards()
-        self.starts = np.array([b[0] for b in plan.imcu_bounds()], np.int64)
-        self._starts_list = self.starts.tolist()   # bisect beats np for O(1)
-        self.devices = serve_devices(len(self.shards), devices)
+        self.device_pool = (list(devices) if devices is not None
+                            else jax.devices())
+        self.devices = serve_devices(len(self.shards), self.device_pool)
         # tables replicate once per DEVICE, not per shard: shards placed on
-        # the same device (more IMCUs than mesh devices) share the copies
-        caches = {id(dev): _DeviceTableCache() for dev in self.devices}
+        # the same device (more IMCUs than mesh devices) share the copies —
+        # the cache dict persists so replicas/splits landing on a device
+        # later reuse the same placed tables (place_fused reuse)
+        self._caches = {id(dev): _DeviceTableCache() for dev in self.devices}
         self.executors = [
             FeatureExecutor(sp, use_kernel=use_kernel, prefetch=prefetch,
                             autotune=autotune, device=dev,
-                            table_cache=caches[id(dev)])
+                            table_cache=self._caches[id(dev)])
             for sp, dev in zip(self.shards, self.devices)]
+        self.replicas: list[list[FeatureExecutor]] = [[] for _ in self.shards]
+        self._rr = [0] * len(self.shards)   # read-fan-out cursor per shard
+        self._set_routing()
+
+    def _cache_for(self, dev) -> _DeviceTableCache:
+        return self._caches.setdefault(id(dev), _DeviceTableCache())
+
+    def _set_routing(self) -> None:
+        """Swap the routing table as ONE snapshot: readers grab the tuple
+        once, so a concurrent swap can never hand them a torn view (new
+        starts with an old bisect list)."""
+        starts = np.array([sp._start for sp in self.shards], np.int64)
+        self.starts = starts
+        self._starts_list = starts.tolist()  # bisect beats np for O(1)
+        self._routing = (starts, self._starts_list)
 
     @property
     def n_shards(self) -> int:
         return len(self.shards)
 
+    # -- adaptive shard management -------------------------------------------------
+    def n_streams(self, shard: int) -> int:
+        """Launch streams serving this shard (primary + replicas)."""
+        return 1 + len(self.replicas[shard])
+
+    def stream_executors(self, shard: int) -> list[FeatureExecutor]:
+        return [self.executors[shard], *self.replicas[shard]]
+
+    def next_executor(self, shard: int) -> FeatureExecutor:
+        """Read fan-out: round-robin the shard's launch streams. With no
+        replicas this is exactly the primary (zero-cost fast path)."""
+        reps = self.replicas[shard]
+        if not reps:
+            return self.executors[shard]
+        i = self._rr[shard]
+        self._rr[shard] = (i + 1) % (1 + len(reps))
+        return self.executors[shard] if i == 0 else reps[i - 1]
+
+    def device_load(self) -> dict[int, int]:
+        """Resident launch streams per device (``id(dev)`` keyed) — the
+        placement pressure the replica/split policies balance against."""
+        load: dict[int, int] = {}
+        for ex in self.executors:
+            load[id(ex.device)] = load.get(id(ex.device), 0) + 1
+        for reps in self.replicas:
+            for ex in reps:
+                load[id(ex.device)] = load.get(id(ex.device), 0) + 1
+        return load
+
+    def add_replica(self, shard: int, device=None) -> FeatureExecutor:
+        """Commit a REPLICA of ``shard``'s resident word stream (plus the
+        replicated tables, reused per device) to an under-loaded device and
+        fan reads out over it. The replica shares the shard's plan view, so
+        its puts attribute to the same ``per_shard`` stats entry, and a
+        parent ``refresh()`` re-puts it lazily at its next launch exactly
+        like the primary (version-keyed sync — write fan-in for free)."""
+        sp = self.shards[shard]
+        if device is None:
+            from repro.distributed.sharding import replica_device
+            held = {id(e.device) for e in self.stream_executors(shard)}
+            device = replica_device(self.device_pool, self.device_load(),
+                                    exclude=held)
+        ex = FeatureExecutor(sp, use_kernel=self.use_kernel,
+                             prefetch=self.prefetch, autotune=self.autotune,
+                             device=device, table_cache=self._cache_for(device))
+        self.replicas[shard].append(ex)
+        self._rr[shard] = 0
+        return ex
+
+    def drop_replica(self, shard: int, index: int = -1) -> FeatureExecutor:
+        """Retire one of ``shard``'s replicas (future launches stop routing
+        to it; in-flight launches already hold their operands)."""
+        if not self.replicas[shard]:
+            raise ValueError(f"shard {shard} has no replicas to drop")
+        ex = self.replicas[shard].pop(index)
+        self._rr[shard] = 0
+        return ex
+
+    def tail_rows(self) -> int:
+        """Rows currently owned by the open tail shard (append pressure)."""
+        start, stop = self.shards[-1].shard_bounds
+        return stop - start
+
+    def split_tail(self, cut: int | None = None, device=None) -> int:
+        """Split the open tail shard at parent row ``cut`` (default: the
+        word-aligned midpoint) and serve the new tail [cut, n_rows) from
+        its own committed executor on an under-loaded device. Returns the
+        new shard's index.
+
+        Swap order keeps every reader bit-exact throughout: the new shard
+        plan + executor exist first, the routing snapshot flips second
+        (rows >= cut now route to the new stream), and the old tail closes
+        LAST — a reader holding the pre-swap snapshot still finds rows >=
+        cut valid in the then-still-open old tail.
+        """
+        tail = self.shards[-1]
+        start, stop = tail.shard_bounds
+        if cut is None:
+            # word-aligned midpoint, clamped so the default stays valid on
+            # a sub-32-row tail (cut == stop closes it behind an empty one)
+            cut = min(start + max(32, (stop - start) // 2 // 32 * 32), stop)
+        new_plan = self.plan.split_tail_shard(tail, cut, close=False)
+        if device is None:
+            from repro.distributed.sharding import replica_device
+            device = replica_device(self.device_pool, self.device_load())
+        ex = FeatureExecutor(new_plan, use_kernel=self.use_kernel,
+                             prefetch=self.prefetch, autotune=self.autotune,
+                             device=device, table_cache=self._cache_for(device))
+        self.shards.append(new_plan)
+        self.executors.append(ex)
+        self.replicas.append([])
+        self._rr.append(0)
+        self.devices.append(device)
+        self._set_routing()
+        tail.close_at(cut)
+        return len(self.shards) - 1
+
     def shard_of(self, rows: np.ndarray) -> np.ndarray:
         """Owning shard per row. Rows past the last compile-time bound
         (streaming appends) belong to the open-ended last shard."""
-        s = np.searchsorted(self.starts, rows, side="right") - 1
-        return np.minimum(s, len(self.starts) - 1)
+        starts, _ = self._routing
+        s = np.searchsorted(starts, rows, side="right") - 1
+        return np.minimum(s, len(starts) - 1)
 
-    def _shard_scalar(self, row: int) -> int:
-        return min(bisect.bisect_right(self._starts_list, row) - 1,
-                   len(self._starts_list) - 1)
+    @staticmethod
+    def _shard_scalar(slist: list[int], row: int) -> int:
+        return min(bisect.bisect_right(slist, row) - 1, len(slist) - 1)
 
     def route(self, rows: np.ndarray, lo: int | None = None,
               hi: int | None = None):
@@ -1041,17 +1229,20 @@ class ShardedFeatureExecutor:
         already know the request's min/max row pass them in (the submit hot
         path validates on them anyway).
         """
+        starts, slist = self._routing       # one snapshot, never torn
         rows = np.asarray(rows, np.int64).reshape(-1)
         if lo is None:
             lo, hi = int(rows.min()), int(rows.max())
-        s_lo, s_hi = self._shard_scalar(lo), self._shard_scalar(hi)
+        s_lo = self._shard_scalar(slist, lo)
+        s_hi = self._shard_scalar(slist, hi)
         if s_lo == s_hi:                   # whole request owned by one shard
-            return [(s_lo, rows - self.starts[s_lo], None)]
-        shard = self.shard_of(rows)
+            return [(s_lo, rows - starts[s_lo], None)]
+        s = np.searchsorted(starts, rows, side="right") - 1
+        shard = np.minimum(s, len(starts) - 1)
         out = []
         for s in np.unique(shard):
             (dest,) = np.nonzero(shard == s)
-            out.append((int(s), rows[dest] - self.starts[s], dest))
+            out.append((int(s), rows[dest] - starts[s], dest))
         return out
 
     def batch(self, row_idx: np.ndarray) -> jnp.ndarray:
@@ -1072,7 +1263,7 @@ class ShardedFeatureExecutor:
         futs = []
         for s, local, dest in routed:      # dispatch all, block after
             padded = pad_rows_edge(local, _pad32(local.shape[0]))
-            futs.append((self.executors[s]._rows_future(
+            futs.append((self.next_executor(s)._rows_future(
                 padded.astype(np.int32)), local.shape[0], dest))
         if len(futs) == 1:
             return futs[0][0][:n]

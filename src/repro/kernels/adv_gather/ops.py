@@ -141,8 +141,16 @@ def place_fused(fused: FusedTables, device) -> FusedTables:
     shard's device (the tables are K-row sized — 'created once, easily
     amortized' — while the word streams stay partitioned): per-shard
     launches then run entirely against device-local operands, never pulling
-    the table across the mesh.
+    the table across the mesh. Idempotent: when the super-table already
+    lives wholly on ``device`` (a hot-shard replica landing where another
+    shard — or the plan itself — placed it) the same object is returned, so
+    adaptive replication never duplicates the table on one device.
     """
+    try:
+        if fused.table.devices() == {device}:
+            return fused
+    except Exception:       # pragma: no cover - non-committed/tracer arrays
+        pass
     import dataclasses
     return dataclasses.replace(
         fused,

@@ -55,6 +55,34 @@ force maximal coalescing; ``shutdown`` (also via the context-manager
 protocol) drains the queues and joins every pump thread. Services hold
 live threads — call :meth:`shutdown` (or use ``with``) when disposing of
 one.
+
+Adaptive shard management (mesh mode): the shard set is no longer frozen
+at plan-build time. A load monitor fed by the per-shard stats deltas
+(request-rate EWMA over ``stats['shard_batches']``) drives two policies —
+
+- **hot-shard replication with read fan-out**: when one shard's EWMA runs
+  ``hot_factor`` x the mean of the OTHER shards' (so the threshold stays
+  reachable at any shard count), its resident word stream is replicated to
+  the least-loaded device and the pump round-robins that shard's launches
+  across the copies. Each replica stream brings its own ``prefetch``-deep
+  in-flight window, so a hot shard's aggregate service capacity (launch
+  windows x devices) scales with replicas; a ``refresh()`` write
+  invalidates every copy for free because replicas re-sync from the
+  parent plan's versioned words at their next launch. Cold shards shed
+  replicas again (EWMA below the mean).
+- **tail re-shard**: streaming appends extend only the open tail shard;
+  past ``row_budget`` rows the tail is split at a word-aligned cut, the
+  new shard's stream slice is committed to an under-loaded device, and
+  the routing table (bisect bounds + per-shard queues + stats lanes) is
+  swapped atomically — queued chunks of the old tail are re-routed (and
+  split when they straddle the cut) under the service lock, so no
+  in-flight ticket is dropped, reordered, or served from the wrong slice.
+
+Both policies run ONLY on the pump thread (the sole launcher), either
+automatically every ``rebalance_every`` launches or on demand via
+:meth:`rebalance` / :meth:`add_replica` / :meth:`drop_replica` /
+:meth:`split_tail`, which marshal onto the pump and block for the result —
+so a shard-set mutation can never race a launch that is being dispatched.
 """
 from __future__ import annotations
 
@@ -94,7 +122,9 @@ class FeatureService:
                  use_kernel: bool = False, prefetch: int = 2,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  sharded: bool = False, coalesce: int = 4,
-                 linger_us: float = 0.0, devices=None):
+                 linger_us: float = 0.0, devices=None,
+                 rebalance_every: int = 0, row_budget: int | None = None,
+                 hot_factor: float = 4.0, max_replicas: int | None = None):
         if isinstance(plan, FeaturePipeline):
             plan = plan.plan
         if prefetch < 2:
@@ -103,6 +133,16 @@ class FeatureService:
             raise ValueError(f"bad bucket sizes {buckets!r}")
         if linger_us < 0:
             raise ValueError("linger_us must be >= 0")
+        if rebalance_every < 0:
+            raise ValueError("rebalance_every must be >= 0")
+        if row_budget is not None and row_budget < 32:
+            raise ValueError("row_budget must be >= 32 (one alignment word)")
+        if hot_factor < 1.0:
+            raise ValueError("hot_factor must be >= 1 (hot means above mean)")
+        if (rebalance_every or row_budget) and not (sharded and plan.packed):
+            raise ValueError("adaptive shard management (rebalance_every / "
+                             "row_budget) needs sharded=True over a packed "
+                             "plan")
         self.plan = plan
         self.packed = plan.packed
         self.prefetch = prefetch
@@ -165,10 +205,23 @@ class FeatureService:
         self._shutdown = False
         self._flushes = 0               # drain()s in progress: no lingering
         self._pump_error: BaseException | None = None
+        # -- adaptive shard management state --
+        self.rebalance_every = rebalance_every
+        self.row_budget = row_budget
+        self.hot_factor = hot_factor
+        self.max_replicas = max_replicas
+        self._mon_alpha = 0.5           # EWMA weight per monitor tick
+        self._mon_ewma = [0.0] * self._n_shards
+        self._mon_last = [0] * self._n_shards
+        self._mon_mark = 0              # launches at the last monitor tick
+        self._route_gen = 0             # bumped on every routing-table swap
+        self._admin_q: deque = deque()  # (fn, event, result_box) for the pump
         self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
                       "batches": 0, "launches": 0, "max_inflight": 0,
                       "latency_s_total": 0.0, "completed": 0,
                       "packed_ranges": 0, "bytes_h2d": 0, "split_requests": 0,
+                      "rebalances": 0, "replicas_added": 0,
+                      "replicas_dropped": 0, "shard_splits": 0,
                       "shard_launches": [0] * self._n_shards,
                       "shard_batches": [0] * self._n_shards,
                       "shard_bytes_h2d": [0] * self._n_shards}
@@ -200,6 +253,27 @@ class FeatureService:
     def n_shards(self) -> int:
         """Launch streams this service serves through (1 unsharded)."""
         return self._n_shards
+
+    @property
+    def replicas(self) -> list[int]:
+        """Replica count per shard — the read-fan-out picture the adaptive
+        policies produced (all zeros for unsharded services)."""
+        if self._sharded_ex is None:
+            return [0] * self._n_shards
+        return [len(r) for r in self._sharded_ex.replicas]
+
+    @property
+    def monitor_ewma(self) -> list[float]:
+        """Per-shard request-rate EWMA — the load monitor's current view
+        (what :meth:`rebalance` decides replicate/shed/split from)."""
+        return list(self._mon_ewma)
+
+    @property
+    def shard_starts(self) -> list[int]:
+        """Routing-table row starts per shard (grows on tail splits)."""
+        if self._sharded_ex is None:
+            return [0]
+        return list(self._sharded_ex._routing[1])
 
     def shutdown(self, drain: bool = True) -> None:
         """Stop every pump thread and join them.
@@ -275,54 +349,63 @@ class FeatureService:
         if lo < 0 or hi >= self.plan.n_rows:
             raise IndexError(f"row indices out of range [0, {self.plan.n_rows})")
         # routing, chunking and the O(chunk) alignment scan are pure
-        # functions of the request — do them OUTSIDE the lock
+        # functions of the request — do them OUTSIDE the lock. A pump-side
+        # rebalance may swap the routing table between that work and the
+        # enqueue below; the generation check catches it and reroutes (a
+        # chunk built against stale bounds would land on a shard that no
+        # longer owns its rows)
         cap = self.buckets[-1]
-        pieces, padded, aligned = [], 0, 0
-        routed = self._route(rows, lo, hi)
-        for shard, local, dest in routed:
-            for start in range(0, local.shape[0], cap):
-                chunk = local[start:start + cap]
-                bucket = self._bucket(chunk.shape[0])
-                padded += bucket - chunk.shape[0]
-                if self.packed and self._aligned_range(chunk):
-                    aligned += 1
-                d = start if dest is None else dest[start:start + cap]
-                pieces.append(_Chunk(0, chunk, chunk.shape[0], bucket,
-                                     shard, d))
-        with self._lock:
-            self._check_pump()
-            if self._shutdown:
-                raise RuntimeError("service is shut down")
-            ticket = self._next_ticket
-            self._next_ticket += 1
-            now = time.perf_counter()
-            self._submitted_at[ticket] = now
-            self.stats["requests"] += 1
-            self.stats["rows"] += rows.size
-            self.stats["padded_rows"] += padded
-            self.stats["packed_ranges"] += aligned
-            if len(routed) > 1:
-                self.stats["split_requests"] += 1
-            self._chunks_total[ticket] = len(pieces)
-            self._ticket_rows[ticket] = rows.size
-            before = {}
-            for ch in pieces:
-                ch.ticket = ticket
-                ch.t_enq = now
-                q = self._queues[ch.shard]
-                before.setdefault(ch.shard, len(q))
-                q.append(ch)
-            for s, n0 in before.items():
-                # wake discipline (each wake steals GIL time from XLA): the
-                # parked pump needs a wake when a shard queue goes empty ->
-                # nonempty (to start serving, or arm its linger timer) or
-                # when this submit completed a coalescing group; chunks
-                # landing mid-group are picked up by the pending tick
-                n1 = len(self._queues[s])
-                if n0 == 0 or (n0 < self.coalesce <= n1):
-                    self._work.notify_all()
-                    break
-        return ticket
+        while True:
+            gen = self._route_gen
+            pieces, padded, aligned = [], 0, 0
+            routed = self._route(rows, lo, hi)
+            for shard, local, dest in routed:
+                for start in range(0, local.shape[0], cap):
+                    chunk = local[start:start + cap]
+                    bucket = self._bucket(chunk.shape[0])
+                    padded += bucket - chunk.shape[0]
+                    if self.packed and self._aligned_range(chunk):
+                        aligned += 1
+                    d = start if dest is None else dest[start:start + cap]
+                    pieces.append(_Chunk(0, chunk, chunk.shape[0], bucket,
+                                         shard, d))
+            with self._lock:
+                self._check_pump()
+                if self._shutdown:
+                    raise RuntimeError("service is shut down")
+                if self._route_gen != gen:
+                    continue            # routing swapped mid-build: redo
+                ticket = self._next_ticket
+                self._next_ticket += 1
+                now = time.perf_counter()
+                self._submitted_at[ticket] = now
+                self.stats["requests"] += 1
+                self.stats["rows"] += rows.size
+                self.stats["padded_rows"] += padded
+                self.stats["packed_ranges"] += aligned
+                if len(routed) > 1:
+                    self.stats["split_requests"] += 1
+                self._chunks_total[ticket] = len(pieces)
+                self._ticket_rows[ticket] = rows.size
+                before = {}
+                for ch in pieces:
+                    ch.ticket = ticket
+                    ch.t_enq = now
+                    q = self._queues[ch.shard]
+                    before.setdefault(ch.shard, len(q))
+                    q.append(ch)
+                for s, n0 in before.items():
+                    # wake discipline (each wake steals GIL time from XLA):
+                    # the parked pump needs a wake when a shard queue goes
+                    # empty -> nonempty (to start serving, or arm its linger
+                    # timer) or when this submit completed a coalescing
+                    # group; chunks landing mid-group are picked up by the
+                    # pending tick
+                    n1 = len(self._queues[s])
+                    if n0 == 0 or (n0 < self.coalesce <= n1):
+                        self._work.notify_all()
+                        break
+                return ticket
 
     # -- bucketing ------------------------------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -393,6 +476,12 @@ class FeatureService:
         return not any(q or i or b for q, i, b in
                        zip(self._queues, self._inflights, self._busy))
 
+    def _streams(self, s: int) -> int:
+        """Launch streams serving shard s (1 + replicas). Each stream gets
+        its own ``prefetch``-deep in-flight window: read fan-out scales a
+        hot shard's aggregate window with its replica count."""
+        return self._sharded_ex.n_streams(s) if self._sharded_ex else 1
+
     def _pick_action(self):
         """Choose the pump's next action (lock held).
 
@@ -409,7 +498,8 @@ class FeatureService:
         linger_min = None
         for s in range(self._n_shards):
             queue = self._queues[s]
-            if not queue or held or len(self._inflights[s]) >= self.prefetch:
+            if not queue or held or \
+                    len(self._inflights[s]) >= self.prefetch * self._streams(s):
                 continue
             if self._linger_s > 0 and self.coalesce > 1 \
                     and not self._shutdown and not self._flushes:
@@ -429,7 +519,7 @@ class FeatureService:
             seq = infl[0][0]
             if oldest is None or seq < self._inflights[oldest][0][0]:
                 oldest = s
-            if len(infl) >= self.prefetch and (
+            if len(infl) >= self.prefetch * self._streams(s) and (
                     oldest_full is None
                     or seq < self._inflights[oldest_full][0][0]):
                 oldest_full = s
@@ -437,7 +527,7 @@ class FeatureService:
             return "retire", oldest_full
         if oldest is not None and linger_min is None:
             return "retire", oldest
-        if self._shutdown and self._all_idle():
+        if self._shutdown and self._all_idle() and not self._admin_q:
             return "exit", None
         return "wait", linger_min
 
@@ -460,6 +550,11 @@ class FeatureService:
             while True:
                 with self._lock:
                     while True:
+                        # shard-set mutations happen HERE — the pump is the
+                        # only launcher, and at this point no launch or
+                        # retire is mid-flight, so a split/replica swap can
+                        # never race a dispatch against stale routing
+                        self._drain_admin()
                         action, arg = self._pick_action()
                         if action != "wait":
                             break
@@ -490,6 +585,10 @@ class FeatureService:
                             self.stats["max_inflight"],
                             sum(len(i) for i in self._inflights))
                         self._busy[s] -= 1
+                        if self.rebalance_every and (
+                                self.stats["launches"] - self._mon_mark
+                                >= self.rebalance_every):
+                            self._rebalance_locked()
                 else:
                     dev, parts = entry
                     arr = np.asarray(dev)       # blocks on device, unlocked
@@ -502,6 +601,7 @@ class FeatureService:
         except BaseException as e:            # pragma: no cover - defensive
             with self._lock:
                 self._pump_error = e
+                self._fail_admin(e)
                 self._notify_everyone()
 
     def _take_group(self, queue: deque) -> list[_Chunk]:
@@ -538,7 +638,12 @@ class FeatureService:
             for i, ch in enumerate(group):
                 mat[i] = pad_rows_edge(ch.rows, bucket)
             mat[len(group):] = mat[len(group) - 1]   # surplus lanes unread
-            dev = self._executors[s]._rows_future(mat.reshape(-1))
+            # read fan-out: a replicated shard's launches round-robin its
+            # committed stream copies (each on its own device with its own
+            # window); without replicas this is exactly the primary
+            ex = (self._sharded_ex.next_executor(s) if self._sharded_ex
+                  else self._executors[s])
+            dev = ex._rows_future(mat.reshape(-1))
             parts = [(ch.ticket, ch.n, ch.dest, i * bucket)
                      for i, ch in enumerate(group)]
             return dev, parts, mat.nbytes
@@ -605,6 +710,230 @@ class FeatureService:
                 self.stats["latency_s_total"] += time.perf_counter() - t0
                 self.stats["completed"] += 1
         return landed
+
+    # -- adaptive shard management ---------------------------------------------------
+    def _drain_admin(self) -> None:
+        """Run queued shard-set mutations (lock held, pump thread only)."""
+        while self._admin_q:
+            fn, ev, box = self._admin_q.popleft()
+            try:
+                box.append(fn())
+            except BaseException as e:
+                box.append(e)
+            ev.set()
+
+    def _fail_admin(self, err: BaseException) -> None:
+        """Unblock admin waiters when the pump dies (lock held)."""
+        while self._admin_q:
+            _, ev, box = self._admin_q.popleft()
+            box.append(err)
+            ev.set()
+
+    def _run_admin(self, fn):
+        """Execute ``fn`` under the lock ON THE PUMP THREAD and return its
+        result. The pump is the only thread that dispatches launches, so
+        marshalling every shard-set mutation onto it makes mutation-vs-
+        launch races impossible by construction; a mutation requested from
+        the pump itself (the auto monitor) just runs inline."""
+        if threading.current_thread() is self._pump:
+            return fn()
+        ev = threading.Event()
+        box: list = []
+        with self._lock:
+            self._check_pump()
+            if self._shutdown:
+                raise RuntimeError("service is shut down")
+            self._admin_q.append((fn, ev, box))
+            self._work.notify_all()
+        while not ev.wait(timeout=0.5):
+            with self._lock:
+                self._check_pump()
+        if isinstance(box[0], BaseException):
+            raise box[0]
+        return box[0]
+
+    def _require_mesh(self) -> None:
+        if self._sharded_ex is None:
+            raise RuntimeError("adaptive shard management needs a "
+                               "sharded=True service over a packed plan")
+
+    def _add_replica_locked(self, shard: int, device=None):
+        """The ONE replica-add bookkeeping path (lock held, pump thread) —
+        shared by the public mutator and the monitor policy so stats and
+        wake discipline can never drift apart."""
+        ex = self._sharded_ex.add_replica(shard, device)
+        self.stats["replicas_added"] += 1
+        self._work.notify_all()         # the shard's window just widened
+        return ex.device
+
+    def _drop_replica_locked(self, shard: int):
+        ex = self._sharded_ex.drop_replica(shard)
+        self.stats["replicas_dropped"] += 1
+        return ex.device
+
+    def add_replica(self, shard: int, device=None):
+        """Replicate ``shard``'s resident word stream to ``device`` (default:
+        the least-loaded serve device not already holding a copy) and fan
+        reads out across the copies. Returns the replica's device. An
+        explicitly configured ``max_replicas`` bounds this too (the
+        monitor's device-count default applies only to the auto policy —
+        an operator's explicit call may replicate on a single device)."""
+        self._require_mesh()
+
+        def op():
+            if self.max_replicas is not None and \
+                    len(self._sharded_ex.replicas[shard]) >= self.max_replicas:
+                raise ValueError(f"shard {shard} already has "
+                                 f"max_replicas={self.max_replicas} replicas")
+            return self._add_replica_locked(shard, device)
+        return self._run_admin(op)
+
+    def drop_replica(self, shard: int):
+        """Retire one replica of ``shard`` (in-flight launches finish; the
+        routing change is immediate). Returns the dropped device."""
+        self._require_mesh()
+        return self._run_admin(lambda: self._drop_replica_locked(shard))
+
+    def split_tail(self, cut: int | None = None, device=None) -> int:
+        """Split the open tail shard at parent row ``cut`` (default: its
+        word-aligned midpoint) and swap the routing table atomically —
+        queued chunks of the old tail are re-routed (split in two when they
+        straddle the cut) with their tickets, order, and linger deadlines
+        intact. Returns the new shard's index."""
+        self._require_mesh()
+        return self._run_admin(lambda: self._apply_split_locked(cut, device))
+
+    def rebalance(self) -> dict:
+        """Run the load monitor's policy decisions NOW (on the pump thread)
+        and return the actions taken: ``{'split': [(old, new, cut)],
+        'replicated': [(shard, device)], 'dropped': [(shard, device)]}``.
+        Safe (a no-op) on unsharded services."""
+        return self._run_admin(self._rebalance_locked)
+
+    def _rebalance_locked(self) -> dict:
+        """Monitor tick (lock held, pump thread): update the per-shard
+        request-rate EWMA from the ``shard_batches`` stats deltas, then
+        apply the two adaptive policies — split the tail shard past its row
+        budget, replicate the hottest shard / shed replicas of cooled ones.
+        One action of each kind per tick keeps rebalancing incremental (the
+        next tick re-evaluates against the moved load)."""
+        actions: dict = {"split": [], "replicated": [], "dropped": []}
+        sx = self._sharded_ex
+        if sx is None:
+            return actions
+        self.stats["rebalances"] += 1
+        self._mon_mark = self.stats["launches"]
+        sb = self.stats["shard_batches"]
+        a = self._mon_alpha
+        for s in range(len(sb)):
+            delta = sb[s] - self._mon_last[s]
+            self._mon_last[s] = sb[s]
+            self._mon_ewma[s] = a * delta + (1 - a) * self._mon_ewma[s]
+        # -- policy 1: tail re-shard under streaming growth --
+        if self.row_budget is not None and sx.tail_rows() > self.row_budget:
+            old = len(sx.shards) - 1
+            start, _ = sx.shards[old].shard_bounds
+            cut = start + max(32, self.row_budget // 32 * 32)
+            new = self._apply_split_locked(cut)
+            actions["split"].append((old, new, cut))
+        # -- policy 2: hot-shard replication / cold-shard shedding --
+        ewma = self._mon_ewma
+        mean = sum(ewma) / max(len(ewma), 1)
+        if mean > 0 and len(ewma) > 1:
+            cap = self.max_replicas
+            if cap is None:
+                cap = len({id(d) for d in sx.device_pool}) - 1
+            hot = max(range(len(ewma)), key=lambda s: ewma[s])
+            # hot = hot_factor x the mean of the OTHER shards — including
+            # the hot shard in the reference would make the threshold
+            # unreachable whenever hot_factor >= n_shards (a 4-shard mesh
+            # under 100% skew never exceeds 4x its own all-shard mean)
+            others = (sum(ewma) - ewma[hot]) / (len(ewma) - 1)
+            if ewma[hot] > self.hot_factor * others \
+                    and len(sx.replicas[hot]) < cap:
+                actions["replicated"].append(
+                    (hot, self._add_replica_locked(hot)))
+            for s in range(len(ewma)):
+                if s != hot and sx.replicas[s] and ewma[s] < mean:
+                    actions["dropped"].append(
+                        (s, self._drop_replica_locked(s)))
+                    break
+        return actions
+
+    def _apply_split_locked(self, cut: int | None = None,
+                            device=None) -> int:
+        """Tail split + atomic routing-table swap (lock held, pump thread).
+
+        Executor-level swap first (new shard plan/stream committed, bisect
+        bounds flipped, old tail closed), then the service side: one new
+        launch queue / in-flight window / stats lane APPENDED (existing
+        shard indices never move — stats continuity), old-tail queued
+        chunks re-routed to whichever side of the cut owns their rows, and
+        the route generation bumped so any submit that raced the swap
+        rebuilds its chunks instead of enqueueing against stale bounds.
+        """
+        self._require_mesh()
+        sx = self._sharded_ex
+        old = len(sx.shards) - 1
+        new = sx.split_tail(cut=cut, device=device)
+        self._queues.append(deque())
+        self._inflights.append(deque())
+        self._busy.append(0)
+        for k in ("shard_launches", "shard_batches", "shard_bytes_h2d"):
+            self.stats[k].append(0)
+        self._mon_ewma.append(0.0)
+        self._mon_last.append(0)
+        self._n_shards += 1
+        self.stats["shard_splits"] += 1
+        self._reroute_after_split(old, new)
+        self._route_gen += 1
+        self._work.notify_all()         # the new queue may be launchable
+        return new
+
+    def _reroute_after_split(self, old: int, new: int) -> None:
+        """Move queued old-tail chunks whose rows now belong to the new
+        shard (lock held). A chunk straddling the cut splits into two —
+        its ticket's chunk count grows by one, each piece keeps its output
+        destinations, so the request retires complete and in order."""
+        sx = self._sharded_ex
+        cut_local = int(sx.shards[new]._start - sx.shards[old]._start)
+        q = self._queues[old]
+        if not q:
+            return
+        keep: deque = deque()
+        moved: deque = deque()
+        for ch in q:
+            below = ch.rows < cut_local
+            if below.all():
+                keep.append(ch)
+                continue
+            if not below.any():
+                ch.rows = ch.rows - cut_local
+                ch.shard = new
+                moved.append(ch)
+                continue
+            pos = (ch.dest + np.arange(ch.n)
+                   if isinstance(ch.dest, (int, np.integer)) else ch.dest)
+            ra, rb = ch.rows[below], ch.rows[~below] - cut_local
+            ka = _Chunk(ch.ticket, ra, ra.shape[0],
+                        self._bucket(ra.shape[0]), old, pos[below], ch.t_enq)
+            kb = _Chunk(ch.ticket, rb, rb.shape[0],
+                        self._bucket(rb.shape[0]), new, pos[~below],
+                        ch.t_enq)
+            keep.append(ka)
+            moved.append(kb)
+            self._chunks_total[ch.ticket] += 1
+            # keep the submit-time accounting honest: the two pieces pad
+            # (and range-classify) differently than the chunk they replace
+            self.stats["padded_rows"] += (ka.bucket - ka.n) + \
+                (kb.bucket - kb.n) - (ch.bucket - ch.n)
+            self.stats["packed_ranges"] += (
+                int(self._aligned_range(ka.rows)) +
+                int(self._aligned_range(kb.rows)) -
+                int(self._aligned_range(ch.rows)))
+        q.clear()
+        q.extend(keep)
+        self._queues[new].extend(moved)
 
     # -- result retrieval ----------------------------------------------------------
     def poll(self, ticket: int) -> bool:

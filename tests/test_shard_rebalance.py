@@ -1,0 +1,407 @@
+"""Randomized interleaving harness: adaptive shard management is bit-exact.
+
+The adaptive shard manager mutates the serving layout while traffic is in
+flight — streaming appends (``FeaturePlan.refresh``), tail re-shard at
+aligned AND unaligned cuts, replica add/drop with read fan-out. Every test
+here drives seeded random interleavings of those mutations with
+aligned-range and arbitrary-row serving and asserts BIT-exactness
+(``assert_array_equal``) against the unsharded int32 host reference: a
+layout mutation may move where a launch runs and which stream slice it
+reads, never the math.
+
+Sweep depth is environment-scaled: CI runs the smoke subset
+(``REBALANCE_SWEEP_SEEDS`` unset -> 2 seeds per mode); a deep local sweep
+is ``REBALANCE_SWEEP_SEEDS=10 pytest tests/test_shard_rebalance.py``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.columnar import Table
+from repro.core import (FeatureSet, FeaturePlan, FeatureExecutor,
+                        ShardedFeatureExecutor)
+from repro.serve import FeatureService
+
+BITS_SWEEP = (1, 2, 3, 4, 6, 8, 12, 16)
+N_SEEDS = int(os.environ.get("REBALANCE_SWEEP_SEEDS", "2"))
+
+
+def _column_data(rng, bits, n):
+    """Integer column whose dictionary needs exactly ``bits`` bits."""
+    k = 2 if bits == 1 else (1 << (bits - 1)) + 1
+    base = np.arange(k)
+    return np.concatenate([base, rng.integers(0, k, n - k)])
+
+
+def _bits_table(rng, n=33024, imcu_rows=8256):
+    """Bits 1-16 sweep table: every storage width class, 4 IMCU shards."""
+    data = {f"c{b}": _column_data(rng, b, n) for b in BITS_SWEEP}
+    table = Table.from_data(data, imcu_rows=imcu_rows)
+    fs = FeatureSet()
+    for b in BITS_SWEEP:
+        fs = fs.add(f"c{b}", "zscore")
+    return table, fs
+
+
+def _mixed_table(rng, n=3000, imcu_rows=700):
+    """Unaligned-seam table: 700 % 32 != 0, so shard starts sit mid-word."""
+    table = Table.from_data({
+        "age": rng.integers(18, 80, n),
+        "state": np.array(["CA", "OR", "WA", "NY"])[rng.integers(0, 4, n)],
+        "income": rng.integers(20, 200, n) * 1000,
+    }, imcu_rows=imcu_rows)
+    fs = (FeatureSet().add("age", "zscore").add("state", "onehot")
+          .add("income", "minmax"))
+    return table, fs
+
+
+def _append(rng, table, plan_p, plan_i, columns, grow=False):
+    """One streaming insert: add rows to every column's dictionary and
+    refresh BOTH plans (packed adaptive + int32 reference) identically.
+    ``grow=True`` injects novel values so dictionaries widen — small
+    columns cross tpu_width boundaries and force stream repacks."""
+    m = int(rng.integers(1, 160))
+    new = {}
+    for c in columns:
+        d = table[c].dictionary
+        vals = d.values[rng.integers(0, d.cardinality, m)]
+        if grow and np.issubdtype(d.values.dtype, np.integer):
+            fresh = int(d.values.max()) + 1 + np.arange(rng.integers(1, 5))
+            vals = np.concatenate([vals, fresh.astype(d.values.dtype)])
+        new[c] = d.add_rows(vals)
+    lens = {len(v) for v in new.values()}
+    if len(lens) > 1:                       # equalize (string columns)
+        m = min(lens)
+        new = {c: v[:m] for c, v in new.items()}
+    plan_p.refresh(new)
+    plan_i.refresh(new)
+
+
+def _pick_cut(rng, sx):
+    """A split point inside the open tail: word-aligned half the time,
+    deliberately UNALIGNED otherwise (the seam-repack path must stay
+    bit-exact too)."""
+    start, stop = sx.shards[-1].shard_bounds
+    if stop - start < 64:
+        return None
+    cut = int(rng.integers(start + 1, stop))
+    if rng.random() < 0.5:
+        cut = max(start + 32, cut // 32 * 32)
+    return cut
+
+
+def _random_request(rng, n_rows, sx):
+    """Aligned range / arbitrary rows / boundary-straddle biased rows."""
+    kind = rng.integers(0, 3)
+    if kind == 0:                                       # aligned range
+        m = int(rng.integers(1, 8)) * 32
+        start = int(rng.integers(0, max((n_rows - m) // 32, 1))) * 32
+        return np.arange(start, min(start + m, n_rows))
+    rows = rng.integers(0, n_rows, int(rng.integers(16, 400)))
+    if kind == 2:                                       # straddle the bounds
+        starts = sx.starts[1:]
+        if starts.size:
+            edges = np.concatenate([starts - 1, starts,
+                                    np.minimum(starts + 1, n_rows - 1)])
+            rows = np.concatenate([rows, np.clip(edges, 0, n_rows - 1)])
+    return rows
+
+
+def _run_interleaving(seed, table, fs, via_service, n_ops=16):
+    """One seeded interleaving of mutations and serving over one table."""
+    rng = np.random.default_rng(seed)
+    plan_p = FeaturePlan(table, fs, packed=True)
+    plan_i = FeaturePlan(table, fs)
+    ex_i = FeatureExecutor(plan_i)
+    columns = plan_p.columns
+    svc = sx = None
+    if via_service:
+        svc = FeatureService(plan_p, sharded=True, buckets=(64, 256),
+                             coalesce=4)
+        sx = svc._sharded_ex
+    else:
+        sx = ShardedFeatureExecutor(plan_p)
+    pending = []                        # (rows, ticket) awaiting verification
+
+    def verify_pending():
+        for rows, tk in pending:
+            np.testing.assert_array_equal(svc.result(tk),
+                                          np.asarray(ex_i.batch(rows)))
+        pending.clear()
+
+    def serve_check():
+        rows = _random_request(rng, plan_p.n_rows, sx)
+        if via_service:
+            pending.append((rows, svc.submit(rows)))
+            if len(pending) > 4 or rng.random() < 0.4:
+                verify_pending()
+        else:
+            np.testing.assert_array_equal(np.asarray(sx.batch(rows)),
+                                          np.asarray(ex_i.batch(rows)))
+
+    def mutate(kind):
+        if kind == "split":
+            cut = _pick_cut(rng, sx)
+            if cut is None:
+                return
+            svc.split_tail(cut) if via_service else sx.split_tail(cut)
+        elif kind == "replica_add":
+            s = int(rng.integers(0, sx.n_shards))
+            svc.add_replica(s) if via_service else sx.add_replica(s)
+        elif kind == "replica_drop":
+            cands = [s for s in range(sx.n_shards) if sx.replicas[s]]
+            if not cands:
+                return
+            s = int(rng.choice(cands))
+            svc.drop_replica(s) if via_service else sx.drop_replica(s)
+
+    try:
+        for _ in range(n_ops):
+            op = rng.choice(["serve", "serve", "serve", "append", "split",
+                             "replica_add", "replica_drop"])
+            if op == "serve":
+                serve_check()
+            elif op == "append":
+                # refresh is not atomic w.r.t. in-flight requests (the
+                # documented drain-before-refresh contract): settle first
+                if via_service:
+                    verify_pending()
+                _append(rng, table, plan_p, plan_i, columns,
+                        grow=rng.random() < 0.4)
+                serve_check()
+            elif via_service and rng.random() < 0.5:
+                # chaos variant: mutate WITH chunks queued behind pause —
+                # the routing swap must re-route them, not drop or reorder
+                svc.pause()
+                for _ in range(int(rng.integers(1, 4))):
+                    rows = _random_request(rng, plan_p.n_rows, sx)
+                    pending.append((rows, svc.submit(rows)))
+                mutate(op)
+                svc.resume()
+                verify_pending()
+            else:
+                mutate(op)
+        # deterministic epilogue: unaligned split of the tail, appends
+        # landing in the freshly split tail, then a full serving sweep
+        if via_service:
+            verify_pending()
+        start, stop = sx.shards[-1].shard_bounds
+        if stop - start >= 70:
+            cut = start + 33                   # never word-aligned
+            svc.split_tail(cut) if via_service else sx.split_tail(cut)
+        _append(rng, table, plan_p, plan_i, columns, grow=True)
+        n = plan_p.n_rows
+        tail_start = int(sx.starts[-1])
+        sweep = [np.arange(0, min(n, 256)),
+                 np.arange(max(0, n // 2 // 32 * 32), min(n, n // 2 + 128)),
+                 np.arange(tail_start, n),      # the freshly split tail
+                 rng.integers(0, n, 500)]
+        for rows in sweep:
+            if rows.size == 0:
+                continue
+            if via_service:
+                pending.append((rows, svc.submit(rows)))
+            else:
+                np.testing.assert_array_equal(np.asarray(sx.batch(rows)),
+                                              np.asarray(ex_i.batch(rows)))
+        if via_service:
+            verify_pending()
+        assert sx.n_shards >= len(table[columns[0]].imcu_bounds())
+    finally:
+        if svc is not None:
+            svc.shutdown()
+
+
+# -- the randomized sweeps -----------------------------------------------------------
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+@pytest.mark.parametrize("via_service", [False, True],
+                         ids=["executor", "service"])
+def test_interleaved_rebalance_bits_sweep(seed, via_service):
+    """Seeded random interleavings over every storage width class 1-16:
+    appends, splits (aligned + unaligned cuts), replica flips, and both
+    serving patterns stay bit-exact vs the unsharded host reference."""
+    rng = np.random.default_rng(1000 + seed)
+    table, fs = _bits_table(rng)
+    _run_interleaving(seed, table, fs, via_service)
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS + 1))
+def test_interleaved_rebalance_unaligned_seams(seed):
+    """Same harness over a table whose IMCU rows (700) are word-UNALIGNED:
+    every shard start sits mid-word, so splits/replicas exercise the
+    seam-repack slices throughout."""
+    rng = np.random.default_rng(2000 + seed)
+    table, fs = _mixed_table(rng)
+    _run_interleaving(seed, table, fs, via_service=(seed % 2 == 0))
+
+
+# -- deterministic split coverage ----------------------------------------------------
+def test_split_unaligned_cut_and_append_into_fresh_tail():
+    """An unaligned cut (mid-word on every column) closes the old tail and
+    opens a seam-repacked new tail; appends land in the fresh tail and
+    serve bit-exact, including rows straddling the new boundary."""
+    rng = np.random.default_rng(5)
+    table, fs = _mixed_table(rng, n=2048, imcu_rows=512)
+    plan_p = FeaturePlan(table, fs, packed=True)
+    plan_i = FeaturePlan(table, fs)
+    sx = ShardedFeatureExecutor(plan_p)
+    ex_i = FeatureExecutor(plan_i)
+    all_rows = np.arange(0, 2048, 3)
+    np.testing.assert_array_equal(np.asarray(sx.batch(all_rows)),
+                                  np.asarray(ex_i.batch(all_rows)))
+    cut = 1536 + 17                                # 17: unaligned everywhere
+    new = sx.split_tail(cut)
+    assert new == 4 and sx.starts[-1] == cut
+    assert sx.shards[3].shard_bounds == (1536, cut)
+    assert sx.shards[4].shard_bounds == (cut, 2048)
+    _append(rng, table, plan_p, plan_i, plan_p.columns, grow=True)
+    assert sx.shards[4].shard_bounds[1] == plan_p.n_rows  # open-ended tail
+    rows = np.concatenate([np.arange(cut - 40, min(cut + 40, plan_p.n_rows)),
+                           np.arange(2040, plan_p.n_rows),
+                           rng.integers(0, plan_p.n_rows, 300)])
+    np.testing.assert_array_equal(np.asarray(sx.batch(rows)),
+                                  np.asarray(ex_i.batch(rows)))
+
+
+def test_split_proactive_at_stop_then_append():
+    """cut == n_rows opens an EMPTY tail shard (proactive split): appends
+    land there and serve; the closed shard keeps its full row range."""
+    rng = np.random.default_rng(6)
+    table, fs = _mixed_table(rng, n=1024, imcu_rows=512)
+    plan_p = FeaturePlan(table, fs, packed=True)
+    plan_i = FeaturePlan(table, fs)
+    sx = ShardedFeatureExecutor(plan_p)
+    ex_i = FeatureExecutor(plan_i)
+    new = sx.split_tail(1024)
+    assert sx.shards[new].n_rows == 0
+    _append(rng, table, plan_p, plan_i, plan_p.columns)
+    assert sx.shards[new].n_rows == plan_p.n_rows - 1024 > 0
+    rows = np.concatenate([np.arange(1000, plan_p.n_rows),
+                           rng.integers(0, plan_p.n_rows, 200)])
+    np.testing.assert_array_equal(np.asarray(sx.batch(rows)),
+                                  np.asarray(ex_i.batch(rows)))
+
+
+def test_split_validation_contract():
+    rng = np.random.default_rng(7)
+    table, fs = _mixed_table(rng, n=1400, imcu_rows=700)
+    plan_p = FeaturePlan(table, fs, packed=True)
+    sx = ShardedFeatureExecutor(plan_p)
+    tail = sx.shards[-1]
+    with pytest.raises(ValueError):                # cut before tail start
+        sx.split_tail(64)
+    with pytest.raises(ValueError):                # cut past the end
+        sx.split_tail(1401)
+    with pytest.raises(ValueError):                # interior shards are closed
+        plan_p.split_tail_shard(sx.shards[0], 350)
+    sx.split_tail(1024)
+    with pytest.raises(ValueError):                # tail already closed
+        tail.close_at(1100)
+    with pytest.raises(RuntimeError):              # int32 plans don't split
+        FeaturePlan(table, fs).split_tail_shard(tail, 1024)
+
+
+# -- stats continuity across shard-set changes (regression) --------------------------
+def test_stats_continuity_across_split_and_replica():
+    """Rollup loses nothing and double-counts nothing when the shard set
+    changes: per_shard entries keep their identity (index = shard), the
+    new shard APPENDS, replica puts attribute to their shard's entry, and
+    the plan totals always equal the pre-shard baseline plus the sum of
+    per-shard deltas."""
+    rng = np.random.default_rng(8)
+    table, fs = _mixed_table(rng, n=2048, imcu_rows=1024)
+    plan_p = FeaturePlan(table, fs, packed=True)
+    base = plan_p.stats["words_put"]               # pre-shard baseline
+    sx = ShardedFeatureExecutor(plan_p)
+    ids0 = [id(s.stats) for s in sx.shards]
+
+    def check_rollup():
+        per = plan_p.stats["per_shard"]
+        assert per == [s.stats for s in sx.shards]
+        assert plan_p.stats["words_put"] == \
+            base + sum(s["words_put"] for s in per)
+
+    np.asarray(sx.batch(np.arange(0, 2048, 5)))    # both shards put once
+    check_rollup()
+    sx.add_replica(1)                              # replica put -> shard 1
+    np.asarray(sx.batch(np.arange(1024, 2048)))
+    np.asarray(sx.batch(np.arange(1024, 2048)))    # fan-out hits the replica
+    check_rollup()
+    assert plan_p.stats["per_shard"][1]["words_put"] >= 2  # primary+replica
+    new = sx.split_tail(1536)
+    # serve twice so BOTH of the closed shard's streams (primary + replica)
+    # re-put their truncated slices before the puts snapshot below
+    np.asarray(sx.batch(np.arange(1500, 2048)))
+    np.asarray(sx.batch(np.arange(1500, 2048)))
+    check_rollup()
+    per = plan_p.stats["per_shard"]
+    assert len(per) == 3 and new == 2
+    assert [id(s.stats) for s in sx.shards[:2]] == ids0   # stable identity
+    assert per[2]["words_put"] >= 1                # new tail attributed
+    # appends attribute to the OPEN tail only (interior shards untouched)
+    puts = [s["words_put"] for s in per]
+    _append(rng, table, plan_p, FeaturePlan(table, fs), plan_p.columns)
+    np.asarray(sx.batch(np.arange(0, plan_p.n_rows, 7)))
+    per2 = [s["words_put"] for s in plan_p.stats["per_shard"]]
+    assert per2[2] == puts[2] + 1 and per2[:2] == puts[:2]
+    check_rollup()
+
+
+# -- replica mechanics ---------------------------------------------------------------
+def test_replica_resync_after_refresh():
+    """A write (refresh) invalidates every copy of the touched shard: both
+    the primary and the replica re-put their streams lazily and keep
+    serving bit-exact — the versioned-sync write fan-in."""
+    rng = np.random.default_rng(9)
+    table, fs = _mixed_table(rng, n=2048, imcu_rows=512)
+    plan_p = FeaturePlan(table, fs, packed=True)
+    plan_i = FeaturePlan(table, fs)
+    sx = ShardedFeatureExecutor(plan_p)
+    ex_i = FeatureExecutor(plan_i)
+    sx.add_replica(3)                              # the open tail shard
+    tail_rows = np.arange(1536, 2048)
+    for _ in range(2):                             # hit primary AND replica
+        np.testing.assert_array_equal(np.asarray(sx.batch(tail_rows)),
+                                      np.asarray(ex_i.batch(tail_rows)))
+    puts0 = plan_p.stats["per_shard"][3]["words_put"]
+    _append(rng, table, plan_p, plan_i, plan_p.columns, grow=True)
+    rows = np.concatenate([tail_rows, np.arange(2048, plan_p.n_rows)])
+    for _ in range(2):                             # both streams re-synced
+        np.testing.assert_array_equal(np.asarray(sx.batch(rows)),
+                                      np.asarray(ex_i.batch(rows)))
+    assert plan_p.stats["per_shard"][3]["words_put"] >= puts0 + 2
+
+
+def test_replica_device_placement_rule():
+    """replica_device picks the least-loaded pool device, avoids devices
+    already holding the same shard, and stays deterministic on ties."""
+    from repro.distributed.sharding import replica_device
+    a, b, c = object(), object(), object()
+    pool = [a, b, c]
+    assert replica_device(pool, {}) is a                       # tie -> first
+    assert replica_device(pool, {id(a): 2, id(b): 1, id(c): 3}) is b
+    assert replica_device(pool, {id(a): 1, id(b): 1},
+                          exclude={id(c)}) is a
+    # every device excluded (shard already everywhere): least-loaded wins
+    assert replica_device(pool, {id(a): 2, id(b): 1, id(c): 3},
+                          exclude={id(a), id(b), id(c)}) is b
+    with pytest.raises(ValueError):
+        replica_device([], {})
+
+
+def test_place_fused_reuse_for_replicas():
+    """place_fused is idempotent per device, and executors sharing a device
+    (a replica landing beside another shard) share ONE placed table set."""
+    import jax
+    from repro.kernels.adv_gather import ops as adv_ops
+    rng = np.random.default_rng(10)
+    table, fs = _mixed_table(rng, n=1024, imcu_rows=512)
+    plan_p = FeaturePlan(table, fs, packed=True)
+    fused = plan_p.fused_tables()
+    dev = jax.devices()[0]
+    placed = adv_ops.place_fused(fused, dev)
+    assert adv_ops.place_fused(placed, dev) is placed          # no re-copy
+    sx = ShardedFeatureExecutor(plan_p)
+    ex = sx.add_replica(0, device=sx.executors[0].device)
+    assert ex._tcache is sx.executors[0]._tcache   # shared per-device cache

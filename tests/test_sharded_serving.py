@@ -327,6 +327,221 @@ def test_serve_mesh_and_devices_rules():
         serve_devices(0)
 
 
+# -- adaptive shard management: concurrency / chaos ----------------------------------
+def test_chaos_clients_race_live_rebalance():
+    """submit/poll/result from client threads racing live replica flips and
+    tail splits never deadlock, never drop a ticket, and every result stays
+    bit-exact (= request order preserved: rows come back in request
+    positions). Mutations here never refresh, so feature values are
+    invariant and every interleaving has one right answer."""
+    import threading
+
+    t, fs = _mixed_table(n=8192, imcu_rows=2048)
+    pipe = FeaturePipeline(t, fs)
+    ref = {}                                   # precomputed per-client refs
+    stop = threading.Event()
+    errors: list = []
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64, 256), coalesce=4) as svc:
+
+        def client(seed):
+            rng = np.random.default_rng(seed)
+            try:
+                served = 0
+                while not stop.is_set() or served == 0:
+                    rows = rng.integers(0, 8192, int(rng.integers(8, 300)))
+                    key = (seed, served % 7)
+                    if key not in ref:
+                        ref[key] = np.asarray(pipe.batch(rows))
+                        ref_rows[key] = rows
+                    rows = ref_rows[key]
+                    tk = svc.submit(rows)
+                    if served % 3 == 0:
+                        while not svc.poll(tk):
+                            time.sleep(0)
+                    np.testing.assert_array_equal(svc.result(tk), ref[key])
+                    served += 1
+            except Exception as e:             # pragma: no cover - failure
+                errors.append(e)
+
+        ref_rows: dict = {}
+        threads = [threading.Thread(target=client, args=(s,), daemon=True)
+                   for s in range(3)]
+        for th in threads:
+            th.start()
+        rng = np.random.default_rng(99)
+        cuts = iter((7168, 7680, 7936))
+        for i in range(9):                     # live shard-set churn
+            kind = i % 3
+            if kind == 0:
+                svc.add_replica(int(rng.integers(0, svc.n_shards)))
+            elif kind == 1:
+                cut = next(cuts, None)
+                if cut is not None:
+                    svc.split_tail(cut)
+            else:
+                cands = [s for s in range(svc.n_shards)
+                         if svc._sharded_ex.replicas[s]]
+                if cands:
+                    svc.drop_replica(int(rng.choice(cands)))
+            time.sleep(0.02)
+        stop.set()
+        for th in threads:
+            th.join(timeout=30.0)
+        assert not any(th.is_alive() for th in threads), "client deadlocked"
+        assert not errors, errors
+        assert svc.n_shards >= 7               # the splits actually landed
+        leftovers = svc.drain()                # no orphaned tickets remain
+        assert sum(svc.stats["shard_launches"]) == svc.stats["launches"]
+        assert not svc._chunks_total and not leftovers
+
+
+def test_drain_during_migration_force_flushes():
+    """drain() while a split lands mid-lingering must flush the re-routed
+    chunks promptly (no waiting out the linger deadline) and lose
+    nothing."""
+    t, fs = _mixed_table(n=4096, imcu_rows=1024)
+    pipe = FeaturePipeline(t, fs)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=8,
+                        linger_us=30_000_000) as svc:
+        # partial groups: they would linger 30s without the flush
+        reqs = [np.arange(3072, 3136), np.arange(3800, 3864),
+                np.arange(4000, 4064)]
+        tickets = [svc.submit(r) for r in reqs]
+        svc.split_tail(3840)                   # re-routes (and splits) them
+        t0 = time.perf_counter()
+        out = svc.drain()
+        assert time.perf_counter() - t0 < 10.0
+        assert set(out) == set(tickets)
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(out[tk], np.asarray(pipe.batch(r)))
+        # the straddle split re-states the submit-time accounting: the
+        # [3800,3864) chunk became 40+24-row pieces (64 fresh pad rows) and
+        # its tail piece is now a shard-local aligned range
+        assert svc.stats["padded_rows"] == 64
+        assert svc.stats["packed_ranges"] == 3
+
+
+def test_pause_rebalance_resume_bit_exact():
+    """pause -> rebalance() (monitor splits the over-budget tail AND
+    replicates the heated shard) -> resume: chunks queued across the swap —
+    including ones straddling the new cut — serve bit-exact."""
+    t, fs = _mixed_table(n=5000, imcu_rows=2048)   # tail IMCU: 904 rows
+    pipe = FeaturePipeline(t, fs)
+    rng = np.random.default_rng(12)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=2, row_budget=512,
+                        hot_factor=2.0, max_replicas=2) as svc:
+        for _ in range(6):                     # heat shard 0's request rate
+            svc.result(svc.submit(rng.integers(0, 2048, 64)))
+        svc.pause()
+        reqs = [np.arange(4544, 4672),         # straddles the coming cut
+                rng.integers(0, 5000, 200),
+                np.arange(4096, 5000)]         # the whole old tail
+        tickets = [svc.submit(r) for r in reqs]
+        actions = svc.rebalance()
+        assert actions["split"] and actions["split"][0][2] == 4608
+        assert actions["replicated"] and actions["replicated"][0][0] == 0
+        svc.resume()
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(svc.result(tk),
+                                          np.asarray(pipe.batch(r)))
+        assert svc.stats["shard_splits"] == 1
+        assert svc.stats["replicas_added"] == 1
+
+
+def test_auto_monitor_replicates_and_splits():
+    """The pump-driven monitor (rebalance_every) detects hot-key skew from
+    the per-shard stats deltas and replicates the hot shard; the row budget
+    splits the oversized tail — all mid-traffic, all bit-exact."""
+    t, fs = _mixed_table(n=5000, imcu_rows=2048)
+    pipe = FeaturePipeline(t, fs)
+    rng = np.random.default_rng(13)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=2, rebalance_every=4,
+                        row_budget=512, hot_factor=2.0,
+                        max_replicas=2) as svc:
+        reqs = [rng.integers(0, 2048, 64) for _ in range(30)]   # hot shard 0
+        tickets = [svc.submit(r) for r in reqs]
+        out = svc.drain()
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(out[tk], np.asarray(pipe.batch(r)))
+        assert svc.stats["rebalances"] >= 1
+        assert svc.stats["replicas_added"] >= 1        # skew detected
+        assert svc._sharded_ex.replicas[0]             # ... on shard 0
+        assert svc.stats["shard_splits"] >= 1          # tail over budget
+        mixed = np.concatenate([np.arange(4544, 4672),
+                                rng.integers(0, 5000, 300)])
+        np.testing.assert_array_equal(svc.result(svc.submit(mixed)),
+                                      np.asarray(pipe.batch(mixed)))
+
+
+def test_auto_monitor_default_hot_factor_reachable():
+    """The hot test compares against the mean of the OTHER shards, so the
+    DEFAULT hot_factor (4.0) triggers on a 4-shard mesh under pure skew —
+    with the all-shard mean it could never exceed n_shards x itself."""
+    t, fs = _mixed_table(n=4096, imcu_rows=1024)
+    rng = np.random.default_rng(14)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=2, rebalance_every=4,
+                        max_replicas=1) as svc:
+        assert svc.n_shards == 4 and svc.hot_factor == 4.0
+        for _ in range(24):                    # 100% of traffic on shard 0
+            svc.submit(rng.integers(0, 1024, 64))
+        svc.drain()
+        assert svc.stats["replicas_added"] >= 1
+        assert svc._sharded_ex.replicas[0]
+
+
+def test_manual_add_replica_respects_configured_cap():
+    """An explicitly configured max_replicas bounds the public mutator too,
+    not just the auto policy."""
+    t, fs = _mixed_table(n=2048, imcu_rows=1024)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        max_replicas=1) as svc:
+        svc.add_replica(0)
+        with pytest.raises(ValueError):
+            svc.add_replica(0)
+    # unset cap: explicit operator calls are unbounded (single-device OK)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True) as svc:
+        svc.add_replica(1)
+        svc.add_replica(1)
+        assert len(svc._sharded_ex.replicas[1]) == 2
+
+
+def test_split_tail_default_cut_clamps_on_short_tail():
+    """A no-arg split_tail() on a sub-32-row tail clamps its default cut to
+    the tail end (proactive close) instead of raising."""
+    t, fs = _mixed_table(n=2048 + 20, imcu_rows=1024)   # 20-row tail IMCU
+    plan_p = FeaturePlan(t, fs, packed=True)
+    sx = ShardedFeatureExecutor(plan_p)
+    assert sx.tail_rows() == 20
+    new = sx.split_tail()                      # default cut: clamped to stop
+    assert sx.shards[new].n_rows == 0
+    rows = np.arange(2040, 2068)
+    np.testing.assert_array_equal(
+        np.asarray(sx.batch(rows)),
+        np.asarray(FeatureExecutor(FeaturePlan(t, fs)).batch(rows)))
+
+
+def test_adaptive_args_validation():
+    t, fs = _mixed_table(n=1400, imcu_rows=700)
+    plan_i = FeaturePlan(t, fs)
+    with pytest.raises(ValueError):            # adaptive needs mesh mode
+        FeatureService(plan_i, rebalance_every=4)
+    with pytest.raises(ValueError):
+        FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                       row_budget=16)          # below one alignment word
+    with FeatureService(plan_i) as svc:        # unsharded: admin is guarded
+        with pytest.raises(RuntimeError):
+            svc.add_replica(0)
+        with pytest.raises(RuntimeError):
+            svc.split_tail()
+        assert svc.rebalance() == {"split": [], "replicated": [],
+                                   "dropped": []}      # monitor no-ops
+
+
 def test_sharded_service_serves_widened_plan_after_refresh():
     """A refresh that GROWS a dictionary (onehot widens -> out_dim grows)
     must keep the pump serving multi-chunk requests — retire buffers size
