@@ -9,6 +9,8 @@ all records (``BENCH_full.json`` / ``BENCH_smoke.json``) for CI artifacts.
   table6  featurization catalog build/apply            (paper §6.1)
   serve   seed loop vs pump FeatureService vs packed
           range/random coalesced serving               (serving trajectory)
+  query   predicate pushdown: on-device scan+compact+serve
+          vs host filter-then-gather                   (paper §5/§6)
   fig1/2  end-to-end pipeline: traditional vs ADV      (paper Figs 1-2)
   roofline  dry-run derived terms (if results present) (EXPERIMENTS.md)
 
@@ -40,9 +42,9 @@ def main(argv: list[str] | None = None) -> None:
 
     print("name,us_per_call,derived")
     from benchmarks import (bench_compression, bench_count_stats, bench_adv,
-                            bench_featurize, bench_pipeline)
+                            bench_featurize, bench_query, bench_pipeline)
     mods = [bench_compression, bench_count_stats, bench_adv,
-            bench_featurize, bench_pipeline]
+            bench_featurize, bench_query, bench_pipeline]
     try:
         from benchmarks import roofline
         mods.append(roofline)

@@ -61,8 +61,13 @@ tables), then serves featurization requests six ways:
    true multi-device placement on CPU),
 4. skewed traffic -> monitor -> replicate -> re-shard: the adaptive cycle
    above, driven by Zipf-hot lookups and a streaming append,
-5. streaming double-buffered iteration (serve_stream),
-6. a streaming insert followed by an incremental plan refresh — only the
+5. predicate-filtered serving (query pushdown): ``submit(where=...)``
+   evaluates dictionary-code predicates directly on the resident packed
+   words (scan -> compact -> gather, one device pipeline — no decoded
+   code stream, no host round trip), plus dict-aware masked aggregates
+   (``count_where`` / ``groupby_where`` / ``agg_where``),
+6. streaming double-buffered iteration (serve_stream),
+7. a streaming insert followed by an incremental plan refresh — only the
    columns whose dictionaries changed are re-put on device; appended rows
    extend the open-ended LAST shard, so sharded services keep serving.
 
@@ -169,13 +174,39 @@ def main() -> None:
               f"splits={svca.stats['shard_splits']}, "
               f"replicas_added={svca.stats['replicas_added']}")
 
-    # 5. streaming
+    # 5. query pushdown: serve features WHERE ... as ONE device pipeline.
+    # The predicate compiles to code-space terms (equality/ranges ->
+    # [lo, hi] compares, IN-sets -> a K-entry LUT probe), the scan
+    # evaluates them on the resident packed words without decoding a code
+    # stream, the selection compacts to row indices on device, and those
+    # indices feed the same packed gather every other request uses. Only
+    # the match count (one scalar) and the features come back to the host.
+    from repro.columnar import query as Q
+    pred = Q.isin("state", [3, 7, 11]) & Q.gt("age", 60)
+    with FeatureService(FeaturePlan(table, features, packed=True),
+                        sharded=True, buckets=(512,), coalesce=8,
+                        linger_us=1000) as svcq:
+        tq = svcq.submit(where=pred)       # sharded: each shard scans and
+        feats = svcq.result(tq)            # serves its own matches locally
+        print(f"filtered serving: {pred!r} -> {feats.shape[0]} rows "
+              f"({svcq.stats['filtered_requests']} filtered request(s), "
+              f"features {feats.shape})")
+        # dict-aware masked aggregates: a masked per-code histogram over
+        # the resident words, then K-entry tail math — COUNT/SUM/MEAN
+        # under a predicate never touch an N-row value stream
+        vals, counts = svcq.groupby_where("state", Q.gt("age", 60))
+        top = vals[np.argmax(counts)]
+        print(f"aggregates: count={svcq.count_where(pred)}, "
+              f"mean(income | pred)={svcq.agg_where(pred, 'income', 'mean'):.0f}, "
+              f"busiest state over 60: {top} ({counts.max()} rows)")
+
+    # 6. streaming
     stream = svc.serve_stream(rng.integers(0, n, 256) for _ in range(8))
     for rows, out in stream:
         pass
     print(f"streamed 8 batches, last={out.shape}")
 
-    # 5. streaming insert + incremental refresh
+    # 7. streaming insert + incremental refresh
     new_codes = {
         "age": table["age"].dictionary.add_rows(np.array([101, 102])),
         "state": table["state"].dictionary.add_rows(np.array([7, 7])),

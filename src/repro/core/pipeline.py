@@ -74,17 +74,37 @@ import jax.numpy as jnp
 
 from repro.columnar.bitpack import (pack_bits, packed_gather, packed_nbytes,
                                     unpack_bits)
+from repro.columnar import query as colquery
 from repro.columnar.table import Table
 from repro.core.adv import AugmentedDictionary
 from repro.core.feature_spec import FeatureSet
 from repro.kernels.adv_gather import ops as adv_ops
 from repro.kernels.bitunpack.kernel import tpu_width
+from repro.kernels.predicate_scan import ops as scan_ops
 
 
 def _pad32(n: int) -> int:
     """Round up to the word-alignment quantum: a row index that is a
     multiple of 32 is word-aligned at EVERY divisor width (32/db | 32)."""
     return ((max(n, 1) + 31) // 32) * 32
+
+
+def _agg_from_counts(d, counts: np.ndarray, agg: str) -> float:
+    """Dict-aware aggregate tail: a masked per-code histogram + the K
+    dictionary values give count/sum/mean without touching any row."""
+    counts = np.asarray(counts, np.float64)
+    n = float(counts.sum())
+    if agg == "count":
+        return n
+    if not d.is_numeric():
+        raise TypeError(f"{agg} requires a numeric dictionary "
+                        f"(column {d.name!r} is {d.values.dtype})")
+    s = float(np.dot(d.values.astype(np.float64), counts))
+    if agg == "sum":
+        return s
+    if agg == "mean":
+        return s / n if n else float("nan")
+    raise ValueError(f"unknown agg {agg!r}")
 
 
 def pad_rows_edge(rows: np.ndarray, to: int) -> np.ndarray:
@@ -180,6 +200,18 @@ def _packed_fused_rows(flat_words, table, row_offsets, card_limits, rows, *,
     return adv_ops.adv_gather_packed_rows(flat_words, word_offs, dbs, table,
                                           row_offsets, card_limits, rows,
                                           out_dim, bn=bn, bk=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("dbs", "word_offs", "cap"))
+def _packed_split_where(flat_words, tables, mask, *, dbs, word_offs, cap):
+    """Selection-mask -> (rows, features) in ONE launch: the bitmap
+    compaction and the indexed gather fuse into a single jit, so the
+    compacted index vector never surfaces as a separate dispatch on the
+    filtered-serving hot path (each dependent eager step costs a dispatch
+    + device round trip)."""
+    rows = scan_ops.compact_rows(mask, cap)
+    return rows, adv_ops.adv_gather_packed_rows_split(flat_words, word_offs,
+                                                      dbs, tables, rows)
 
 
 class _ShardStats(dict):
@@ -675,6 +707,13 @@ class FeatureExecutor:
         self._jit_fused = jax.jit(self._fused_impl,
                                   static_argnames=("out_dim", "bn", "bk"))
         self._fused_blocks_cache: dict[int, tuple[int, int]] = {}
+        # compiled-predicate cache: a deployed filter family scans on every
+        # request, so the code-set compile + the device put of the packed
+        # term arrays must not repeat per call (keyed also by dictionary
+        # cardinalities — appends that grow a dictionary can change what a
+        # value predicate matches). Unconditional: int32 plans still reach
+        # _compiled_pred to raise the packed-plan guard.
+        self._pred_cache: dict = {}
         if self.packed:
             # ONE flat device-resident stream holds every column's words
             # (column c's start at _word_offs[c]); range windows are
@@ -941,6 +980,136 @@ class FeatureExecutor:
         return _packed_split_rows(
             self._flat_words, self._device_tables(),
             dev_rows, dbs=dbs, word_offs=self._word_offs)
+
+    # -- predicate pushdown: scan -> compact -> gather on resident words ----------
+    def _scan_terms(self, pred) -> tuple[tuple, str]:
+        """Compile a value-space predicate to device scan terms: each leaf
+        runs once over its column's K dictionary entries, and column names
+        resolve to this plan's resident stream slots."""
+        if not self.packed:
+            raise RuntimeError("predicate pushdown runs on packed plans "
+                               "only; int32 plans filter host-side")
+        dicts = {c: self.plan.augmented[c].dictionary
+                 for c in self.plan.columns}
+        cp = colquery.compile_predicate(pred, dicts)
+        slot = {c: i for i, c in enumerate(self.plan.columns)}
+        terms = tuple(scan_ops.ScanTerm(col=slot[t.column], kind=t.kind,
+                                        lo=t.lo, hi=t.hi, lut=t.lut)
+                      for t in cp.terms)
+        return terms, cp.combine
+
+    def _compiled_pred(self, pred):
+        """(terms, combine, packed device arrays) for a predicate, cached.
+
+        Cache key includes every dictionary's cardinality: dictionaries
+        only ever GROW (appends may add values), and a grown dictionary can
+        change a value predicate's matching code set, so stale entries age
+        out naturally the first request after such a refresh."""
+        key = (pred, tuple(self.plan.augmented[c].dictionary.cardinality
+                           for c in self.plan.columns))
+        hit = self._pred_cache.get(key)
+        if hit is None:
+            terms, combine = self._scan_terms(pred)
+            packed = scan_ops.pack_terms(terms,
+                                         tuple(self.plan.device_bits))
+            hit = self._pred_cache[key] = (terms, combine, packed)
+        return hit
+
+    def _mask_future(self, terms: tuple, combine: str,
+                     packed=None) -> jnp.ndarray:
+        """Async device scan: compiled terms -> (n_rows,) bool selection
+        mask against the resident word streams. No decoded code stream
+        exists anywhere — the scan unpacks in-register."""
+        self.ensure_range_capacity(self.plan.n_rows)
+        dbs = tuple(self.plan.device_bits)
+        if self.use_kernel:
+            return scan_ops.predicate_scan(
+                self._flat_words, self._word_offs, dbs, terms,
+                self.plan.n_rows, combine)
+        return scan_ops.predicate_scan_split(
+            self._flat_words, self._word_offs, dbs, terms,
+            self.plan.n_rows, combine, packed=packed)
+
+    def _mask_count_future(self, pred):
+        """(mask, count) device futures from one scan launch (split path;
+        the Pallas path adds an eager reduction)."""
+        terms, combine, packed = self._compiled_pred(pred)
+        if self.use_kernel:
+            mask = self._mask_future(terms, combine)
+            return mask, mask.sum()
+        self.ensure_range_capacity(self.plan.n_rows)
+        return scan_ops.predicate_scan_split_count(
+            self._flat_words, self._word_offs,
+            tuple(self.plan.device_bits), terms, self.plan.n_rows,
+            combine, packed=packed)
+
+    def predicate_mask(self, pred) -> jnp.ndarray:
+        """(n_rows,) bool device mask for a value-space predicate."""
+        terms, combine, packed = self._compiled_pred(pred)
+        return self._mask_future(terms, combine, packed)
+
+    def count_where(self, pred) -> int:
+        """SELECT COUNT(*) WHERE pred — one device scan + reduction."""
+        return int(self._mask_count_future(pred)[1])
+
+    def filtered_rows(self, pred) -> np.ndarray:
+        """Matching row indices (ascending int64), compacted on device."""
+        mask, cnt_dev = self._mask_count_future(pred)
+        cnt = int(cnt_dev)             # one scalar sync: the static shape
+        if cnt == 0:
+            return np.zeros(0, np.int64)
+        rows = scan_ops.compact_rows(mask, _pad32(cnt))
+        return np.asarray(rows[:cnt]).astype(np.int64)
+
+    def batch_where(self, pred) -> tuple[np.ndarray, jnp.ndarray]:
+        """Filtered featurization: scan -> compact -> indexed gather, all
+        against the resident streams. Returns (rows, features) for the
+        matching rows in ascending row order. The ONE host sync is the
+        match count (the static launch shape); the compacted index vector
+        feeds the gather without ever visiting the host."""
+        mask, cnt_dev = self._mask_count_future(pred)
+        cnt = int(cnt_dev)
+        if cnt == 0:
+            return (np.zeros(0, np.int64),
+                    jnp.zeros((0, self.plan.out_dim), jnp.float32))
+        if self.kernel_active:
+            rows_dev = scan_ops.compact_rows(mask, _pad32(cnt))
+            feats = self._rows_future(rows_dev)    # device-to-device indices
+            return np.asarray(rows_dev[:cnt]).astype(np.int64), feats[:cnt]
+        self.ensure_range_capacity(self.plan.n_rows)
+        rows_dev, feats = _packed_split_where(
+            self._flat_words, self._device_tables(), mask,
+            dbs=tuple(self.plan.device_bits), word_offs=self._word_offs,
+            cap=_pad32(cnt))
+        return np.asarray(rows_dev[:cnt]).astype(np.int64), feats[:cnt]
+
+    def _masked_counts_from(self, column: str, mask: jnp.ndarray) -> jnp.ndarray:
+        """Async (K,) per-code counts of ``column`` under a device mask."""
+        try:
+            ci = self.plan.columns.index(column)
+        except ValueError:
+            raise KeyError(f"column {column!r} not in plan "
+                           f"({self.plan.columns})") from None
+        d = self.plan.augmented[column].dictionary
+        return scan_ops.masked_counts(
+            self._flat_words, self._word_offs[ci],
+            self.plan.device_bits[ci], mask, d.cardinality,
+            self.plan.n_rows, use_kernel=self.use_kernel)
+
+    def groupby_where(self, column: str, pred) -> tuple[np.ndarray, np.ndarray]:
+        """GROUP BY column COUNT(*) WHERE pred — masked histogram over the
+        resident words; returns (values, counts) like ``groupby_count``."""
+        counts = self._masked_counts_from(column,
+                                          self.predicate_mask(pred))
+        d = self.plan.augmented[column].dictionary
+        return d.values, np.asarray(counts).astype(np.int64)
+
+    def agg_where(self, pred, column: str, agg: str = "count") -> float:
+        """Masked count/sum/mean of ``column`` under ``pred`` — K-entry
+        dictionary tail work on top of the device masked histogram."""
+        counts = self._masked_counts_from(column, self.predicate_mask(pred))
+        d = self.plan.augmented[column].dictionary
+        return _agg_from_counts(d, np.asarray(counts), agg)
 
     # -- single batch -------------------------------------------------------------
     def slice_codes(self, row_idx: np.ndarray) -> np.ndarray:
@@ -1244,6 +1413,86 @@ class ShardedFeatureExecutor:
             (dest,) = np.nonzero(shard == s)
             out.append((int(s), rows[dest] - starts[s], dest))
         return out
+
+    # -- predicate pushdown, sharded: scan per shard, serve matches locally -------
+    def _shard_masks(self, pred) -> list[tuple[int, FeatureExecutor, jnp.ndarray]]:
+        """Dispatch every shard's device scan before blocking on any count.
+
+        The predicate compiles ONCE (dictionaries are shared across shard
+        views); each shard's scan runs on the executor that owns (or
+        replicates) its resident stream, so filter evaluation happens where
+        the data lives — compute to the data, like the gathers.
+        """
+        terms = combine = None
+        out = []
+        for s in range(self.n_shards):
+            ex = self.next_executor(s)
+            if terms is None:
+                terms, combine = ex._scan_terms(pred)
+            out.append((s, ex, ex._mask_future(terms, combine)))
+        return out
+
+    def count_where(self, pred) -> int:
+        return sum(int(m.sum()) for _, _, m in self._shard_masks(pred))
+
+    def filtered_rows(self, pred) -> np.ndarray:
+        """Matching GLOBAL row indices, ascending (shards are ordered by
+        start row, so shard-order concatenation IS global row order)."""
+        starts, _ = self._routing
+        parts = []
+        for s, ex, mask in self._shard_masks(pred):
+            cnt = int(mask.sum())
+            if cnt == 0:
+                continue
+            rows = scan_ops.compact_rows(mask, _pad32(cnt))
+            parts.append(np.asarray(rows[:cnt]).astype(np.int64)
+                         + int(starts[s]))
+        return np.concatenate(parts) if parts else np.zeros(0, np.int64)
+
+    def batch_where(self, pred) -> tuple[np.ndarray, jnp.ndarray]:
+        """Filtered featurization across the mesh: each shard scans its own
+        resident stream, compacts its matches on device, and gathers them
+        LOCALLY — no shard ships bytes to another device; the host only
+        assembles the per-shard results in global row order."""
+        starts, _ = self._routing
+        futs, total = [], 0
+        for s, ex, mask in self._shard_masks(pred):
+            cnt = int(mask.sum())
+            if cnt == 0:
+                continue
+            rows = scan_ops.compact_rows(mask, _pad32(cnt))
+            futs.append((s, ex._rows_future(rows), rows, cnt))
+            total += cnt
+        if not futs:
+            return (np.zeros(0, np.int64),
+                    jnp.zeros((0, self.plan.out_dim), jnp.float32))
+        rows_out = np.empty(total, np.int64)
+        feats_out = np.empty((total, self.plan.out_dim), np.float32)
+        off = 0
+        for s, fut, rows, cnt in futs:     # all dispatched; block in order
+            rows_out[off:off + cnt] = \
+                np.asarray(rows[:cnt]).astype(np.int64) + int(starts[s])
+            feats_out[off:off + cnt] = np.asarray(fut)[:cnt]
+            off += cnt
+        return rows_out, jnp.asarray(feats_out)
+
+    def groupby_where(self, column: str,
+                      pred) -> tuple[np.ndarray, np.ndarray]:
+        """GROUP BY column COUNT(*) WHERE pred across the mesh: per-shard
+        masked histograms (local words, local mask) summed on the host —
+        K-entry partials, never row-space traffic."""
+        futs = [ex._masked_counts_from(column, mask)
+                for _, ex, mask in self._shard_masks(pred)]
+        counts = np.sum([np.asarray(f) for f in futs], axis=0)
+        d = self.plan.augmented[column].dictionary
+        return d.values, counts.astype(np.int64)
+
+    def agg_where(self, pred, column: str, agg: str = "count") -> float:
+        futs = [ex._masked_counts_from(column, mask)
+                for _, ex, mask in self._shard_masks(pred)]
+        counts = np.sum([np.asarray(f) for f in futs], axis=0)
+        d = self.plan.augmented[column].dictionary
+        return _agg_from_counts(d, counts, agg)
 
     def batch(self, row_idx: np.ndarray) -> jnp.ndarray:
         """Routed featurization of arbitrary rows, request order preserved.

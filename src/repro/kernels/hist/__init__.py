@@ -1,4 +1,4 @@
 from repro.kernels.hist import ops, ref
-from repro.kernels.hist.ops import hist
+from repro.kernels.hist.ops import hist, masked_hist
 
-__all__ = ["ops", "ref", "hist"]
+__all__ = ["ops", "ref", "hist", "masked_hist"]

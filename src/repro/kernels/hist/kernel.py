@@ -48,3 +48,43 @@ def hist_pallas(codes: jnp.ndarray, k: int, bn: int = 1024, bk: int = 512,
         out_shape=jax.ShapeDtypeStruct((1, k), jnp.int32),
         interpret=interpret,
     )(codes.reshape(1, n)).reshape(k)
+
+
+def _masked_hist_kernel(codes_ref, mask_ref, out_ref, *, bk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]                       # (1, BN) int32
+    mask = mask_ref[...]                         # (1, BN) int32
+    k0 = pl.program_id(0) * bk
+    bn = codes.shape[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bk, bn), 0) + k0
+    hits = ((rows == codes) & (mask > 0)).astype(jnp.int32)   # (BK, BN)
+    out_ref[...] += hits.sum(axis=1, keepdims=True).reshape(1, bk)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "bk", "interpret"))
+def masked_hist_pallas(codes: jnp.ndarray, mask: jnp.ndarray, k: int,
+                       bn: int = 1024, bk: int = 512,
+                       interpret: bool = True) -> jnp.ndarray:
+    """codes (N,) int32 in [0, k), mask (N,) int32 -> counts (k,) int32 of
+    the codes whose mask lane is nonzero — the predicate-pushdown aggregate
+    core: the count tile stays resident while code AND selection-bitmap
+    blocks stream past it together.
+
+    Preconditions (ops.py): N % bn == 0, k % bk == 0.
+    """
+    n = codes.shape[0]
+    grid = (k // bk, n // bn)
+    return pl.pallas_call(
+        functools.partial(_masked_hist_kernel, bk=bk),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, bn), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((1, bk), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.int32),
+        interpret=interpret,
+    )(codes.reshape(1, n), mask.reshape(1, n)).reshape(k)

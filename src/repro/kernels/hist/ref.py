@@ -4,3 +4,9 @@ import jax.numpy as jnp
 
 def hist_ref(codes: jnp.ndarray, k: int) -> jnp.ndarray:
     return jnp.bincount(codes, length=k).astype(jnp.int32)
+
+
+def masked_hist_ref(codes: jnp.ndarray, mask: jnp.ndarray,
+                    k: int) -> jnp.ndarray:
+    return jnp.bincount(jnp.where(mask, codes, k), length=k + 1)[:k] \
+        .astype(jnp.int32)

@@ -1,0 +1,10 @@
+from repro.kernels.predicate_scan import ops, ref
+from repro.kernels.predicate_scan.ops import (ScanTerm, pack_terms,
+                                              predicate_scan,
+                                              predicate_scan_split,
+                                              predicate_scan_split_count,
+                                              compact_rows, masked_counts)
+
+__all__ = ["ops", "ref", "ScanTerm", "pack_terms", "predicate_scan",
+           "predicate_scan_split", "predicate_scan_split_count",
+           "compact_rows", "masked_counts"]

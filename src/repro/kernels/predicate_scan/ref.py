@@ -1,0 +1,64 @@
+"""Numpy host oracles for the predicate-scan kernel.
+
+The reference works on the SAME device-width packed word streams the kernel
+scans (not on pre-decoded codes), so a test that compares against it checks
+the whole unpack-and-compare pipeline bit-exactly, word straddles included.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.columnar.bitpack import unpack_bits
+
+
+def term_mask_ref(codes: np.ndarray, term) -> np.ndarray:
+    """Evaluate one compiled code-space term over an int32 code vector.
+
+    ``term`` needs ``kind`` (0 = range, 1 = LUT), ``lo``/``hi`` and ``lut``
+    attributes — the :class:`repro.kernels.predicate_scan.ops.ScanTerm`
+    shape, duck-typed so the oracle stays import-free of the ops layer.
+    """
+    if term.kind == 0:
+        return (codes >= term.lo) & (codes <= term.hi)
+    lut = np.asarray(term.lut)
+    return lut[np.minimum(codes, lut.shape[0] - 1)] != 0
+
+
+def predicate_scan_ref(words_list, dbs, terms, n: int,
+                       combine: str = "and") -> np.ndarray:
+    """Host oracle: unpack each referenced column's word stream and combine
+    the per-term masks. ``words_list[c]`` is column c's device-width packed
+    words (``dbs[c]`` bits); returns the (n,) bool selection mask."""
+    if not terms:
+        raise ValueError("need at least one predicate term")
+    if combine not in ("and", "or"):
+        raise ValueError(f"unknown combinator {combine!r}")
+    acc = None
+    codes_cache: dict[int, np.ndarray] = {}
+    for t in terms:
+        codes = codes_cache.get(t.col)
+        if codes is None:
+            codes = unpack_bits(np.asarray(words_list[t.col], np.uint32),
+                                dbs[t.col], n)
+            codes_cache[t.col] = codes
+        m = term_mask_ref(codes, t)
+        if acc is None:
+            acc = m
+        else:
+            acc = (acc & m) if combine == "and" else (acc | m)
+    return acc
+
+
+def compact_rows_ref(mask: np.ndarray) -> np.ndarray:
+    """Host oracle for bitmap compaction: ascending matching row indices."""
+    return np.flatnonzero(np.asarray(mask)).astype(np.int32)
+
+
+def masked_counts_ref(codes: np.ndarray, mask: np.ndarray,
+                      k: int) -> np.ndarray:
+    """Host oracle for the dict-aware masked aggregate: per-code counts of
+    rows where ``mask`` — sum/mean of the column then follow from K
+    dictionary entries (counts · values), never the N-row stream."""
+    codes = np.asarray(codes)
+    return np.bincount(codes[np.asarray(mask, bool)],
+                       minlength=k).astype(np.int32)[:k]

@@ -220,6 +220,7 @@ class FeatureService:
                       "batches": 0, "launches": 0, "max_inflight": 0,
                       "latency_s_total": 0.0, "completed": 0,
                       "packed_ranges": 0, "bytes_h2d": 0, "split_requests": 0,
+                      "filtered_requests": 0,
                       "rebalances": 0, "replicas_added": 0,
                       "replicas_dropped": 0, "shard_splits": 0,
                       "shard_launches": [0] * self._n_shards,
@@ -335,13 +336,49 @@ class FeatureService:
             return [(0, rows, None)]
         return self._sharded_ex.route(rows, lo, hi)
 
-    def submit(self, rows: np.ndarray) -> int:
+    def submit(self, rows: np.ndarray | None = None, *, where=None) -> int:
         """Enqueue a featurization request; returns a ticket for the result.
 
         Only queues: the background pumps pick the chunks up, coalesce them
         with other queued work owned by the same shard and launch — the
         caller goes on submitting while the devices gather.
+
+        ``where=<predicate>`` (instead of explicit ``rows``) is the
+        pushdown form: the matching rows are found by the device-side
+        predicate scan over the resident word streams (per shard on a mesh
+        service) and then pumped through the SAME coalescing launch path as
+        any explicit request — "serve features WHERE ..." as one ticket.
         """
+        filtered = where is not None
+        if filtered:
+            if rows is not None:
+                raise ValueError("pass rows OR where, not both")
+            if not self.packed:
+                raise RuntimeError("predicate-filtered serving needs a "
+                                   "packed plan (resident word streams)")
+            ex = self._sharded_ex if self._sharded_ex is not None \
+                else self._executor
+            rows = ex.filtered_rows(where)
+            if rows.size == 0:
+                # empty selection: nothing to pump — mint a ticket whose
+                # (0, F) result is already on host (poll/result check the
+                # results map before the chunk ledger, so this short-
+                # circuit needs no pump cooperation)
+                with self._lock:
+                    self._check_pump()
+                    if self._shutdown:
+                        raise RuntimeError("service is shut down")
+                    ticket = self._next_ticket
+                    self._next_ticket += 1
+                    self.stats["requests"] += 1
+                    self.stats["filtered_requests"] += 1
+                    self.stats["completed"] += 1
+                    self._results[ticket] = np.zeros(
+                        (0, self.plan.out_dim), np.float32)
+                    self._cv.notify_all()
+                return ticket
+        elif rows is None:
+            raise ValueError("need rows or where")
         rows = np.asarray(rows, dtype=np.int64).reshape(-1)
         if rows.size == 0:
             raise ValueError("empty request")
@@ -383,6 +420,8 @@ class FeatureService:
                 self.stats["rows"] += rows.size
                 self.stats["padded_rows"] += padded
                 self.stats["packed_ranges"] += aligned
+                if filtered:
+                    self.stats["filtered_requests"] += 1
                 if len(routed) > 1:
                     self.stats["split_requests"] += 1
                 self._chunks_total[ticket] = len(pieces)
@@ -1014,6 +1053,31 @@ class FeatureService:
             for t in out:
                 del self._results[t]
             return out
+
+    # -- predicate pushdown queries (no pump involvement) -----------------------------
+    def _pushdown_ex(self):
+        if not self.packed:
+            raise RuntimeError("predicate pushdown needs a packed plan "
+                               "(resident word streams)")
+        return self._sharded_ex if self._sharded_ex is not None \
+            else self._executor
+
+    def filtered_rows(self, where) -> np.ndarray:
+        """Matching row indices via the device predicate scan (per shard on
+        a mesh service, matches found where the data lives)."""
+        return self._pushdown_ex().filtered_rows(where)
+
+    def count_where(self, where) -> int:
+        """SELECT COUNT(*) WHERE — one device scan + reduction per shard."""
+        return self._pushdown_ex().count_where(where)
+
+    def groupby_where(self, column: str, where):
+        """GROUP BY column COUNT(*) WHERE — masked device histograms."""
+        return self._pushdown_ex().groupby_where(column, where)
+
+    def agg_where(self, where, column: str, agg: str = "count") -> float:
+        """Masked count/sum/mean of ``column`` under a predicate."""
+        return self._pushdown_ex().agg_where(where, column, agg)
 
     # -- streaming convenience -------------------------------------------------------
     def serve_stream(self, row_batches):

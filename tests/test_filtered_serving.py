@@ -1,0 +1,262 @@
+"""Filtered serving end-to-end: predicate compiler, executor/sharded
+pushdown (scan -> compact -> local gather), FeatureService submit(where=),
+dict-aware masked aggregates, and the query.py bugfix regressions
+(per-IMCU filter_mask decode, vectorized join_codes).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.columnar.column import Column
+from repro.columnar.table import Table
+from repro.columnar import query as Q
+from repro.core import FeaturePlan, FeatureExecutor, ShardedFeatureExecutor
+from repro.core.feature_spec import FeatureSet
+from repro.serve.feature_service import FeatureService
+
+
+def _fixture(seed=0, n=4000, imcu_rows=700):
+    rng = np.random.default_rng(seed)
+    age = rng.integers(18, 91, n)
+    state = rng.integers(0, 51, n)
+    income = np.round(rng.lognormal(10, 1, n), -2)
+    device = rng.integers(0, 5, n)
+    t = Table({"age": Column.from_data(age, "age", imcu_rows=imcu_rows),
+               "state": Column.from_data(state, "state",
+                                         imcu_rows=imcu_rows),
+               "income": Column.from_data(income, "income",
+                                          imcu_rows=imcu_rows),
+               "device": Column.from_data(device, "device",
+                                          imcu_rows=imcu_rows)})
+    fs = (FeatureSet().add("age", "zscore")
+          .add("state", "onehot")
+          .add("income", "minmax").add("income", "log")
+          .add("device", "onehot"))
+    return t, fs, dict(age=age, state=state, income=income, device=device)
+
+
+PRED = Q.isin("state", [3, 7, 11]) & Q.gt("age", 60)
+
+
+def _expected_mask(cols):
+    return np.isin(cols["state"], [3, 7, 11]) & (cols["age"] > 60)
+
+
+# -- predicate AST + compiler -------------------------------------------------------
+def test_predicate_compile_classification():
+    t, _, _ = _fixture()
+    dicts = {c: t[c].dictionary for c in t.columns}
+    # equality on any dictionary is a 1-wide range
+    cp = Q.compile_predicate(Q.eq("device", 2), dicts)
+    (term,) = cp.terms
+    assert term.kind == 0 and term.lo == term.hi
+    # a value range over load-order codes is (generically) a LUT
+    cp = Q.compile_predicate(Q.between("state", 10, 20), dicts)
+    assert cp.terms[0].kind in (0, 1)
+    lut_term = Q.compile_predicate(Q.isin("state", [1, 17, 40]),
+                                   dicts).terms[0]
+    assert lut_term.match.shape[0] == 3
+    # sorted dictionary -> range compiles to kind 0
+    d_sorted, codes = __import__(
+        "repro.columnar.dictionary",
+        fromlist=["Dictionary"]).Dictionary.from_data(
+            np.arange(100) % 37, sort_values=True)
+    cp = Q.compile_predicate(Q.between("x", 5, 11), {"x": d_sorted})
+    assert cp.terms[0].kind == 0
+    # empty match set compiles to the hi < lo empty range
+    cp = Q.compile_predicate(Q.eq("device", 99), dicts)
+    assert cp.terms[0].kind == 0 and cp.terms[0].hi < cp.terms[0].lo
+    with pytest.raises(KeyError):
+        Q.compile_predicate(Q.eq("nope", 1), dicts)
+
+
+def test_predicate_mixed_combinators_raise():
+    with pytest.raises(ValueError):
+        (Q.eq("a", 1) & Q.eq("b", 2)) | Q.eq("c", 3)
+    with pytest.raises(ValueError):
+        (Q.eq("a", 1) | Q.eq("b", 2)) & Q.eq("c", 3)
+    # same-op composition flattens
+    p = Q.eq("a", 1) & Q.eq("b", 2) & Q.eq("c", 3)
+    assert len(p.parts) == 3 and p.op == "and"
+
+
+# -- query.py bugfix regressions ----------------------------------------------------
+def test_filter_mask_decodes_per_imcu_only():
+    """Regression: filter_mask must never materialize the full code stream
+    (col.codes()) — pruning leaves few live IMCUs and only those decode."""
+    rng = np.random.default_rng(1)
+    # clustered values so IMCU min/max pruning actually prunes
+    data = np.repeat(np.arange(8), 500)
+    col = Column.from_data(data, "clustered", imcu_rows=500, use_rle=False)
+    full_decodes = []
+    orig = Column.codes
+    Column.codes = lambda self: full_decodes.append(1) or orig(self)
+    try:
+        mask = Q.filter_mask(col, lambda v: v == 3)
+    finally:
+        Column.codes = orig
+    assert not full_decodes, "filter_mask decoded the WHOLE column"
+    np.testing.assert_array_equal(mask, data == 3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nl=st.integers(0, 150),
+       nr=st.integers(0, 150))
+def test_join_codes_vectorized(seed, nl, nr):
+    rng = np.random.default_rng(seed)
+    l = Column.from_data(rng.integers(0, 12, max(nl, 1)), "k")
+    r = Column.from_data(rng.integers(4, 18, max(nr, 1)), "k")
+    li, ri = Q.join_codes(l, r)
+    lv = l.dictionary.values[l.codes()]
+    rv = r.dictionary.values[r.codes()]
+    expected = {(i, j) for i in range(lv.shape[0])
+                for j in range(rv.shape[0]) if lv[i] == rv[j]}
+    assert set(zip(li.tolist(), ri.tolist())) == expected
+    assert li.shape[0] == len(expected)
+    np.testing.assert_array_equal(lv[li], rv[ri])
+
+
+# -- executor pushdown --------------------------------------------------------------
+def test_executor_filtered_rows_and_batch_where():
+    t, fs, cols = _fixture()
+    plan = FeaturePlan(t, fs, packed=True)
+    ex = FeatureExecutor(plan)
+    exp = _expected_mask(cols)
+    assert ex.count_where(PRED) == int(exp.sum())
+    rows = ex.filtered_rows(PRED)
+    np.testing.assert_array_equal(rows, np.flatnonzero(exp))
+    r2, feats = ex.batch_where(PRED)
+    np.testing.assert_array_equal(r2, rows)
+    np.testing.assert_array_equal(np.asarray(feats),
+                                  np.asarray(ex.batch(rows)))
+    # empty selection
+    r0, f0 = ex.batch_where(Q.eq("state", 12345))
+    assert r0.shape == (0,) and f0.shape == (0, plan.out_dim)
+
+
+def test_executor_pushdown_guards():
+    t, fs, _ = _fixture(n=500)
+    plan32 = FeaturePlan(t, fs, packed=False)
+    ex = FeatureExecutor(plan32)
+    with pytest.raises(RuntimeError):
+        ex.predicate_mask(PRED)
+    plan = FeaturePlan(t, fs, packed=True)
+    exp = FeatureExecutor(plan)
+    with pytest.raises(KeyError):
+        exp.groupby_where("not_a_column", PRED)
+
+
+def test_masked_aggregates_dict_aware():
+    t, fs, cols = _fixture()
+    plan = FeaturePlan(t, fs, packed=True)
+    ex = FeatureExecutor(plan)
+    exp = _expected_mask(cols)
+    vals, counts = ex.groupby_where("device", PRED)
+    np.testing.assert_array_equal(
+        counts, np.bincount(t["device"].codes()[exp], minlength=5))
+    np.testing.assert_array_equal(vals, t["device"].dictionary.values)
+    assert ex.agg_where(PRED, "age", "count") == exp.sum()
+    assert np.isclose(ex.agg_where(PRED, "age", "sum"),
+                      cols["age"][exp].sum())
+    assert np.isclose(ex.agg_where(PRED, "age", "mean"),
+                      cols["age"][exp].mean())
+    # empty selection mean is NaN, count/sum 0
+    none = Q.eq("state", 777)
+    assert ex.agg_where(none, "age", "count") == 0
+    assert ex.agg_where(none, "age", "sum") == 0.0
+    assert np.isnan(ex.agg_where(none, "age", "mean"))
+    with pytest.raises(ValueError):
+        ex.agg_where(PRED, "age", "median")
+
+
+# -- sharded pushdown ---------------------------------------------------------------
+def test_sharded_pushdown_serves_matches_locally():
+    t, fs, cols = _fixture()
+    plan = FeaturePlan(t, fs, packed=True)
+    sx = ShardedFeatureExecutor(plan)
+    assert sx.n_shards > 1
+    exp = _expected_mask(cols)
+    assert sx.count_where(PRED) == int(exp.sum())
+    np.testing.assert_array_equal(sx.filtered_rows(PRED),
+                                  np.flatnonzero(exp))
+    rows, feats = sx.batch_where(PRED)
+    np.testing.assert_array_equal(rows, np.flatnonzero(exp))
+    ref = FeatureExecutor(FeaturePlan(t, fs, packed=True)).batch(rows)
+    np.testing.assert_allclose(np.asarray(feats), np.asarray(ref),
+                               rtol=1e-6)
+    vals, counts = sx.groupby_where("device", PRED)
+    np.testing.assert_array_equal(
+        counts, np.bincount(t["device"].codes()[exp], minlength=5))
+    assert np.isclose(sx.agg_where(PRED, "age", "mean"),
+                      cols["age"][exp].mean())
+
+
+# -- service submit(where=) ---------------------------------------------------------
+@pytest.mark.parametrize("sharded", [False, True])
+def test_service_filtered_submit(sharded):
+    t, fs, cols = _fixture()
+    plan = FeaturePlan(t, fs, packed=True)
+    exp_rows = np.flatnonzero(_expected_mask(cols))
+    with FeatureService(plan, sharded=sharded) as svc:
+        ref = svc.result(svc.submit(exp_rows))
+        out = svc.result(svc.submit(where=PRED))
+        np.testing.assert_array_equal(out, ref)
+        assert out.shape == (exp_rows.shape[0], plan.out_dim)
+        assert svc.stats["filtered_requests"] == 1
+        # service-level query helpers
+        assert svc.count_where(PRED) == exp_rows.shape[0]
+        np.testing.assert_array_equal(svc.filtered_rows(PRED), exp_rows)
+        _, counts = svc.groupby_where("device", PRED)
+        assert counts.sum() == exp_rows.shape[0]
+        assert np.isclose(svc.agg_where(PRED, "age", "mean"),
+                          cols["age"][_expected_mask(cols)].mean())
+
+
+def test_service_filtered_empty_selection_short_circuits():
+    t, fs, _ = _fixture(n=600)
+    plan = FeaturePlan(t, fs, packed=True)
+    with FeatureService(plan) as svc:
+        tk = svc.submit(where=Q.eq("state", 99999))
+        assert svc.poll(tk)                       # already on host
+        out = svc.result(tk)
+        assert out.shape == (0, plan.out_dim)
+        assert svc.stats["filtered_requests"] == 1
+        assert svc.stats["launches"] == 0         # nothing hit the pump
+
+
+def test_service_filtered_guards():
+    t, fs, cols = _fixture(n=600)
+    plan32 = FeaturePlan(t, fs, packed=False)
+    with FeatureService(plan32) as svc:
+        with pytest.raises(RuntimeError):
+            svc.submit(where=PRED)
+        with pytest.raises(RuntimeError):
+            svc.count_where(PRED)
+        with pytest.raises(ValueError):
+            svc.submit()
+    plan = FeaturePlan(t, fs, packed=True)
+    with FeatureService(plan) as svc:
+        with pytest.raises(ValueError):
+            svc.submit(np.arange(4), where=PRED)
+
+
+def test_service_filtered_interleaves_with_plain_requests():
+    t, fs, cols = _fixture()
+    plan = FeaturePlan(t, fs, packed=True)
+    exp_rows = np.flatnonzero(_expected_mask(cols))
+    rng = np.random.default_rng(5)
+    with FeatureService(plan, sharded=True) as svc:
+        plain = [rng.integers(0, t.n_rows, 200) for _ in range(4)]
+        tickets = []
+        for i, rows in enumerate(plain):
+            tickets.append(("plain", rows, svc.submit(rows)))
+            tickets.append(("where", None, svc.submit(where=PRED)))
+        ref_ex = FeatureExecutor(FeaturePlan(t, fs, packed=True))
+        where_ref = np.asarray(ref_ex.batch(exp_rows))
+        for kind, rows, tk in tickets:
+            out = svc.result(tk)
+            if kind == "plain":
+                np.testing.assert_allclose(
+                    out, np.asarray(ref_ex.batch(rows)), rtol=1e-6)
+            else:
+                np.testing.assert_allclose(out, where_ref, rtol=1e-6)
