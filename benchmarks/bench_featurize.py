@@ -19,7 +19,7 @@ from repro.core import (AugmentedDictionary, FeatureExecutor,
 from repro.core.pipeline import pad_rows_edge
 from repro.kernels.adv_gather import adv_gather
 from repro.kernels.hist import hist
-from repro.serve import FeatureService
+from repro.serve import FaultInjector, FaultPolicy, FeatureService
 from benchmarks.common import (MIN_REPEATS, time_call, emit, scaled,
                                interleaved_best)
 
@@ -375,6 +375,97 @@ def _skewed_serve_comparison() -> None:
         s.shutdown()
 
 
+def _chaos_serve_comparison() -> None:
+    """Availability + tail latency under periodic injected replica faults.
+
+    The same Zipf 'user block' workload as ``feature_service_skewed``,
+    served by two same-run services: a fault-free reference and one whose
+    hot shard (0) keeps taking periodic launch faults on its primary AND
+    its first replica (deterministic FaultInjector rules — every 4th/5th
+    launch of those streams fails, forever). With a third healthy stream
+    resident, failover retries keep every ticket completing: the
+    ``compare.py --require`` gate asserts ``availability=1`` on this
+    record, and ``p99_vs_clean`` reports the recovery machinery's tail
+    cost against the fault-free same-run baseline (machine speed cancels;
+    there is no cross-run gate on the ratio because injected-fault timing
+    is scheduler-sensitive on shared CI hosts).
+    """
+    rng = np.random.default_rng(43)
+    n = scaled(128_000, 32_000)
+    n_req = scaled(400, 200)
+    rsz = 64
+    n_shards = 4
+    data = {
+        "age": rng.integers(18, 90, n),
+        "state": rng.integers(0, 50, n),
+        "income": rng.integers(20, 250, n) * 1000,
+    }
+    fs = (FeatureSet().add("age", "zscore").add("state", "onehot")
+          .add("income", "minmax"))
+    blocks = (n - rsz) // 32
+    ranks = np.minimum(rng.zipf(1.2, n_req), blocks) - 1
+    reqs = [np.arange(s, s + rsz) for s in ranks * 32]
+    rows = n_req * rsz
+    table = Table.from_data(data, imcu_rows=n // n_shards)
+
+    inj = (FaultInjector()
+           .fail_launches(1 << 30, shard=0, stream=0, every=4)
+           .fail_launches(1 << 30, shard=0, stream=1, every=5))
+    # breakers off (threshold unreachably high): the benchmark measures
+    # the retry/failover path itself under a PERSISTENT fault source, not
+    # the breaker's learned avoidance of it
+    pol = FaultPolicy(max_retries=3, backoff_s=0.0005, breaker_fails=1 << 30)
+
+    def build(faults, policy):
+        svc = FeatureService(FeaturePlan(table, fs, packed=True),
+                             sharded=True, buckets=(rsz,), coalesce=8,
+                             linger_us=1000, max_replicas=3, faults=faults,
+                             fault_policy=policy)
+        svc.add_replica(0)          # 3 streams: 2 faulty + 1 healthy under
+        svc.add_replica(0)          # the injector rules above
+        return svc
+
+    svc_clean = build(None, None)
+    svc_chaos = build(inj, pol)
+
+    def clean_loop():
+        for r in reqs:
+            svc_clean.submit(r)
+        svc_clean.drain()
+
+    def chaos_loop():
+        for r in reqs:
+            svc_chaos.submit(r)
+        svc_chaos.drain()
+
+    loops = [clean_loop, chaos_loop]
+    for loop in loops:
+        loop()                                             # compile each
+    svc_clean.latencies.clear()
+    svc_chaos.latencies.clear()
+    failovers0 = svc_chaos.stats["failovers"]
+    clean_s, chaos_s = interleaved_best(loops, repeats=MIN_REPEATS)
+    p99_clean = float(np.percentile(np.array(svc_clean.latencies), 99))
+    p99_chaos = float(np.percentile(np.array(svc_chaos.latencies), 99))
+    st = svc_chaos.throughput_stats(chaos_s)
+    emit("serve/feature_service_chaos_clean", clean_s / n_req * 1e6,
+         f"rows_per_s={rows/clean_s:.0f};p99_ms={p99_clean*1e3:.3f};"
+         f"replicas={svc_clean.replicas[0]}")
+    emit("serve/feature_service_chaos", chaos_s / n_req * 1e6,
+         f"availability={st['availability']:.4f};"
+         f"failed_tickets={st['failed_tickets']};"
+         f"failovers={st['failovers'] - failovers0};"
+         f"retries={st['retries']};"
+         f"faults_injected={inj.faults_injected};"
+         f"p99_ms={p99_chaos*1e3:.3f};"
+         f"p99_vs_clean={p99_chaos/max(p99_clean, 1e-9):.2f}x;"
+         f"slowdown_vs_clean={chaos_s/clean_s:.2f}x;"
+         f"replicas={svc_chaos.replicas[0]};"
+         f"devices={len(jax.devices())}")
+    for s in (svc_clean, svc_chaos):
+        s.shutdown()
+
+
 def run() -> None:
     N = scaled(1 << 16, 1 << 12)   # device-path rows (interpret mode is slow)
     rng = np.random.default_rng(3)
@@ -416,6 +507,7 @@ def run() -> None:
     _serve_comparison()
     _sharded_serve_comparison()
     _skewed_serve_comparison()
+    _chaos_serve_comparison()
 
 
 if __name__ == "__main__":

@@ -15,6 +15,12 @@ time before comparing, so a baseline recorded on one machine gates a fresh
 run on different hardware: absolute wall-clock cancels out and only the
 code's relative cost vs the reference workload is compared.
 
+``--require RECORD:KEY<OP>VALUE`` (repeatable) asserts on a metric the
+FRESH run's record carries in its ``derived`` string (``key=value;...``),
+e.g. ``--require "serve/feature_service_chaos:availability>=1.0"`` — the
+chaos gate: a run that lost a ticket fails CI regardless of its timing.
+Ops: ``>=``, ``<=``, ``>``, ``<``, ``=``/``==``.
+
 Gated serving records are produced with interleaved best-of-N timing
 (``benchmarks/common.interleaved_best``), so a single slow repeat or a
 machine-speed drift mid-run cannot be the gated number — the gate compares
@@ -24,13 +30,33 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
+
+_REQUIRE_RE = re.compile(
+    r"^(?P<name>[^:]+):(?P<key>[A-Za-z0-9_.]+)"
+    r"(?P<op>>=|<=|==|=|>|<)(?P<value>-?[0-9.]+)x?$")
+_OPS = {">=": lambda a, b: a >= b, "<=": lambda a, b: a <= b,
+        ">": lambda a, b: a > b, "<": lambda a, b: a < b,
+        "=": lambda a, b: a == b, "==": lambda a, b: a == b}
 
 
 def load_records(path: str) -> dict[str, dict]:
     with open(path) as fh:
         doc = json.load(fh)
     return {r["name"]: r for r in doc.get("records", [])}
+
+
+def derived_metric(rec: dict, key: str) -> float | None:
+    """Pull ``key`` out of a record's ``key=value;...`` derived string
+    (a trailing unit suffix like ``2.00x`` parses as its number)."""
+    for part in str(rec.get("derived", "")).split(";"):
+        k, _, v = part.partition("=")
+        if k.strip() == key:
+            m = re.match(r"-?[0-9.]+", v.strip())
+            if m:
+                return float(m.group(0))
+    return None
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -47,6 +73,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--normalize-by", default=None, metavar="RECORD_NAME",
                     help="divide gated times by this record's time from the "
                          "same run (cancels machine speed differences)")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="RECORD:KEY<OP>VALUE",
+                    help="assert a derived metric of a FRESH record, e.g. "
+                         "'serve/feature_service_chaos:availability>=1.0'")
     args = ap.parse_args(argv)
     gates = args.gate or ["serve/feature_service_prefetch2"]
 
@@ -83,6 +113,27 @@ def main(argv: list[str] | None = None) -> int:
             failures.append(f"{name}: {b:.3f}{unit or 'us'} -> "
                             f"{f:.3f}{unit or 'us'} "
                             f"({(f - b) / b:+.1%} > +{args.max_regress:.0%})")
+    for req in args.require:
+        m = _REQUIRE_RE.match(req)
+        if not m:
+            raise SystemExit(f"bad --require spec {req!r} "
+                             "(want RECORD:KEY<OP>VALUE)")
+        name, key, op = m["name"], m["key"], m["op"]
+        rec = fresh.get(name)
+        if rec is None:
+            failures.append(f"{name}: missing from fresh records "
+                            f"(required {key}{op}{m['value']})")
+            continue
+        got = derived_metric(rec, key)
+        if got is None:
+            failures.append(f"{name}: derived metric {key!r} not found "
+                            f"in {rec.get('derived', '')!r}")
+        elif not _OPS[op](got, float(m["value"])):
+            failures.append(f"{name}: {key}={got} violates "
+                            f"{key}{op}{m['value']}")
+        else:
+            print(f"require ok: {name}: {key}={got} satisfies "
+                  f"{op}{m['value']}")
     if failures:
         for msg in failures:
             print(f"PERF GATE FAILED: {msg}", file=sys.stderr)

@@ -66,8 +66,14 @@ tables), then serves featurization requests six ways:
    words (scan -> compact -> gather, one device pipeline — no decoded
    code stream, no host round trip), plus dict-aware masked aggregates
    (``count_where`` / ``groupby_where`` / ``agg_where``),
-6. streaming double-buffered iteration (serve_stream),
-7. a streaming insert followed by an incremental plan refresh — only the
+6. failure handling: a chaos-injected launch fault stream on one shard —
+   retries + replica failover keep every ticket completing; the breaker
+   marks the sick stream, ``rebalance()`` re-replicates around it, and
+   when NO replica exists only the faulted tickets resolve to typed
+   ``ServeError``s (the service keeps serving; ``deadline_ms``/
+   ``timeout=`` bound every wait),
+7. streaming double-buffered iteration (serve_stream),
+8. a streaming insert followed by an incremental plan refresh — only the
    columns whose dictionaries changed are re-put on device; appended rows
    extend the open-ended LAST shard, so sharded services keep serving.
 
@@ -200,13 +206,63 @@ def main() -> None:
               f"mean(income | pred)={svcq.agg_where(pred, 'income', 'mean'):.0f}, "
               f"busiest state over 60: {top} ({counts.max()} rows)")
 
-    # 6. streaming
+    # 6. failure handling: inject faults -> observe failover -> recover.
+    # The FaultInjector scripts deterministic launch faults on the pump's
+    # dispatch path (exactly where a real device error would land). With a
+    # replica resident, retries fail over to it and NOTHING is lost; the
+    # struck stream's circuit breaker marks the shard unhealthy and
+    # rebalance() re-replicates around it.
+    from repro.serve import FaultInjector, FaultPolicy, ServeError
+    inj = FaultInjector().fail_launches(6, shard=0, stream=0)
+    pol = FaultPolicy(max_retries=3, backoff_s=0.005,
+                      breaker_fails=3, breaker_cooldown_s=0.2)
+    with FeatureService(FeaturePlan(table, features, packed=True),
+                        sharded=True, buckets=(512,), coalesce=1,
+                        faults=inj, fault_policy=pol,
+                        max_replicas=2) as svcf:
+        svcf.add_replica(0)                # the failover target
+        hot = [svcf.submit(np.arange(s, s + 512))
+               for s in rng.integers(0, (1 << 15) // 32 - 16, 24) * 32]
+        ok = sum(svcf.result(t).shape[0] == 512 for t in hot)
+        st = svcf.throughput_stats(1.0)
+        print(f"chaos: {inj.faults_injected} injected faults -> {ok}/24 "
+              f"tickets served (availability={st['availability']:.2f}), "
+              f"retries={st['retries']}, failovers={st['failovers']}, "
+              f"unhealthy={svcf.unhealthy}")
+        if svcf.unhealthy:                 # monitor re-replicates around it
+            acts = svcf.rebalance()
+            print(f"recovery: replicated={acts['replicated']} "
+                  f"failover_replicated={acts['failover_replicated']}, "
+                  f"replicas={svcf.replicas}")
+    # without replicas, a persistent fault fails ONLY its own tickets —
+    # each resolves to a typed ServeError; the service keeps serving
+    # (3 faults = 1 launch + 2 retries: the shard-0 ticket exhausts them,
+    # then the fault heals and the closing submit proves recovery)
+    inj2 = FaultInjector().fail_launches(3, shard=0)
+    with FeatureService(FeaturePlan(table, features, packed=True),
+                        sharded=True, buckets=(512,), coalesce=8,
+                        faults=inj2,
+                        fault_policy=FaultPolicy(max_retries=2)) as svcn:
+        t_bad = svcn.submit(np.arange(0, 512), deadline_ms=30_000)
+        t_ok = svcn.submit(np.arange(1 << 15, (1 << 15) + 512))
+        outcome = {}
+        for name, t in (("shard0", t_bad), ("shard1", t_ok)):
+            try:
+                outcome[name] = f"served {svcn.result(t, timeout=30).shape}"
+            except ServeError as e:
+                outcome[name] = (f"failed after {e.attempts} attempts "
+                                 f"({type(e).__name__})")
+        print(f"isolation: {outcome} — failed_tickets="
+              f"{svcn.stats['failed_tickets']}, service still accepting: "
+              f"{svcn.result(svcn.submit(np.arange(64, 128))).shape}")
+
+    # 7. streaming
     stream = svc.serve_stream(rng.integers(0, n, 256) for _ in range(8))
     for rows, out in stream:
         pass
     print(f"streamed 8 batches, last={out.shape}")
 
-    # 7. streaming insert + incremental refresh
+    # 8. streaming insert + incremental refresh
     new_codes = {
         "age": table["age"].dictionary.add_rows(np.array([101, 102])),
         "state": table["state"].dictionary.add_rows(np.array([7, 7])),

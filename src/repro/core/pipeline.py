@@ -1307,19 +1307,23 @@ class ShardedFeatureExecutor:
                 load[id(ex.device)] = load.get(id(ex.device), 0) + 1
         return load
 
-    def add_replica(self, shard: int, device=None) -> FeatureExecutor:
+    def add_replica(self, shard: int, device=None,
+                    avoid=frozenset()) -> FeatureExecutor:
         """Commit a REPLICA of ``shard``'s resident word stream (plus the
         replicated tables, reused per device) to an under-loaded device and
         fan reads out over it. The replica shares the shard's plan view, so
         its puts attribute to the same ``per_shard`` stats entry, and a
         parent ``refresh()`` re-puts it lazily at its next launch exactly
-        like the primary (version-keyed sync — write fan-in for free)."""
+        like the primary (version-keyed sync — write fan-in for free).
+        ``avoid`` (device ids) marks unhealthy devices the default
+        placement should route around — the failover path's 're-replicate
+        elsewhere'."""
         sp = self.shards[shard]
         if device is None:
             from repro.distributed.sharding import replica_device
             held = {id(e.device) for e in self.stream_executors(shard)}
             device = replica_device(self.device_pool, self.device_load(),
-                                    exclude=held)
+                                    exclude=held, unhealthy=avoid)
         ex = FeatureExecutor(sp, use_kernel=self.use_kernel,
                              prefetch=self.prefetch, autotune=self.autotune,
                              device=device, table_cache=self._cache_for(device))

@@ -229,7 +229,7 @@ def serve_devices(n_shards: int, devices=None) -> list:
 
 
 def replica_device(devices, load: dict[int, int] | None = None,
-                   exclude=frozenset()):
+                   exclude=frozenset(), unhealthy=frozenset()):
     """Placement rule for an ADAPTIVE stream (shard replica or fresh tail
     shard): the least-loaded device in the pool, counting resident launch
     streams (``load`` maps ``id(device)`` -> streams, missing = 0).
@@ -237,12 +237,18 @@ def replica_device(devices, load: dict[int, int] | None = None,
     ``exclude`` (ids) names devices that already hold a stream of the SAME
     shard — a replica there adds capacity on paper but shares the physical
     queue, so they only win ties when every pool device is excluded.
-    Deterministic: ties break on pool order, so placement (and tests) are
-    reproducible for a given load picture.
+    ``unhealthy`` (ids) names devices whose streams are currently failing
+    (open circuit breakers): a FAILOVER replica placed there would inherit
+    the fault, so they are avoided with the same only-when-cornered
+    fallback. Deterministic: ties break on pool order, so placement (and
+    tests) are reproducible for a given load picture.
     """
     devices = list(devices) if devices is not None else jax.devices()
     if not devices:
         raise ValueError("no devices to place a replica on")
     load = load or {}
-    pool = [d for d in devices if id(d) not in exclude] or devices
+    pool = ([d for d in devices
+             if id(d) not in exclude and id(d) not in unhealthy]
+            or [d for d in devices if id(d) not in exclude]
+            or devices)
     return min(pool, key=lambda d: load.get(id(d), 0))

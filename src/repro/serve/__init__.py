@@ -1,4 +1,8 @@
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.faults import (DeadlineExceeded, FaultInjector, FaultPolicy,
+                                InjectedFault, ServeError, StreamBreaker)
 from repro.serve.feature_service import FeatureService
 
-__all__ = ["ServeEngine", "Request", "FeatureService"]
+__all__ = ["ServeEngine", "Request", "FeatureService", "FaultInjector",
+           "FaultPolicy", "ServeError", "DeadlineExceeded", "InjectedFault",
+           "StreamBreaker"]

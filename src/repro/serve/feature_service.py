@@ -83,6 +83,34 @@ automatically every ``rebalance_every`` launches or on demand via
 :meth:`rebalance` / :meth:`add_replica` / :meth:`drop_replica` /
 :meth:`split_tail`, which marshal onto the pump and block for the result —
 so a shard-set mutation can never race a launch that is being dispatched.
+
+Fault tolerance (launch-level isolation, replica failover, deadlines):
+an exception during a launch or its retire fails ONLY the chunks of that
+launch group — every other shard and queued request keeps serving, and
+only errors in the pump's own control logic (outside the guarded launch/
+retire paths) remain terminal. A failed group re-enqueues at the head of
+its shard's queue with capped exponential backoff
+(:class:`repro.serve.faults.FaultPolicy`); each chunk remembers the
+streams it already failed on, so on a shard with replicas the retry
+routes to a DIFFERENT copy immediately (no backoff — replica failover
+turns replication into an availability mechanism). A stream that keeps
+failing — thrown launches or straggler-flagged latencies (the per-shard
+:class:`repro.train.fault.StragglerDetector` over launch round-trip
+times) — opens its circuit breaker: the pump stops routing to it until a
+cooldown passes, then the next round-robin launch is the recovery probe;
+the monitor's third policy re-replicates shards whose streams are
+unhealthy onto devices that are not. Retries exhausted, the affected
+tickets resolve to a typed :class:`repro.serve.faults.ServeError`
+surfaced per-ticket by :meth:`poll`/:meth:`result`/:meth:`collect` — the
+service itself stays up and keeps accepting submits. ``deadline_ms`` on
+:meth:`submit` evicts a request's still-queued chunks once expired (the
+ticket resolves to :class:`repro.serve.faults.DeadlineExceeded`, also a
+``TimeoutError``), and ``timeout=`` on :meth:`result`/:meth:`collect`/
+:meth:`drain` bounds every blocking wait. The chaos harness
+(:class:`repro.serve.faults.FaultInjector`, ``faults=`` — no-op by
+default) injects deterministic failures and straggler delays ON the
+launch path, so injected faults exercise exactly the recovery machinery
+real device errors would.
 """
 from __future__ import annotations
 
@@ -97,6 +125,9 @@ import jax.numpy as jnp
 from repro.core.pipeline import (FeatureExecutor, FeaturePipeline,
                                  FeaturePlan, ShardedFeatureExecutor,
                                  pad_rows_edge)
+from repro.serve.faults import (DeadlineExceeded, FaultInjector, FaultPolicy,
+                                ServeError, StreamBreaker)
+from repro.train.fault import StragglerDetector
 
 DEFAULT_BUCKETS = (64, 256, 1024)
 
@@ -113,6 +144,10 @@ class _Chunk:
     # contiguous run, or an explicit position vector for routed splits
     dest: int | np.ndarray = 0
     t_enq: float = field(default=0.0, compare=False)
+    # -- fault-recovery state (pump thread only) --
+    attempts: int = 0               # launches tried so far
+    not_before: float = 0.0         # retry backoff deadline (perf_counter)
+    avoid: frozenset = frozenset()  # executor ids this chunk failed on
 
 
 class FeatureService:
@@ -124,7 +159,9 @@ class FeatureService:
                  sharded: bool = False, coalesce: int = 4,
                  linger_us: float = 0.0, devices=None,
                  rebalance_every: int = 0, row_budget: int | None = None,
-                 hot_factor: float = 4.0, max_replicas: int | None = None):
+                 hot_factor: float = 4.0, max_replicas: int | None = None,
+                 faults: FaultInjector | None = None,
+                 fault_policy: FaultPolicy | None = None):
         if isinstance(plan, FeaturePipeline):
             plan = plan.plan
         if prefetch < 2:
@@ -205,6 +242,18 @@ class FeatureService:
         self._shutdown = False
         self._flushes = 0               # drain()s in progress: no lingering
         self._pump_error: BaseException | None = None
+        # -- fault-tolerance state --
+        self._faults = faults
+        self._policy = fault_policy if fault_policy is not None \
+            else FaultPolicy()
+        self._errors: dict[int, ServeError] = {}   # failed-ticket results
+        self._dead: set[int] = set()    # failed tickets: drop their chunks
+        self._deadlines: dict[int, float] = {}     # ticket -> perf_counter
+        self._breakers: dict[int, StreamBreaker] = {}   # id(executor) ->
+        self._stream_rr = [0] * self._n_shards     # healthy-stream cursor
+        self._stragglers = [self._new_straggler()
+                            for _ in range(self._n_shards)]
+        self.latencies: deque[float] = deque(maxlen=8192)  # per-ticket s
         # -- adaptive shard management state --
         self.rebalance_every = rebalance_every
         self.row_budget = row_budget
@@ -221,6 +270,9 @@ class FeatureService:
                       "latency_s_total": 0.0, "completed": 0,
                       "packed_ranges": 0, "bytes_h2d": 0, "split_requests": 0,
                       "filtered_requests": 0,
+                      "retries": 0, "failovers": 0, "timeouts": 0,
+                      "failed_tickets": 0, "unhealthy_shards": 0,
+                      "stragglers": 0,
                       "rebalances": 0, "replicas_added": 0,
                       "replicas_dropped": 0, "shard_splits": 0,
                       "shard_launches": [0] * self._n_shards,
@@ -296,6 +348,7 @@ class FeatureService:
                     self._ticket_rows.pop(t, None)
                     self._out_buf.pop(t, None)
                     self._submitted_at.pop(t, None)
+                    self._deadlines.pop(t, None)
             self._shutdown = True
             self._notify_everyone()
         self._pump.join()
@@ -315,13 +368,148 @@ class FeatureService:
         """Hold launches (submissions still queue) — lets a caller batch a
         burst of submits into maximally coalesced launches."""
         with self._lock:
+            self._check_pump()
             self._paused = True
             self._work.notify_all()
 
     def resume(self) -> None:
         with self._lock:
+            self._check_pump()
             self._paused = False
             self._work.notify_all()
+
+    # -- fault tolerance: breakers, stream health, failure handling ------------------
+    def _new_straggler(self) -> StragglerDetector:
+        p = self._policy
+        return StragglerDetector(threshold=p.straggler_threshold,
+                                 warmup=p.straggler_warmup)
+
+    def _breaker(self, ex) -> StreamBreaker:
+        b = self._breakers.get(id(ex))
+        if b is None:
+            b = self._breakers[id(ex)] = StreamBreaker()
+        return b
+
+    def _shard_streams(self, s: int) -> list:
+        return (self._sharded_ex.stream_executors(s)
+                if self._sharded_ex is not None else [self._executor])
+
+    def _healthy_streams(self, s: int, now: float) -> list:
+        thr = self._policy.breaker_fails
+        return [ex for ex in self._shard_streams(s)
+                if not self._breaker(ex).is_open(thr, now)]
+
+    @property
+    def unhealthy(self) -> list[int]:
+        """Shards with at least one OPEN-breaker launch stream right now —
+        what the monitor's failover policy re-replicates around."""
+        with self._lock:
+            now = time.perf_counter()
+            return [s for s in range(self._n_shards)
+                    if len(self._healthy_streams(s, now))
+                    < len(self._shard_streams(s))]
+
+    def _pick_stream(self, s: int, avoid: frozenset):
+        """Healthy-stream selection with read fan-out (pump thread, lock
+        held). Round-robins the shard's closed-breaker streams; a stream
+        past its breaker cooldown is half-open and its next pick is the
+        recovery probe. ``avoid`` (executor ids a retrying group already
+        failed on) is excluded unless nothing else is left — a retry
+        prefers a replica it has NOT watched fail. Returns (executor,
+        stream index)."""
+        streams = self._shard_streams(s)
+        if len(streams) == 1 and not avoid:
+            return streams[0], 0
+        now = time.perf_counter()
+        thr = self._policy.breaker_fails
+        idx = list(range(len(streams)))
+        healthy = [i for i in idx
+                   if not self._breaker(streams[i]).is_open(thr, now)]
+        pool = ([i for i in healthy if id(streams[i]) not in avoid]
+                or healthy
+                or [i for i in idx if id(streams[i]) not in avoid]
+                or idx)
+        self._stream_rr[s] += 1
+        i = pool[self._stream_rr[s] % len(pool)]
+        return streams[i], i
+
+    def _strike_locked(self, ex, shard: int, now: float) -> None:
+        """One failure (or straggler flag) on a stream: breaker
+        bookkeeping + the unhealthy-shard mark the monitor keys on."""
+        p = self._policy
+        if self._breaker(ex).strike(p.breaker_fails, p.breaker_cooldown_s,
+                                    now):
+            self.stats["unhealthy_shards"] += 1
+
+    def _observe_latency_locked(self, s: int, ex, dt: float,
+                                now: float) -> None:
+        """Feed the shard's straggler detector with one launch round-trip
+        time; a flagged launch that also clears the absolute floor counts
+        as a breaker strike (slow stream -> same unhealthy/re-replicate
+        path as a failing one), otherwise the round trip proves the
+        stream healthy and closes its breaker."""
+        flagged = self._stragglers[s].observe(
+            self.stats["shard_launches"][s], dt)
+        if flagged and dt >= self._policy.straggler_min_s:
+            self.stats["stragglers"] += 1
+            self._strike_locked(ex, s, now)
+        else:
+            self._breaker(ex).reset()
+
+    def _fail_ticket_locked(self, ticket: int, err: ServeError, *,
+                            timeout: bool = False) -> None:
+        """Resolve ``ticket`` to a typed error (lock held): the ledger
+        entries go, the error is retrievable via poll/result/collect, and
+        chunks of this ticket still queued anywhere are dropped on sight
+        (``_dead``). Idempotent for already-resolved tickets."""
+        if ticket not in self._chunks_total:
+            return
+        del self._chunks_total[ticket]
+        self._chunks_done.pop(ticket, None)
+        self._ticket_rows.pop(ticket, None)
+        self._out_buf.pop(ticket, None)
+        self._deadlines.pop(ticket, None)
+        self._submitted_at.pop(ticket, None)
+        self._dead.add(ticket)
+        self._errors[ticket] = err
+        self.stats["failed_tickets"] += 1
+        if timeout:
+            self.stats["timeouts"] += 1
+        self._cv.notify_all()
+
+    def _handle_launch_failure(self, s: int, group: list[_Chunk], ex,
+                               err: Exception) -> None:
+        """Fault isolation (lock held, pump thread): one launch group's
+        failure touches ONLY its own chunks. Strike the stream's breaker,
+        then re-enqueue the group at the head of its shard's queue —
+        immediately when another healthy stream can take the retry
+        (replica failover), else after capped exponential backoff.
+        Chunks out of retries resolve their tickets to ServeError."""
+        now = time.perf_counter()
+        self._strike_locked(ex, s, now)
+        retry = [ch for ch in group
+                 if ch.attempts + 1 <= self._policy.max_retries
+                 and ch.ticket not in self._dead]
+        failed = [ch for ch in group if ch not in retry]
+        for ch in failed:
+            self._fail_ticket_locked(ch.ticket, ServeError(
+                f"request failed after {ch.attempts + 1} launch attempts "
+                f"on shard {s}: {err!r}", ticket=ch.ticket, shard=s,
+                attempts=ch.attempts + 1))
+            self._errors[ch.ticket].__cause__ = err
+        if not retry:
+            return
+        failed_id = id(ex)
+        alt = any(id(e) != failed_id
+                  for e in self._healthy_streams(s, now))
+        for ch in reversed(retry):
+            ch.attempts += 1
+            ch.avoid = ch.avoid | {failed_id}
+            ch.not_before = now if alt \
+                else now + self._policy.backoff_for(ch.attempts)
+            self._queues[s].appendleft(ch)
+        self.stats["retries"] += 1
+        self._work.notify_all()
 
     # -- request intake -------------------------------------------------------------
     def _route(self, rows: np.ndarray, lo: int, hi: int):
@@ -336,7 +524,8 @@ class FeatureService:
             return [(0, rows, None)]
         return self._sharded_ex.route(rows, lo, hi)
 
-    def submit(self, rows: np.ndarray | None = None, *, where=None) -> int:
+    def submit(self, rows: np.ndarray | None = None, *, where=None,
+               deadline_ms: float | None = None) -> int:
         """Enqueue a featurization request; returns a ticket for the result.
 
         Only queues: the background pumps pick the chunks up, coalesce them
@@ -348,7 +537,15 @@ class FeatureService:
         predicate scan over the resident word streams (per shard on a mesh
         service) and then pumped through the SAME coalescing launch path as
         any explicit request — "serve features WHERE ..." as one ticket.
+
+        ``deadline_ms`` bounds the request's time in the system: chunks
+        still QUEUED once it expires are dropped before launch and the
+        ticket resolves to :class:`DeadlineExceeded` (chunks already in
+        flight retire normally — a deadline evicts queued work, it does
+        not cancel device work).
         """
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError("deadline_ms must be > 0")
         filtered = where is not None
         if filtered:
             if rows is not None:
@@ -416,6 +613,8 @@ class FeatureService:
                 self._next_ticket += 1
                 now = time.perf_counter()
                 self._submitted_at[ticket] = now
+                if deadline_ms is not None:
+                    self._deadlines[ticket] = now + deadline_ms / 1e3
                 self.stats["requests"] += 1
                 self.stats["rows"] += rows.size
                 self.stats["padded_rows"] += padded
@@ -535,10 +734,18 @@ class FeatureService:
         """
         held = self._paused and not self._shutdown
         linger_min = None
+        now = time.perf_counter()
         for s in range(self._n_shards):
             queue = self._queues[s]
             if not queue or held or \
                     len(self._inflights[s]) >= self.prefetch * self._streams(s):
+                continue
+            hold = queue[0].not_before - now
+            if hold > 0:
+                # head group is backing off after a failed launch: bound
+                # the wait like a linger deadline and skip the shard
+                linger_min = hold if linger_min is None \
+                    else min(linger_min, hold)
                 continue
             if self._linger_s > 0 and self.coalesce > 1 \
                     and not self._shutdown and not self._flushes:
@@ -584,6 +791,13 @@ class FeatureService:
         result actually landed and ``_idle`` when no shard has anything
         left to do — launching and window churn wake nobody, so client
         threads stay parked (and off the GIL) while the devices work.
+
+        Fault isolation: the device-facing work — dispatching a launch and
+        blocking on its buffer at retire — is guarded per launch group. An
+        exception there routes through :meth:`_handle_launch_failure`
+        (retry with backoff, replica failover, per-ticket ServeError) and
+        the loop continues; only the pump's own control logic reaching the
+        outer handler kills the service.
         """
         try:
             while True:
@@ -604,16 +818,39 @@ class FeatureService:
                         return
                     s = arg
                     if action == "launch":
-                        job = self._take_group(self._queues[s])
+                        job = self._take_group(self._queues[s],
+                                               time.perf_counter())
+                        if not job:
+                            # the whole head group was evicted (failed or
+                            # deadline-expired tickets) — nothing to launch
+                            if self._all_idle():
+                                self._idle.notify_all()
+                            continue
+                        ex, _stream = self._pick_stream(s, job[0].avoid)
+                        if job[0].avoid and id(ex) not in job[0].avoid:
+                            # a retry actually reached a stream it had not
+                            # failed on yet: replica failover
+                            self.stats["failovers"] += 1
                     else:
                         job = None
                         _, entry = self._inflights[s].popleft()
                     self._busy[s] += 1
                 if job is not None:
-                    dev, parts, nbytes = self._launch(job, s)
+                    t0 = time.perf_counter()
+                    try:
+                        dev, parts, nbytes = self._launch(job, s, ex,
+                                                          _stream)
+                    except Exception as e:
+                        with self._lock:
+                            self._handle_launch_failure(s, job, ex, e)
+                            self._busy[s] -= 1
+                            if self._all_idle():
+                                self._idle.notify_all()
+                        continue
                     with self._lock:
                         self._seq += 1
-                        self._inflights[s].append((self._seq, (dev, parts)))
+                        self._inflights[s].append(
+                            (self._seq, (dev, parts, job, ex, t0)))
                         self.stats["launches"] += 1
                         self.stats["batches"] += len(parts)
                         self.stats["bytes_h2d"] += nbytes
@@ -629,39 +866,74 @@ class FeatureService:
                                 >= self.rebalance_every):
                             self._rebalance_locked()
                 else:
-                    dev, parts = entry
-                    arr = np.asarray(dev)       # blocks on device, unlocked
+                    dev, parts, group, ex, t0 = entry
+                    try:
+                        arr = np.asarray(dev)   # blocks on device, unlocked
+                    except Exception as e:
+                        with self._lock:
+                            self._handle_launch_failure(s, group, ex, e)
+                            self._busy[s] -= 1
+                            if self._all_idle():
+                                self._idle.notify_all()
+                        continue
+                    dt = time.perf_counter() - t0
                     with self._lock:
+                        self._observe_latency_locked(
+                            s, ex, dt, time.perf_counter())
                         if self._retire(arr, parts):
                             self._cv.notify_all()
                         self._busy[s] -= 1
                         if self._all_idle():
                             self._idle.notify_all()
-        except BaseException as e:            # pragma: no cover - defensive
+        except BaseException as e:
+            # pump-infrastructure error (control logic, not a launch):
+            # terminal by design — tested via _pick_action fault injection
             with self._lock:
                 self._pump_error = e
                 self._fail_admin(e)
                 self._notify_everyone()
 
-    def _take_group(self, queue: deque) -> list[_Chunk]:
+    def _take_group(self, queue: deque, now: float) -> list[_Chunk]:
         """Pop up to ``coalesce`` queued chunks sharing the head chunk's
         bucket shape (FIFO otherwise preserved) — one launch group. Stops
         scanning once the group is full and splices the tail back in bulk,
-        so a long queued burst costs O(Q) per tick, not O(Q) per chunk."""
-        bucket = queue[0].bucket
+        so a long queued burst costs O(Q) per tick, not O(Q) per chunk.
+
+        The eviction point for dead work (lock held): chunks of already-
+        failed tickets are dropped on sight, a chunk whose ticket's
+        ``deadline_ms`` expired resolves it to :class:`DeadlineExceeded`
+        and is dropped BEFORE launch, and the scan stops at a chunk still
+        in retry backoff (``not_before`` ahead of ``now``) — so the group
+        may come back empty."""
         group: list[_Chunk] = []
         rest: deque[_Chunk] = deque()
+        bucket = None
         while queue and len(group) < self.coalesce:
-            ch = queue.popleft()
+            ch = queue[0]
+            if ch.ticket in self._dead:
+                queue.popleft()
+                continue
+            dl = self._deadlines.get(ch.ticket)
+            if dl is not None and now > dl:
+                queue.popleft()
+                self._fail_ticket_locked(ch.ticket, DeadlineExceeded(
+                    f"ticket {ch.ticket} missed its deadline before launch",
+                    ticket=ch.ticket, shard=ch.shard), timeout=True)
+                continue
+            if ch.not_before > now:
+                break
+            queue.popleft()
+            if bucket is None:
+                bucket = ch.bucket
             (group if ch.bucket == bucket else rest).append(ch)
         rest.extend(queue)
         queue.clear()
         queue.extend(rest)
         return group
 
-    def _launch(self, group: list[_Chunk], s: int):
-        """Dispatch ONE launch for a coalesced group on shard s's device
-        (pump thread only).
+    def _launch(self, group: list[_Chunk], s: int, ex, stream: int):
+        """Dispatch ONE launch for a coalesced group on ``ex`` — the
+        shard-``s`` stream :meth:`_pick_stream` chose (pump thread only).
 
         Packed plans: a flat (coalesce * bucket,) int32 SHARD-LOCAL index
         vector — padded to the full coalesce width so every launch shares
@@ -670,18 +942,19 @@ class FeatureService:
         the classic stacked code slice for a single chunk. Either way the
         launch buffer is a flat (rows, F) array and each part records its
         chunk's row offset into it.
+
+        The chaos hook fires first, BEFORE any dispatch: an injected fault
+        or delay lands exactly where a real device error would, so it
+        exercises the same recovery path.
         """
+        if self._faults is not None:
+            self._faults.before_launch(s, stream)
         bucket = group[0].bucket
         if self.packed:
             mat = np.empty((self.coalesce, bucket), np.int32)
             for i, ch in enumerate(group):
                 mat[i] = pad_rows_edge(ch.rows, bucket)
             mat[len(group):] = mat[len(group) - 1]   # surplus lanes unread
-            # read fan-out: a replicated shard's launches round-robin its
-            # committed stream copies (each on its own device with its own
-            # window); without replicas this is exactly the primary
-            ex = (self._sharded_ex.next_executor(s) if self._sharded_ex
-                  else self._executors[s])
             dev = ex._rows_future(mat.reshape(-1))
             parts = [(ch.ticket, ch.n, ch.dest, i * bucket)
                      for i, ch in enumerate(group)]
@@ -690,7 +963,7 @@ class FeatureService:
         codes = self._slice_padded(ch.rows, bucket)
         # np codes go straight into the jit'd gather — its argument
         # transfer is the one host->device code shipment
-        dev = self._executor.gather_device(codes)
+        dev = ex.gather_device(codes)
         return dev, [(ch.ticket, ch.n, ch.dest, 0)], int(codes.nbytes)
 
     def _retire(self, arr: np.ndarray, parts: list) -> bool:
@@ -743,10 +1016,13 @@ class FeatureService:
                 self._results[ticket] = self._out_buf.pop(ticket)
             del self._chunks_total[ticket]
             self._ticket_rows.pop(ticket, None)
+            self._deadlines.pop(ticket, None)
             landed = True
             t0 = self._submitted_at.pop(ticket, None)
             if t0 is not None:
-                self.stats["latency_s_total"] += time.perf_counter() - t0
+                lat = time.perf_counter() - t0
+                self.stats["latency_s_total"] += lat
+                self.latencies.append(lat)
                 self.stats["completed"] += 1
         return landed
 
@@ -796,11 +1072,14 @@ class FeatureService:
             raise RuntimeError("adaptive shard management needs a "
                                "sharded=True service over a packed plan")
 
-    def _add_replica_locked(self, shard: int, device=None):
+    def _add_replica_locked(self, shard: int, device=None,
+                            avoid: frozenset = frozenset()):
         """The ONE replica-add bookkeeping path (lock held, pump thread) —
-        shared by the public mutator and the monitor policy so stats and
-        wake discipline can never drift apart."""
-        ex = self._sharded_ex.add_replica(shard, device)
+        shared by the public mutator and the monitor policies so stats and
+        wake discipline can never drift apart. ``avoid`` (device ids) keeps
+        the failover policy from re-replicating ONTO a device whose stream
+        breaker is open."""
+        ex = self._sharded_ex.add_replica(shard, device, avoid=avoid)
         self.stats["replicas_added"] += 1
         self._work.notify_all()         # the shard's window just widened
         return ex.device
@@ -845,18 +1124,32 @@ class FeatureService:
     def rebalance(self) -> dict:
         """Run the load monitor's policy decisions NOW (on the pump thread)
         and return the actions taken: ``{'split': [(old, new, cut)],
-        'replicated': [(shard, device)], 'dropped': [(shard, device)]}``.
-        Safe (a no-op) on unsharded services."""
+        'replicated': [(shard, device)], 'dropped': [(shard, device)],
+        'failover_replicated': [(shard, device)]}``. Safe (a no-op) on
+        unsharded services."""
         return self._run_admin(self._rebalance_locked)
+
+    def _unhealthy_devices(self, now: float) -> set[int]:
+        """Device ids currently behind an OPEN stream breaker (lock held)
+        — placement to avoid when re-replicating for failover."""
+        thr = self._policy.breaker_fails
+        bad: set[int] = set()
+        for s in range(self._n_shards):
+            for ex in self._shard_streams(s):
+                if self._breaker(ex).is_open(thr, now):
+                    bad.add(id(ex.device))
+        return bad
 
     def _rebalance_locked(self) -> dict:
         """Monitor tick (lock held, pump thread): update the per-shard
         request-rate EWMA from the ``shard_batches`` stats deltas, then
-        apply the two adaptive policies — split the tail shard past its row
-        budget, replicate the hottest shard / shed replicas of cooled ones.
-        One action of each kind per tick keeps rebalancing incremental (the
-        next tick re-evaluates against the moved load)."""
-        actions: dict = {"split": [], "replicated": [], "dropped": []}
+        apply the adaptive policies — split the tail shard past its row
+        budget, replicate the hottest shard / shed replicas of cooled
+        ones, and re-replicate shards whose streams went unhealthy
+        (failover). One action of each kind per tick keeps rebalancing
+        incremental (the next tick re-evaluates against the moved load)."""
+        actions: dict = {"split": [], "replicated": [], "dropped": [],
+                         "failover_replicated": []}
         sx = self._sharded_ex
         if sx is None:
             return actions
@@ -875,13 +1168,17 @@ class FeatureService:
             cut = start + max(32, self.row_budget // 32 * 32)
             new = self._apply_split_locked(cut)
             actions["split"].append((old, new, cut))
+        now = time.perf_counter()
+        sick = {s for s in range(self._n_shards)
+                if len(self._healthy_streams(s, now))
+                < len(self._shard_streams(s))}
+        cap = self.max_replicas
+        if cap is None:
+            cap = len({id(d) for d in sx.device_pool}) - 1
         # -- policy 2: hot-shard replication / cold-shard shedding --
         ewma = self._mon_ewma
         mean = sum(ewma) / max(len(ewma), 1)
         if mean > 0 and len(ewma) > 1:
-            cap = self.max_replicas
-            if cap is None:
-                cap = len({id(d) for d in sx.device_pool}) - 1
             hot = max(range(len(ewma)), key=lambda s: ewma[s])
             # hot = hot_factor x the mean of the OTHER shards — including
             # the hot shard in the reference would make the threshold
@@ -893,10 +1190,25 @@ class FeatureService:
                 actions["replicated"].append(
                     (hot, self._add_replica_locked(hot)))
             for s in range(len(ewma)):
-                if s != hot and sx.replicas[s] and ewma[s] < mean:
+                # never shed a replica of a shard with an unhealthy
+                # stream — the copies are its availability margin
+                if s != hot and sx.replicas[s] and ewma[s] < mean \
+                        and s not in sick:
                     actions["dropped"].append(
                         (s, self._drop_replica_locked(s)))
                     break
+        # -- policy 3: failover re-replication around unhealthy streams --
+        # a shard with an open breaker and < 2 healthy copies gets a fresh
+        # replica on a device that is NOT itself behind an open breaker, so
+        # retries have somewhere healthy to fail over to while the sick
+        # stream rides out its cooldown
+        if sick:
+            bad = self._unhealthy_devices(now)
+            for s in sorted(sick):
+                if len(self._healthy_streams(s, now)) < 2 \
+                        and len(sx.replicas[s]) < cap:
+                    actions["failover_replicated"].append(
+                        (s, self._add_replica_locked(s, avoid=bad)))
         return actions
 
     def _apply_split_locked(self, cut: int | None = None,
@@ -922,6 +1234,8 @@ class FeatureService:
             self.stats[k].append(0)
         self._mon_ewma.append(0.0)
         self._mon_last.append(0)
+        self._stream_rr.append(0)
+        self._stragglers.append(self._new_straggler())
         self._n_shards += 1
         self.stats["shard_splits"] += 1
         self._reroute_after_split(old, new)
@@ -976,13 +1290,14 @@ class FeatureService:
 
     # -- result retrieval ----------------------------------------------------------
     def poll(self, ticket: int) -> bool:
-        """True once the ticket's result is on host. Non-blocking and
-        dispatch-free: the pumps own all launching/retiring. Raises KeyError
-        for unknown/already-collected tickets (like ``result``) so a poll
-        loop can't spin forever on a bad ticket."""
+        """True once the ticket has RESOLVED — its result is on host, or it
+        failed and :meth:`result` will raise its typed error. Non-blocking
+        and dispatch-free: the pumps own all launching/retiring. Raises
+        KeyError for unknown/already-collected tickets (like ``result``) so
+        a poll loop can't spin forever on a bad ticket."""
         with self._lock:
             self._check_pump()
-            if ticket in self._results:
+            if ticket in self._results or ticket in self._errors:
                 return True
             if ticket not in self._chunks_total:
                 raise KeyError(f"unknown or already-collected ticket {ticket}")
@@ -999,14 +1314,22 @@ class FeatureService:
             return any(self._queues)
         return any(ch.ticket == ticket for q in self._queues for ch in q)
 
-    def result(self, ticket: int) -> np.ndarray:
-        """Block until the ticket's features are on host and return them.
+    def result(self, ticket: int,
+               timeout: float | None = None) -> np.ndarray:
+        """Block until the ticket RESOLVES: return its features, or raise
+        its typed error (:class:`ServeError`; :class:`DeadlineExceeded`
+        when its ``deadline_ms`` expired — both consumed, like a result).
 
         Purely a wait: the pumps launch and retire; this just sleeps on
         the service condition until the ticket lands (or is unknown).
-        Raises RuntimeError instead of deadlocking if the service is
-        paused with this ticket's chunks still unlaunched.
+        ``timeout`` (seconds) bounds the wait itself — a builtin
+        ``TimeoutError`` is raised when it elapses, and the ticket stays
+        pending and retrievable. Raises RuntimeError instead of
+        deadlocking if the service is paused with this ticket's chunks
+        still unlaunched.
         """
+        deadline = None if timeout is None \
+            else time.perf_counter() + timeout
         with self._lock:
             # claim the ticket so a concurrent drain() can't sweep it away
             # between a pump landing it and this thread waking up
@@ -1016,6 +1339,9 @@ class FeatureService:
                     self._check_pump()
                     if ticket in self._results:
                         return self._results.pop(ticket)
+                    err = self._errors.pop(ticket, None)
+                    if err is not None:
+                        raise err
                     if ticket not in self._chunks_total:
                         raise KeyError(
                             f"unknown or already-collected ticket {ticket}")
@@ -1023,15 +1349,29 @@ class FeatureService:
                         raise RuntimeError(
                             f"ticket {ticket} is queued but the service is "
                             "paused — resume() before blocking on results")
-                    self._cv.wait(timeout=0.5)
+                    wait = 0.5
+                    if deadline is not None:
+                        left = deadline - time.perf_counter()
+                        if left <= 0:
+                            raise TimeoutError(
+                                f"result({ticket}) timed out after "
+                                f"{timeout} s")
+                        wait = min(wait, left)
+                    self._cv.wait(timeout=wait)
             finally:
                 self._claimed.discard(ticket)
 
-    def drain(self) -> dict[int, np.ndarray]:
+    def drain(self, timeout: float | None = None) -> dict[int, np.ndarray]:
         """Wait for every pump to finish everything queued/in flight;
         return {ticket: features} collected — except tickets another thread
-        is blocked on in result(), which stay theirs. Raises RuntimeError
-        instead of deadlocking if called while paused with chunks queued."""
+        is blocked on in result(), which stay theirs. Tickets that FAILED
+        are not in the dict — their typed errors stay retrievable via
+        :meth:`result`/:meth:`collect`. ``timeout`` (seconds) bounds the
+        wait with a builtin ``TimeoutError`` (nothing is collected then).
+        Raises RuntimeError instead of deadlocking if called while paused
+        with chunks queued."""
+        deadline = None if timeout is None \
+            else time.perf_counter() + timeout
         with self._lock:
             try:
                 # a drain wants everything NOW: partial groups stop
@@ -1044,7 +1384,14 @@ class FeatureService:
                     if self._queued_while_paused(None):
                         raise RuntimeError("queue is held by pause() — "
                                            "resume() before drain()")
-                    self._idle.wait(timeout=0.5)
+                    wait = 0.5
+                    if deadline is not None:
+                        left = deadline - time.perf_counter()
+                        if left <= 0:
+                            raise TimeoutError(
+                                f"drain() timed out after {timeout} s")
+                        wait = min(wait, left)
+                    self._idle.wait(timeout=wait)
                 self._check_pump()
             finally:
                 self._flushes -= 1
@@ -1053,6 +1400,22 @@ class FeatureService:
             for t in out:
                 del self._results[t]
             return out
+
+    def collect(self, timeout: float | None = None) -> dict:
+        """Drain, then return EVERYTHING that resolved: ``{ticket:
+        features | ServeError}`` — completed tickets map to their arrays,
+        failed ones to their typed errors (both consumed, retrieved once).
+        The 'give me all outcomes, including what broke' retrieval a
+        caller uses after a faulty period; check each value with
+        ``isinstance(v, Exception)``. ``timeout`` as in :meth:`drain`."""
+        out: dict = dict(self.drain(timeout))
+        with self._lock:
+            errs = {t: e for t, e in self._errors.items()
+                    if t not in self._claimed}
+            for t in errs:
+                del self._errors[t]
+        out.update(errs)
+        return out
 
     # -- predicate pushdown queries (no pump involvement) -----------------------------
     def _pushdown_ex(self):
@@ -1105,9 +1468,13 @@ class FeatureService:
     def throughput_stats(self, wall_s: float) -> dict:
         rows = self.stats["rows"]
         done = self.stats["completed"]
+        req = self.stats["requests"]
         return {**self.stats, "wall_s": wall_s,
                 "rows_per_s": rows / wall_s if wall_s > 0 else float("inf"),
                 "mean_latency_s": (self.stats["latency_s_total"] / done
                                    if done else 0.0),
+                # the availability the chaos gate asserts on: completed /
+                # submitted (drain first — pending tickets count against)
+                "availability": done / req if req else 1.0,
                 "pad_overhead": (self.stats["padded_rows"] /
                                  max(rows + self.stats["padded_rows"], 1))}

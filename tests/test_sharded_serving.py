@@ -539,7 +539,8 @@ def test_adaptive_args_validation():
         with pytest.raises(RuntimeError):
             svc.split_tail()
         assert svc.rebalance() == {"split": [], "replicated": [],
-                                   "dropped": []}      # monitor no-ops
+                                   "dropped": [],
+                                   "failover_replicated": []}  # no-ops
 
 
 def test_sharded_service_serves_widened_plan_after_refresh():
