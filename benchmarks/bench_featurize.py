@@ -466,6 +466,97 @@ def _chaos_serve_comparison() -> None:
         s.shutdown()
 
 
+def _hedged_serve_comparison() -> None:
+    """Tail latency under injected stragglers: hedged vs no-hedge, same run.
+
+    The Zipf 'user block' workload again, with ASYNC stragglers (stall
+    rules: every 4th launch on shard 0's primary stream holds its result
+    buffer for ``stall_s`` — the pump keeps running, only the retire
+    waits) and a replica resident on the hot shard. Two services differ in
+    ONE policy bit: ``hedge``. The no-hedge control rides every stall out,
+    so its p99 ~= the stall; the hedged service duplicates the launch on
+    the replica once the wait crosses the hedge cutoff and retires the
+    fast copy. The ``compare.py --require`` gate asserts availability=1
+    AND hedge_wins>=1 AND ``p99_vs_nohedge`` well under 1 on this record —
+    the speculative duplicate must actually beat the straggler, same-run
+    so machine speed cancels (no cross-run timing gate: stall timing is
+    scheduler-sensitive on shared CI hosts).
+    """
+    rng = np.random.default_rng(47)
+    n = scaled(128_000, 32_000)
+    n_req = scaled(400, 200)
+    rsz = 64
+    n_shards = 4
+    stall_s = 0.05
+    data = {
+        "age": rng.integers(18, 90, n),
+        "state": rng.integers(0, 50, n),
+        "income": rng.integers(20, 250, n) * 1000,
+    }
+    fs = (FeatureSet().add("age", "zscore").add("state", "onehot")
+          .add("income", "minmax"))
+    blocks = (n - rsz) // 32
+    ranks = np.minimum(rng.zipf(1.2, n_req), blocks) - 1
+    reqs = [np.arange(s, s + rsz) for s in ranks * 32]
+    rows = n_req * rsz
+    table = Table.from_data(data, imcu_rows=n // n_shards)
+
+    def build(hedge: bool):
+        # each service needs its OWN injector: stall rules consume per
+        # launch, and the two pumps interleave nondeterministically
+        inj = FaultInjector().stall_launches(stall_s, 1 << 30, shard=0,
+                                             stream=0, every=4)
+        # breakers + straggler strikes off (thresholds unreachable): the
+        # benchmark isolates the hedging machinery from learned avoidance
+        pol = FaultPolicy(breaker_fails=1 << 30, straggler_min_s=1e9,
+                          hedge=hedge, hedge_min_s=0.005, hedge_factor=4.0)
+        svc = FeatureService(FeaturePlan(table, fs, packed=True),
+                             sharded=True, buckets=(rsz,), coalesce=8,
+                             linger_us=1000, max_replicas=3, faults=inj,
+                             fault_policy=pol)
+        svc.add_replica(0)           # the healthy stream hedges land on
+        return svc, inj
+
+    svc_hedge, inj_h = build(True)
+    svc_plain, inj_p = build(False)
+
+    def hedge_loop():
+        for r in reqs:
+            svc_hedge.submit(r)
+        svc_hedge.drain()
+
+    def plain_loop():
+        for r in reqs:
+            svc_plain.submit(r)
+        svc_plain.drain()
+
+    loops = [plain_loop, hedge_loop]
+    for loop in loops:
+        loop()                       # compile + train the EWMA past warmup
+    svc_hedge.latencies.clear()
+    svc_plain.latencies.clear()
+    plain_s, hedge_s = interleaved_best(loops, repeats=MIN_REPEATS)
+    p99_plain = float(np.percentile(np.array(svc_plain.latencies), 99))
+    p99_hedge = float(np.percentile(np.array(svc_hedge.latencies), 99))
+    st = svc_hedge.throughput_stats(hedge_s)
+    emit("serve/feature_service_hedged_nohedge", plain_s / n_req * 1e6,
+         f"rows_per_s={rows/plain_s:.0f};p99_ms={p99_plain*1e3:.3f};"
+         f"stalls_injected={inj_p.stalls_injected};stall_ms={stall_s*1e3:.0f};"
+         f"availability={svc_plain.throughput_stats(plain_s)['availability']:.4f}")
+    emit("serve/feature_service_hedged", hedge_s / n_req * 1e6,
+         f"availability={st['availability']:.4f};"
+         f"failed_tickets={st['failed_tickets']};"
+         f"hedges={st['hedges']};hedge_wins={st['hedge_wins']};"
+         f"stalls_injected={inj_h.stalls_injected};"
+         f"p99_ms={p99_hedge*1e3:.3f};"
+         f"p99_vs_nohedge={p99_hedge/max(p99_plain, 1e-9):.3f}x;"
+         f"speedup_vs_nohedge={plain_s/hedge_s:.2f}x;"
+         f"replicas={svc_hedge.replicas[0]};"
+         f"devices={len(jax.devices())}")
+    for s in (svc_hedge, svc_plain):
+        s.shutdown()
+
+
 def run() -> None:
     N = scaled(1 << 16, 1 << 12)   # device-path rows (interpret mode is slow)
     rng = np.random.default_rng(3)
@@ -508,6 +599,7 @@ def run() -> None:
     _sharded_serve_comparison()
     _skewed_serve_comparison()
     _chaos_serve_comparison()
+    _hedged_serve_comparison()
 
 
 if __name__ == "__main__":

@@ -71,7 +71,14 @@ tables), then serves featurization requests six ways:
    marks the sick stream, ``rebalance()`` re-replicates around it, and
    when NO replica exists only the faulted tickets resolve to typed
    ``ServeError``s (the service keeps serving; ``deadline_ms``/
-   ``timeout=`` bound every wait),
+   ``timeout=`` bound every wait). Phase 2 extends this past stream
+   faults: a killed DEVICE (6b) has its streams evicted, missed shards
+   host-gather-served, and each orphan rebuilt on a survivor from the
+   host packed words; a STALLED launch (6c) is raced by a speculative
+   duplicate on another healthy stream once its wait crosses the hedge
+   cutoff — first buffer ready wins, the straggler is discarded. A pump
+   infrastructure crash is supervised too: the pump restarts with the
+   ledger intact (``FaultPolicy.pump_restarts`` bounds the budget),
 7. streaming double-buffered iteration (serve_stream),
 8. a streaming insert followed by an incremental plan refresh — only the
    columns whose dictionaries changed are re-put on device; appended rows
@@ -255,6 +262,66 @@ def main() -> None:
         print(f"isolation: {outcome} — failed_tickets="
               f"{svcn.stats['failed_tickets']}, service still accepting: "
               f"{svcn.result(svcn.submit(np.arange(64, 128))).shape}")
+
+    # 6b. device-loss recovery: kill a device -> evict -> rebuild -> resume.
+    # One DeviceDown (injected here; a real runtime raises its own when an
+    # accelerator falls off the bus) marks the device dead. Its resident
+    # streams are evicted; the missed shards serve from the HOST packed
+    # words meanwhile (bit-exact, slower); the pump rebuilds each orphaned
+    # shard on a surviving device via the version-keyed re-put and device
+    # serving resumes. With only one device in the pool (the default CPU
+    # run) there is no survivor — host gathers carry the whole service,
+    # availability still 1.0.
+    import jax
+    from repro.serve import DeviceDown  # noqa: F401  (the class one kills)
+    inj3 = FaultInjector()
+    with FeatureService(FeaturePlan(table, features, packed=True),
+                        sharded=True, buckets=(512,), coalesce=8,
+                        faults=inj3,
+                        fault_policy=FaultPolicy(max_retries=8)) as svcd:
+        svcd.result(svcd.submit(np.arange(0, 512)))          # warm
+        dead = svcd._sharded_ex.devices[0]                   # shard 0 owner
+        inj3.kill_device(dead)
+        served = [svcd.result(svcd.submit(np.arange(s, s + 512)))
+                  for s in (0, 1 << 15)]                     # dead + alive
+        time.sleep(0.05)                   # give the pump its rebuild tick
+        st = svcd.stats
+        mode = ("rebuilt on a survivor" if st["recoveries"]
+                else "host-gather fallback (no surviving device)")
+        print(f"device loss: killed {dead} -> devices_lost="
+              f"{st['devices_lost']}, {mode}; host_gathers="
+              f"{st['host_gathers']}, recoveries={st['recoveries']}, "
+              f"served {[f.shape[0] for f in served]} rows through it, "
+              f"failed_tickets={st['failed_tickets']}")
+
+    # 6c. speculative hedged launches: the straggler timeline. A launch
+    # whose retire wait crosses max(hedge_min_s, hedge_factor x the
+    # shard's EWMA round-trip mean) gets a DUPLICATE launch on another
+    # healthy stream of the shard; first buffer ready resolves the
+    # tickets, the loser is discarded (and struck). Timeline for the
+    # stalled launch below (stall=80ms, cutoff~=5ms):
+    #
+    #   t=0     launch on primary      (injected stall: buffer late 80ms)
+    #   t~=5ms  wait crosses cutoff -> hedge launch on the replica
+    #   t~=6ms  replica buffer ready -> tickets retire (hedge_wins += 1)
+    #   t=80ms  primary buffer ready -> discarded, no double count
+    inj4 = FaultInjector()
+    polh = FaultPolicy(hedge=True, hedge_min_s=0.005, hedge_factor=4.0,
+                       breaker_fails=1 << 30, straggler_min_s=1e9)
+    with FeatureService(FeaturePlan(table, features, packed=True),
+                        sharded=True, buckets=(512,), coalesce=1,
+                        faults=inj4, fault_policy=polh) as svch:
+        svch.add_replica(0)                # the stream hedges land on
+        for _ in range(8):                 # train the EWMA past warmup
+            svch.result(svch.submit(np.arange(0, 512)))
+        inj4.stall_launches(0.08, 1, shard=0)
+        t0 = time.perf_counter()
+        out = svch.result(svch.submit(np.arange(0, 512)), timeout=30)
+        dt = time.perf_counter() - t0
+        st = svch.stats
+        print(f"hedging: stalled launch served {out.shape} in "
+              f"{dt * 1e3:.1f}ms (stall was 80ms) — hedges={st['hedges']}, "
+              f"hedge_wins={st['hedge_wins']}, completed={st['completed']}")
 
     # 7. streaming
     stream = svc.serve_stream(rng.integers(0, n, 256) for _ in range(8))

@@ -64,6 +64,7 @@ from __future__ import annotations
 
 import bisect
 import functools
+import itertools
 from collections import deque
 from dataclasses import dataclass
 from typing import Iterator, Mapping
@@ -352,6 +353,23 @@ class FeaturePlan:
         for i, (w, db) in enumerate(zip(self.packed_words, self.device_bits)):
             out[i] = packed_gather(w, db, rows)
         return out
+
+    def host_features(self, rows: np.ndarray) -> np.ndarray:
+        """(len(rows), F) features computed ENTIRELY on the host — the
+        degraded-mode slow path for rows whose resident device stream is
+        gone (device loss before the emergency rebuild lands). Gathers
+        codes from the host packed words and indexes the host fused ADV
+        tables with the same OOB clamp as the device paths
+        (``mode="clip"``), so results stay bit-exact with a device launch
+        over the same plan state."""
+        rows = np.asarray(rows)
+        if not self.plans:
+            return np.zeros((rows.shape[0], 0), np.float32)
+        codes = self.host_codes(rows)
+        outs = [p.fused_host[np.clip(codes[i], 0,
+                                     p.fused_host.shape[0] - 1)]
+                for i, p in enumerate(self.plans)]
+        return np.concatenate(outs, axis=-1)
 
     # -- fused multi-table layout (one-kernel-pass path) -------------------------
     def fused_tables(self) -> adv_ops.FusedTables:
@@ -663,6 +681,12 @@ class _DeviceTableCache:
         self.fused = None
 
 
+# process-unique launch-stream identity (see FeatureExecutor.stream_token):
+# unlike id(executor), a token is never reused after an executor is dropped,
+# so health state keyed on it can never alias onto a NEW stream
+_STREAM_TOKENS = itertools.count()
+
+
 class FeatureExecutor:
     """Run-time half: jit'd stacked gather + double-buffered batch iterator.
 
@@ -701,6 +725,10 @@ class FeatureExecutor:
         # ``table_cache`` lets executors sharing a device share the placed
         # table copies (ShardedFeatureExecutor passes one per device).
         self.device = device
+        # stable launch-stream identity for per-stream health state
+        # (breakers): survives as a dict key where id(self) would be
+        # recycled by the allocator after a drop_replica/evict
+        self.stream_token = next(_STREAM_TOKENS)
         self._tcache = table_cache if table_cache is not None \
             else _DeviceTableCache()
         self._jit_take = jax.jit(self._take_impl)
@@ -1337,6 +1365,69 @@ class ShardedFeatureExecutor:
         if not self.replicas[shard]:
             raise ValueError(f"shard {shard} has no replicas to drop")
         ex = self.replicas[shard].pop(index)
+        self._rr[shard] = 0
+        return ex
+
+    def evict_device(self, dev_id: int):
+        """Remove every launch stream resident on a DEAD device
+        (``dev_id = id(device)``) — the first half of device-loss
+        recovery. Replicas on the device are dropped outright; a shard
+        whose PRIMARY died promotes its first surviving replica (the
+        promoted stream already holds the resident words, so serving
+        continues without a transfer). Returns ``(removed, orphans)``:
+        ``removed`` is ``[(shard, executor), ...]`` for every stream taken
+        out of rotation (the caller retires their health state), and
+        ``orphans`` lists shards left with NO live stream — their dead
+        primary stays in place as a routing placeholder and the caller
+        must serve them from host words until :meth:`rebuild_on` lands.
+        """
+        removed: list[tuple[int, FeatureExecutor]] = []
+        orphans: list[int] = []
+        for s in range(self.n_shards):
+            reps = self.replicas[s]
+            dead = [ex for ex in reps if id(ex.device) == dev_id]
+            if dead:
+                self.replicas[s] = [ex for ex in reps
+                                    if id(ex.device) != dev_id]
+                removed.extend((s, ex) for ex in dead)
+                self._rr[s] = 0
+            if id(self.executors[s].device) == dev_id:
+                removed.append((s, self.executors[s]))
+                if self.replicas[s]:           # failover: promote a replica
+                    self.executors[s] = self.replicas[s].pop(0)
+                    self.devices[s] = self.executors[s].device
+                    self._rr[s] = 0
+                else:
+                    orphans.append(s)
+        self._caches.pop(dev_id, None)         # placed tables died with it
+        return removed, orphans
+
+    def rebuild_on(self, shard: int, device=None,
+                   lost=frozenset()) -> FeatureExecutor:
+        """Emergency rebuild of ``shard``'s primary stream on a healthy
+        device — the second half of device-loss recovery. The fresh
+        executor re-commits the shard's resident word stream from the HOST
+        packed words through the same version-keyed put path a refresh
+        uses (plus the per-device table cache), so the rebuilt stream is
+        bit-exact with the lost one by construction. Default placement
+        routes around ``lost`` devices (ids) and anything already holding
+        a stream of this shard. Raises if the surviving pool is empty —
+        the caller keeps host-serving until hardware returns."""
+        if device is None:
+            from repro.distributed.sharding import (replica_device,
+                                                    surviving_devices)
+            pool = surviving_devices(self.device_pool, lost)
+            if not pool:
+                raise ValueError(
+                    f"no surviving device to rebuild shard {shard} on")
+            held = {id(e.device) for e in self.stream_executors(shard)}
+            device = replica_device(pool, self.device_load(),
+                                    exclude=held, unhealthy=lost)
+        ex = FeatureExecutor(self.shards[shard], use_kernel=self.use_kernel,
+                             prefetch=self.prefetch, autotune=self.autotune,
+                             device=device, table_cache=self._cache_for(device))
+        self.executors[shard] = ex
+        self.devices[shard] = device
         self._rr[shard] = 0
         return ex
 

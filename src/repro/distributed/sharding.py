@@ -228,6 +228,19 @@ def serve_devices(n_shards: int, devices=None) -> list:
     return [devices[i % len(devices)] for i in range(n_shards)]
 
 
+def surviving_devices(devices, lost=frozenset()) -> list:
+    """The serve pool minus devices declared DEAD (``lost`` holds
+    ``id(device)`` keys from the service's DeviceHealth tracker).
+
+    Unlike :func:`replica_device`'s ``unhealthy`` set — streams behind an
+    open breaker, avoided but usable when cornered — a lost device is
+    gone: it must never be picked, so an empty survivor list is returned
+    as-is and the caller decides the fallback (feature serving degrades
+    to host gathers until hardware returns)."""
+    devices = list(devices) if devices is not None else jax.devices()
+    return [d for d in devices if id(d) not in lost]
+
+
 def replica_device(devices, load: dict[int, int] | None = None,
                    exclude=frozenset(), unhealthy=frozenset()):
     """Placement rule for an ADAPTIVE stream (shard replica or fresh tail

@@ -1,8 +1,9 @@
 from repro.serve.engine import ServeEngine, Request
-from repro.serve.faults import (DeadlineExceeded, FaultInjector, FaultPolicy,
-                                InjectedFault, ServeError, StreamBreaker)
+from repro.serve.faults import (DeadlineExceeded, DeviceDown, DeviceHealth,
+                                FaultInjector, FaultPolicy, InjectedFault,
+                                ServeError, StreamBreaker)
 from repro.serve.feature_service import FeatureService
 
 __all__ = ["ServeEngine", "Request", "FeatureService", "FaultInjector",
            "FaultPolicy", "ServeError", "DeadlineExceeded", "InjectedFault",
-           "StreamBreaker"]
+           "StreamBreaker", "DeviceDown", "DeviceHealth"]

@@ -111,6 +111,43 @@ ticket resolves to :class:`repro.serve.faults.DeadlineExceeded`, also a
 default) injects deterministic failures and straggler delays ON the
 launch path, so injected faults exercise exactly the recovery machinery
 real device errors would.
+
+Fault tolerance, phase 2 (component death, not just launch faults):
+
+- **Device-loss recovery.** Launch failures are attributed to the
+  failing stream's DEVICE (:class:`repro.serve.faults.DeviceHealth`):
+  ``device_fails`` consecutive breaker trips — or one
+  :class:`repro.serve.faults.DeviceDown` error — declare the device
+  dead. The service then evicts every resident stream on it
+  (:meth:`ShardedFeatureExecutor.evict_device` — replicas dropped,
+  orphaned primaries promoted from surviving replicas) and shards left
+  with NO live stream enter emergency rebuild: the monitor's fourth
+  policy (and the pump, as soon as it has a free beat) re-commits the
+  shard's word stream on a surviving device from the HOST packed words
+  through the same version-keyed put path a refresh uses. Until the
+  rebuild lands, the shard's queued chunks are served through the
+  host-gather slow path (:meth:`FeaturePlan.host_features` — bit-exact
+  with the device gather by construction), so availability holds at 1.0
+  even with EVERY device dead.
+- **Supervised pump restart.** The pump thread runs under a supervisor:
+  a pump-infrastructure exception (control logic, not a guarded launch)
+  no longer kills the service — the supervisor restarts the pump loop
+  with the ledger intact (queues, in-flight windows, tickets, admin
+  queue), re-enqueueing any group the dying pump had taken but not
+  finished, up to ``FaultPolicy.pump_restarts`` times; past the budget
+  the crash is terminal exactly like before. Blocking entry points
+  (``result``/``drain``/``collect``/``poll``) already poll on 0.5 s
+  ticks, so a restart is invisible to them.
+- **Speculative hedged launches.** A retire wait that outlives
+  ``max(hedge_min_s, hedge_factor x the shard's EWMA round-trip)`` (and
+  a warmed-up detector) dispatches a DUPLICATE of the launch group on a
+  different healthy stream of the same shard — the
+  :class:`repro.train.fault.StragglerDetector` backup-worker idiom at
+  serving granularity. First buffer to come ready resolves the tickets;
+  the loser is discarded unread and never double-counts launch stats
+  (only ``hedges``/``hedge_wins``). A hedge win also strikes the
+  straggling primary's breaker, feeding the same unhealthy-stream
+  machinery as a thrown launch.
 """
 from __future__ import annotations
 
@@ -125,8 +162,9 @@ import jax.numpy as jnp
 from repro.core.pipeline import (FeatureExecutor, FeaturePipeline,
                                  FeaturePlan, ShardedFeatureExecutor,
                                  pad_rows_edge)
-from repro.serve.faults import (DeadlineExceeded, FaultInjector, FaultPolicy,
-                                ServeError, StreamBreaker)
+from repro.serve.faults import (DeadlineExceeded, DeviceDown, DeviceHealth,
+                                FaultInjector, FaultPolicy, ServeError,
+                                StreamBreaker)
 from repro.train.fault import StragglerDetector
 
 DEFAULT_BUCKETS = (64, 256, 1024)
@@ -147,7 +185,29 @@ class _Chunk:
     # -- fault-recovery state (pump thread only) --
     attempts: int = 0               # launches tried so far
     not_before: float = 0.0         # retry backoff deadline (perf_counter)
-    avoid: frozenset = frozenset()  # executor ids this chunk failed on
+    avoid: frozenset = frozenset()  # stream tokens this chunk failed on
+
+
+@dataclass
+class _Flight:
+    """One dispatched launch awaiting retire (pump thread only).
+
+    ``ready_at`` gates the retire on an injected stall (simulated slow
+    device compute — 0.0 means none). The hedge fields appear when a
+    duplicate launch was dispatched on another stream: the duplicate
+    covers the SAME group, so its buffer layout matches ``parts`` and
+    whichever buffer comes ready first retires the tickets."""
+    dev: object                     # primary launch buffer (device)
+    parts: list                     # (ticket, n, dest, row_off) per chunk
+    group: list                     # the _Chunks this launch covers
+    ex: object                      # primary stream executor
+    t0: float                       # primary dispatch time (perf_counter)
+    ready_at: float = 0.0           # injected-stall retire gate
+    hedge_dev: object = None        # duplicate launch buffer, if hedged
+    hedge_ex: object = None
+    hedge_t0: float = 0.0
+    hedge_ready_at: float = 0.0
+    hedge_done: bool = False        # hedge attempted (or impossible)
 
 
 class FeatureService:
@@ -249,8 +309,20 @@ class FeatureService:
         self._errors: dict[int, ServeError] = {}   # failed-ticket results
         self._dead: set[int] = set()    # failed tickets: drop their chunks
         self._deadlines: dict[int, float] = {}     # ticket -> perf_counter
-        self._breakers: dict[int, StreamBreaker] = {}   # id(executor) ->
+        # breakers key on the executor's STABLE stream token, never id():
+        # a dropped replica's id() can be recycled for a fresh executor,
+        # which would alias the new stream onto a stale open breaker
+        self._breakers: dict[int, StreamBreaker] = {}   # stream_token ->
         self._stream_rr = [0] * self._n_shards     # healthy-stream cursor
+        # -- device-loss recovery state --
+        self._device_health = DeviceHealth()
+        self._needs_rebuild: set[int] = set()   # shards with no live stream
+        # -- pump supervisor state (journal: what the pump held when it
+        #    died, so a restart re-enqueues instead of losing tickets) --
+        self._pump_restarts_used = 0
+        self._pump_taken: tuple | None = None      # (shard, group) pre-launch
+        self._pump_retiring: tuple | None = None   # (shard, _Flight)
+        self._retire_prog = 0       # parts fully retired of current flight
         self._stragglers = [self._new_straggler()
                             for _ in range(self._n_shards)]
         self.latencies: deque[float] = deque(maxlen=8192)  # per-ticket s
@@ -273,6 +345,9 @@ class FeatureService:
                       "retries": 0, "failovers": 0, "timeouts": 0,
                       "failed_tickets": 0, "unhealthy_shards": 0,
                       "stragglers": 0,
+                      "recoveries": 0, "pump_restarts": 0,
+                      "hedges": 0, "hedge_wins": 0,
+                      "devices_lost": 0, "host_gathers": 0,
                       "rebalances": 0, "replicas_added": 0,
                       "replicas_dropped": 0, "shard_splits": 0,
                       "shard_launches": [0] * self._n_shards,
@@ -290,7 +365,7 @@ class FeatureService:
         self._cv = threading.Condition(self._lock)
         self._idle = threading.Condition(self._lock)
         self._seq = 0                       # global launch order for retires
-        self._pump = threading.Thread(target=self._pump_loop,
+        self._pump = threading.Thread(target=self._pump_main,
                                       name="feature-service-pump",
                                       daemon=True)
         self._pump.start()
@@ -385,10 +460,37 @@ class FeatureService:
                                  warmup=p.straggler_warmup)
 
     def _breaker(self, ex) -> StreamBreaker:
-        b = self._breakers.get(id(ex))
+        b = self._breakers.get(ex.stream_token)
         if b is None:
-            b = self._breakers[id(ex)] = StreamBreaker()
+            b = self._breakers[ex.stream_token] = StreamBreaker()
         return b
+
+    def _close_breaker_locked(self, ex, now: float) -> None:
+        """A round trip proved the stream healthy: close its breaker, and
+        when it was TRIPPED, give back its ``unhealthy_shards`` mark —
+        the stat is a gauge of currently-unhealthy streams, not a
+        lifetime trip counter. A success while the breaker is still OPEN
+        does NOT close it: a shard whose only stream tripped keeps
+        launching through the open breaker, and those forced launches are
+        not probes — the breaker holds until the cooldown makes the
+        stream half-open and a success there is the real probe."""
+        b = self._breakers.get(ex.stream_token)
+        if b is None or b.is_open(self._policy.breaker_fails, now):
+            return
+        if b.fails >= self._policy.breaker_fails:
+            self.stats["unhealthy_shards"] -= 1
+        b.reset()
+
+    def _discard_breaker_locked(self, ex) -> None:
+        """The stream is leaving the shard set (replica drop, device
+        eviction, rebuild swap): forget its breaker — and give back its
+        gauge mark when it left unhealthy. Without this, breakers leak
+        per dropped stream (and a recycled executor id could inherit a
+        stale open breaker — tokens make that structural, this makes the
+        table size match the live stream set)."""
+        b = self._breakers.pop(ex.stream_token, None)
+        if b is not None and b.fails >= self._policy.breaker_fails:
+            self.stats["unhealthy_shards"] -= 1
 
     def _shard_streams(self, s: int) -> list:
         return (self._sharded_ex.stream_executors(s)
@@ -397,7 +499,8 @@ class FeatureService:
     def _healthy_streams(self, s: int, now: float) -> list:
         thr = self._policy.breaker_fails
         return [ex for ex in self._shard_streams(s)
-                if not self._breaker(ex).is_open(thr, now)]
+                if not self._breaker(ex).is_open(thr, now)
+                and not self._device_health.is_down(id(ex.device))]
 
     @property
     def unhealthy(self) -> list[int]:
@@ -422,24 +525,31 @@ class FeatureService:
             return streams[0], 0
         now = time.perf_counter()
         thr = self._policy.breaker_fails
+        dh = self._device_health
         idx = list(range(len(streams)))
         healthy = [i for i in idx
-                   if not self._breaker(streams[i]).is_open(thr, now)]
-        pool = ([i for i in healthy if id(streams[i]) not in avoid]
+                   if not self._breaker(streams[i]).is_open(thr, now)
+                   and not dh.is_down(id(streams[i].device))]
+        pool = ([i for i in healthy
+                 if streams[i].stream_token not in avoid]
                 or healthy
-                or [i for i in idx if id(streams[i]) not in avoid]
+                or [i for i in idx if streams[i].stream_token not in avoid]
                 or idx)
         self._stream_rr[s] += 1
         i = pool[self._stream_rr[s] % len(pool)]
         return streams[i], i
 
-    def _strike_locked(self, ex, shard: int, now: float) -> None:
+    def _strike_locked(self, ex, shard: int, now: float) -> bool:
         """One failure (or straggler flag) on a stream: breaker
-        bookkeeping + the unhealthy-shard mark the monitor keys on."""
+        bookkeeping + the unhealthy-shard mark the monitor keys on.
+        Returns True when this strike TRIPPED the breaker — the event
+        device-loss attribution counts."""
         p = self._policy
         if self._breaker(ex).strike(p.breaker_fails, p.breaker_cooldown_s,
                                     now):
             self.stats["unhealthy_shards"] += 1
+            return True
+        return False
 
     def _observe_latency_locked(self, s: int, ex, dt: float,
                                 now: float) -> None:
@@ -454,7 +564,8 @@ class FeatureService:
             self.stats["stragglers"] += 1
             self._strike_locked(ex, s, now)
         else:
-            self._breaker(ex).reset()
+            self._close_breaker_locked(ex, now)
+            self._device_health.ok(id(ex.device))
 
     def _fail_ticket_locked(self, ticket: int, err: ServeError, *,
                             timeout: bool = False) -> None:
@@ -484,9 +595,26 @@ class FeatureService:
         then re-enqueue the group at the head of its shard's queue —
         immediately when another healthy stream can take the retry
         (replica failover), else after capped exponential backoff.
-        Chunks out of retries resolve their tickets to ServeError."""
+        Chunks out of retries resolve their tickets to ServeError.
+
+        Device attribution: a breaker TRIP counts one strike against the
+        stream's device; a :class:`DeviceDown` error declares it dead
+        outright. A newly-dead device triggers recovery (evict + rebuild
+        elsewhere) before the group is re-enqueued, so the retry already
+        sees the post-eviction stream set."""
         now = time.perf_counter()
-        self._strike_locked(ex, s, now)
+        tripped = self._strike_locked(ex, s, now)
+        if self._sharded_ex is not None and ex.device is not None:
+            dev_id = id(ex.device)
+            if isinstance(err, DeviceDown):
+                newly_down = self._device_health.mark_down(dev_id)
+            elif tripped:
+                newly_down = self._device_health.strike(
+                    dev_id, self._policy.device_fails)
+            else:
+                newly_down = False
+            if newly_down:
+                self._recover_device_locked(dev_id)
         retry = [ch for ch in group
                  if ch.attempts + 1 <= self._policy.max_retries
                  and ch.ticket not in self._dead]
@@ -499,17 +627,71 @@ class FeatureService:
             self._errors[ch.ticket].__cause__ = err
         if not retry:
             return
-        failed_id = id(ex)
-        alt = any(id(e) != failed_id
+        failed_tok = ex.stream_token
+        alt = any(e.stream_token != failed_tok
                   for e in self._healthy_streams(s, now))
         for ch in reversed(retry):
             ch.attempts += 1
-            ch.avoid = ch.avoid | {failed_id}
+            ch.avoid = ch.avoid | {failed_tok}
             ch.not_before = now if alt \
                 else now + self._policy.backoff_for(ch.attempts)
             self._queues[s].appendleft(ch)
         self.stats["retries"] += 1
         self._work.notify_all()
+
+    # -- device-loss recovery (evict -> host-serve -> rebuild) -----------------------
+    def _recover_device_locked(self, dev_id: int) -> None:
+        """A device was declared dead (lock held, pump thread): evict
+        every resident stream on it — replicas dropped, orphaned
+        primaries promoted from surviving replicas — and mark shards
+        left with NO live stream for emergency rebuild. Their queued
+        work is served through the host-gather slow path until the
+        rebuild lands (:meth:`_pick_action` policy: hostserve before
+        launch for marked shards)."""
+        self.stats["devices_lost"] += 1
+        removed, orphans = self._sharded_ex.evict_device(dev_id)
+        for _s, rex in removed:
+            self._discard_breaker_locked(rex)
+        for s in orphans:
+            self._needs_rebuild.add(s)
+        self._work.notify_all()
+
+    def _rebuild_shard_locked(self, s: int) -> bool:
+        """Emergency rebuild of an orphaned shard's stream on a surviving
+        device (lock held, pump thread). False (shard stays host-served)
+        when no device survives; True when the fresh stream is committed
+        — from then on the shard launches normally again."""
+        sx = self._sharded_ex
+        lost = set(self._device_health.down)
+        old = sx.executors[s]
+        try:
+            sx.rebuild_on(s, lost=lost)
+        except ValueError:
+            return False                 # nothing healthy to rebuild on
+        self._discard_breaker_locked(old)
+        self._needs_rebuild.discard(s)
+        self.stats["recoveries"] += 1
+        self._work.notify_all()
+        return True
+
+    def _serve_host_locked(self, s: int, group: list) -> None:
+        """Degraded-mode serving for a shard with no live stream (lock
+        held): compute the group's features from the HOST packed words +
+        host ADV tables (:meth:`FeaturePlan.host_features` — the same
+        codes and the same OOB clamp as the device gather, so results
+        are bit-exact) and retire the tickets directly. Never double-
+        counts launch stats — only ``host_gathers``."""
+        plan = (self._sharded_ex.shards[s]
+                if self._sharded_ex is not None else self.plan)
+        self.stats["host_gathers"] += 1
+        landed = False
+        for ch in group:
+            feats = plan.host_features(ch.rows)
+            self._retire_prog = 0
+            if self._retire(feats, [(ch.ticket, ch.n, ch.dest, 0)]):
+                landed = True
+        if landed:
+            self._cv.notify_all()
 
     # -- request intake -------------------------------------------------------------
     def _route(self, rows: np.ndarray, lo: int, hi: int):
@@ -724,21 +906,30 @@ class FeatureService:
         """Choose the pump's next action (lock held).
 
         Returns ``("launch", shard)``, ``("retire", shard)``,
-        ``("wait", timeout)`` or ``("exit", None)``. Preference order keeps
-        every shard's launch stream busy: launch wherever a window has room
-        and a group is ready; otherwise retire the OLDEST in-flight launch
-        — from a full-window shard first (unblocks its stream), else any.
-        Lingering shards (partial group, young head chunk) are skipped for
-        launching but their deadline bounds the wait timeout, so fuller
-        groups never cost unbounded latency.
+        ``("hostserve", shard)`` (queued work on a shard with no live
+        stream — serve it from host words), ``("rebuild", shard)``
+        (re-commit an orphaned shard's stream on a surviving device),
+        ``("wait", timeout)`` or ``("exit", None)``. Preference order
+        keeps every shard's launch stream busy: launch wherever a window
+        has room and a group is ready; otherwise retire the OLDEST
+        in-flight launch — from a full-window shard first (unblocks its
+        stream), else any. Lingering shards (partial group, young head
+        chunk) are skipped for launching but their deadline bounds the
+        wait timeout, so fuller groups never cost unbounded latency.
+        Rebuilds run when nothing is launchable or retirable — and only
+        when a device actually survives, so a fully-dead mesh settles
+        into pure host-serving instead of spinning.
         """
         held = self._paused and not self._shutdown
         linger_min = None
         now = time.perf_counter()
         for s in range(self._n_shards):
             queue = self._queues[s]
-            if not queue or held or \
-                    len(self._inflights[s]) >= self.prefetch * self._streams(s):
+            if not queue or held:
+                continue
+            if s in self._needs_rebuild:
+                return "hostserve", s
+            if len(self._inflights[s]) >= self.prefetch * self._streams(s):
                 continue
             hold = queue[0].not_before - now
             if hold > 0:
@@ -773,9 +964,68 @@ class FeatureService:
             return "retire", oldest_full
         if oldest is not None and linger_min is None:
             return "retire", oldest
+        if self._needs_rebuild and not self._shutdown \
+                and self._sharded_ex is not None:
+            down = self._device_health.down
+            if any(id(d) not in down
+                   for d in self._sharded_ex.device_pool):
+                return "rebuild", min(self._needs_rebuild)
         if self._shutdown and self._all_idle() and not self._admin_q:
             return "exit", None
         return "wait", linger_min
+
+    def _pump_main(self) -> None:
+        """Pump SUPERVISOR (the thread target): run the pump loop, and
+        when it dies of a pump-infrastructure exception — control logic,
+        not a guarded launch — restart it with the ledger intact
+        (:meth:`_recover_pump_locked` re-enqueues whatever the dying
+        pump held mid-operation), up to ``FaultPolicy.pump_restarts``
+        times. Past the budget the crash is terminal: ``_pump_error``
+        poisons the service and every waiter is unblocked, exactly the
+        pre-supervisor behavior."""
+        while True:
+            try:
+                self._pump_loop()
+                return
+            except BaseException as e:
+                with self._lock:
+                    if self._pump_restarts_used >= \
+                            self._policy.pump_restarts:
+                        self._pump_error = e
+                        self._fail_admin(e)
+                        self._notify_everyone()
+                        return
+                    self._pump_restarts_used += 1
+                    self.stats["pump_restarts"] += 1
+                    self._recover_pump_locked()
+
+    def _recover_pump_locked(self) -> None:
+        """Restore the ledger's invariants after a pump crash (lock
+        held): clear the busy markers the dying pump still held, and put
+        back — at the head of its shard's queue, original order — any
+        group it had taken for launch but not recorded in flight, plus
+        the not-yet-distributed chunks of a retire it was mid-way
+        through (parts already distributed stay distributed; the journal
+        ``_retire_prog`` marks the boundary). Tickets, queues, in-flight
+        windows and the admin queue all survive as-is; blocking entry
+        points poll on 0.5 s ticks and behave identically across the
+        restart."""
+        self._busy = [0] * self._n_shards
+        taken = self._pump_taken
+        if taken is not None:
+            s, group = taken
+            for ch in reversed(group):
+                self._queues[s].appendleft(ch)
+            self._pump_taken = None
+        retp = self._pump_retiring
+        if retp is not None:
+            s, fl = retp
+            for i in range(len(fl.group) - 1, self._retire_prog - 1, -1):
+                ch = fl.group[i]
+                if ch.ticket in self._chunks_total:
+                    self._queues[s].appendleft(ch)
+            self._pump_retiring = None
+        self._work.notify_all()
 
     def _pump_loop(self) -> None:
         """ONE multiplexing pump drains every shard's queue until shutdown:
@@ -796,102 +1046,204 @@ class FeatureService:
         blocking on its buffer at retire — is guarded per launch group. An
         exception there routes through :meth:`_handle_launch_failure`
         (retry with backoff, replica failover, per-ticket ServeError) and
-        the loop continues; only the pump's own control logic reaching the
-        outer handler kills the service.
+        the loop continues; the pump's own control logic raising lands in
+        the supervisor (:meth:`_pump_main`) — restart with the ledger
+        intact while the budget lasts, terminal after.
         """
-        try:
-            while True:
-                with self._lock:
-                    while True:
-                        # shard-set mutations happen HERE — the pump is the
-                        # only launcher, and at this point no launch or
-                        # retire is mid-flight, so a split/replica swap can
-                        # never race a dispatch against stale routing
-                        self._drain_admin()
-                        action, arg = self._pick_action()
-                        if action != "wait":
-                            break
-                        if self._all_idle():
-                            self._idle.notify_all()
-                        self._work.wait(timeout=arg)
-                    if action == "exit":
-                        return
-                    s = arg
-                    if action == "launch":
-                        job = self._take_group(self._queues[s],
-                                               time.perf_counter())
-                        if not job:
-                            # the whole head group was evicted (failed or
-                            # deadline-expired tickets) — nothing to launch
-                            if self._all_idle():
-                                self._idle.notify_all()
-                            continue
-                        ex, _stream = self._pick_stream(s, job[0].avoid)
-                        if job[0].avoid and id(ex) not in job[0].avoid:
-                            # a retry actually reached a stream it had not
-                            # failed on yet: replica failover
-                            self.stats["failovers"] += 1
-                    else:
-                        job = None
-                        _, entry = self._inflights[s].popleft()
-                    self._busy[s] += 1
-                if job is not None:
-                    t0 = time.perf_counter()
-                    try:
-                        dev, parts, nbytes = self._launch(job, s, ex,
-                                                          _stream)
-                    except Exception as e:
-                        with self._lock:
-                            self._handle_launch_failure(s, job, ex, e)
-                            self._busy[s] -= 1
-                            if self._all_idle():
-                                self._idle.notify_all()
-                        continue
-                    with self._lock:
-                        self._seq += 1
-                        self._inflights[s].append(
-                            (self._seq, (dev, parts, job, ex, t0)))
-                        self.stats["launches"] += 1
-                        self.stats["batches"] += len(parts)
-                        self.stats["bytes_h2d"] += nbytes
-                        self.stats["shard_launches"][s] += 1
-                        self.stats["shard_batches"][s] += len(parts)
-                        self.stats["shard_bytes_h2d"][s] += nbytes
-                        self.stats["max_inflight"] = max(
-                            self.stats["max_inflight"],
-                            sum(len(i) for i in self._inflights))
-                        self._busy[s] -= 1
-                        if self.rebalance_every and (
-                                self.stats["launches"] - self._mon_mark
-                                >= self.rebalance_every):
-                            self._rebalance_locked()
-                else:
-                    dev, parts, group, ex, t0 = entry
-                    try:
-                        arr = np.asarray(dev)   # blocks on device, unlocked
-                    except Exception as e:
-                        with self._lock:
-                            self._handle_launch_failure(s, group, ex, e)
-                            self._busy[s] -= 1
-                            if self._all_idle():
-                                self._idle.notify_all()
-                        continue
-                    dt = time.perf_counter() - t0
-                    with self._lock:
-                        self._observe_latency_locked(
-                            s, ex, dt, time.perf_counter())
-                        if self._retire(arr, parts):
-                            self._cv.notify_all()
-                        self._busy[s] -= 1
-                        if self._all_idle():
-                            self._idle.notify_all()
-        except BaseException as e:
-            # pump-infrastructure error (control logic, not a launch):
-            # terminal by design — tested via _pick_action fault injection
+        while True:
             with self._lock:
-                self._pump_error = e
-                self._fail_admin(e)
-                self._notify_everyone()
+                while True:
+                    # shard-set mutations happen HERE — the pump is the
+                    # only launcher, and at this point no launch or
+                    # retire is mid-flight, so a split/replica swap can
+                    # never race a dispatch against stale routing
+                    self._drain_admin()
+                    action, arg = self._pick_action()
+                    if action != "wait":
+                        break
+                    if self._all_idle():
+                        self._idle.notify_all()
+                    self._work.wait(timeout=arg)
+                if action == "exit":
+                    return
+                s = arg
+                if action == "hostserve":
+                    # degraded mode — the shard has no live stream. Retry
+                    # backoffs are void (the host path cannot fail the
+                    # way a launch did): take everything queued and serve
+                    # it from the host words, bit-exact
+                    for ch in self._queues[s]:
+                        ch.not_before = 0.0
+                    job = self._take_group(self._queues[s],
+                                           time.perf_counter())
+                    if job:
+                        self._serve_host_locked(s, job)
+                    if self._all_idle():
+                        self._idle.notify_all()
+                    continue
+                if action == "rebuild":
+                    self._rebuild_shard_locked(s)
+                    continue
+                if action == "launch":
+                    job = self._take_group(self._queues[s],
+                                           time.perf_counter())
+                    if not job:
+                        # the whole head group was evicted (failed or
+                        # deadline-expired tickets) — nothing to launch
+                        if self._all_idle():
+                            self._idle.notify_all()
+                        continue
+                    self._pump_taken = (s, job)
+                    ex, _stream = self._pick_stream(s, job[0].avoid)
+                    if job[0].avoid and \
+                            ex.stream_token not in job[0].avoid:
+                        # a retry actually reached a stream it had not
+                        # failed on yet: replica failover
+                        self.stats["failovers"] += 1
+                else:
+                    job = None
+                    _, fl = self._inflights[s].popleft()
+                    self._pump_retiring = (s, fl)
+                    self._retire_prog = 0
+                self._busy[s] += 1
+            if job is not None:
+                t0 = time.perf_counter()
+                try:
+                    dev, parts, nbytes, stall = self._launch(job, s, ex,
+                                                             _stream)
+                except Exception as e:
+                    with self._lock:
+                        self._handle_launch_failure(s, job, ex, e)
+                        self._pump_taken = None
+                        self._busy[s] -= 1
+                        if self._all_idle():
+                            self._idle.notify_all()
+                    continue
+                with self._lock:
+                    self._seq += 1
+                    self._inflights[s].append((self._seq, _Flight(
+                        dev, parts, job, ex, t0,
+                        ready_at=t0 + stall if stall else 0.0)))
+                    self._pump_taken = None
+                    self.stats["launches"] += 1
+                    self.stats["batches"] += len(parts)
+                    self.stats["bytes_h2d"] += nbytes
+                    self.stats["shard_launches"][s] += 1
+                    self.stats["shard_batches"][s] += len(parts)
+                    self.stats["shard_bytes_h2d"][s] += nbytes
+                    self.stats["max_inflight"] = max(
+                        self.stats["max_inflight"],
+                        sum(len(i) for i in self._inflights))
+                    self._busy[s] -= 1
+                    if self.rebalance_every and (
+                            self.stats["launches"] - self._mon_mark
+                            >= self.rebalance_every):
+                        self._rebalance_locked()
+            else:
+                try:
+                    arr, win_ex, dt, by_hedge = self._await_flight(s, fl)
+                except Exception as e:
+                    with self._lock:
+                        self._handle_launch_failure(s, fl.group, fl.ex, e)
+                        self._pump_retiring = None
+                        self._busy[s] -= 1
+                        if self._all_idle():
+                            self._idle.notify_all()
+                    continue
+                with self._lock:
+                    now = time.perf_counter()
+                    self._observe_latency_locked(s, win_ex, dt, now)
+                    if by_hedge:
+                        # the primary lost a race against its own
+                        # duplicate — that IS a straggler strike
+                        self.stats["hedge_wins"] += 1
+                        self._strike_locked(fl.ex, s, now)
+                    if self._retire(arr, fl.parts):
+                        self._cv.notify_all()
+                    self._pump_retiring = None
+                    self._busy[s] -= 1
+                    if self._all_idle():
+                        self._idle.notify_all()
+
+    # -- hedged retire (speculative duplicate launches) -------------------------------
+    @staticmethod
+    def _buf_ready(buf) -> bool:
+        """Non-blocking launch-buffer readiness (jax Arrays expose
+        ``is_ready``; anything else is host data, ready by definition)."""
+        r = getattr(buf, "is_ready", None)
+        return True if r is None else bool(r())
+
+    def _await_flight(self, s: int, fl: _Flight):
+        """Block (outside the lock) until one of the flight's buffers is
+        ready; returns ``(host array, winning executor, round-trip
+        seconds, won_by_hedge)``.
+
+        Fast path — no injected stall and hedging not armed — is the
+        plain blocking ``np.asarray`` the pre-hedge pump did. Hedging
+        arms only when the policy allows it, the shard has more than one
+        stream, and its straggler detector is past warmup (an untrained
+        EWMA would hedge compile time); the cutoff is
+        :meth:`StragglerDetector.hedge_cutoff`. Once the wait crosses
+        it, ONE duplicate launch of the same group is dispatched on a
+        different healthy stream and both buffers race — first ready
+        resolves the tickets, the loser is dropped unread (its buffer
+        dies with the flight; nothing double-counts)."""
+        det = self._stragglers[s]
+        p = self._policy
+        can_hedge = (p.hedge and self._sharded_ex is not None
+                     and det.n > det.warmup
+                     and self._sharded_ex.n_streams(s) > 1)
+        if not can_hedge and fl.ready_at == 0.0:
+            arr = np.asarray(fl.dev)      # blocks on device, unlocked
+            return arr, fl.ex, time.perf_counter() - fl.t0, False
+        cutoff = det.hedge_cutoff(p.hedge_factor, p.hedge_min_s)
+        while True:
+            now = time.perf_counter()
+            if fl.hedge_dev is not None and now >= fl.hedge_ready_at \
+                    and self._buf_ready(fl.hedge_dev):
+                arr = np.asarray(fl.hedge_dev)
+                return arr, fl.hedge_ex, now - fl.hedge_t0, True
+            if now >= fl.ready_at and self._buf_ready(fl.dev):
+                arr = np.asarray(fl.dev)
+                return arr, fl.ex, now - fl.t0, False
+            if can_hedge and not fl.hedge_done \
+                    and now - fl.t0 >= cutoff:
+                self._try_hedge(s, fl)
+            time.sleep(2e-4)
+
+    def _try_hedge(self, s: int, fl: _Flight) -> None:
+        """Dispatch ONE speculative duplicate of the flight's group on a
+        different healthy stream (pump thread, lock taken briefly for
+        stream selection). At most one attempt per flight; a duplicate
+        that fails to launch strikes ITS stream's breaker and the
+        primary wait continues — hedging never makes an outcome worse.
+        The duplicate's buffer layout matches ``fl.parts`` (same group,
+        same buckets), so the retire path needs no translation."""
+        fl.hedge_done = True
+        avoid = frozenset({fl.ex.stream_token}) | fl.group[0].avoid
+        with self._lock:
+            now = time.perf_counter()
+            alts = [e for e in self._healthy_streams(s, now)
+                    if e.stream_token not in avoid]
+            if not alts:
+                return                    # nowhere healthy to hedge to
+            ex2, st2 = self._pick_stream(s, avoid)
+            if ex2.stream_token == fl.ex.stream_token:
+                return
+        t1 = time.perf_counter()
+        try:
+            dev2, _parts2, _nb2, stall2 = self._launch(fl.group, s,
+                                                       ex2, st2)
+        except Exception:
+            with self._lock:
+                self._strike_locked(ex2, s, time.perf_counter())
+            return
+        fl.hedge_ex = ex2
+        fl.hedge_t0 = t1
+        fl.hedge_ready_at = t1 + stall2 if stall2 else 0.0
+        fl.hedge_dev = dev2
+        with self._lock:
+            self.stats["hedges"] += 1
 
     def _take_group(self, queue: deque, now: float) -> list[_Chunk]:
         """Pop up to ``coalesce`` queued chunks sharing the head chunk's
@@ -945,10 +1297,15 @@ class FeatureService:
 
         The chaos hook fires first, BEFORE any dispatch: an injected fault
         or delay lands exactly where a real device error would, so it
-        exercises the same recovery path.
+        exercises the same recovery path. The hook's return value is the
+        launch's injected STALL (simulated slow device compute) — passed
+        through as the last element of the return tuple so the pump can
+        gate the flight's retire readiness on it.
         """
+        stall = 0.0
         if self._faults is not None:
-            self._faults.before_launch(s, stream)
+            stall = self._faults.before_launch(s, stream,
+                                               device=ex.device)
         bucket = group[0].bucket
         if self.packed:
             mat = np.empty((self.coalesce, bucket), np.int32)
@@ -958,13 +1315,14 @@ class FeatureService:
             dev = ex._rows_future(mat.reshape(-1))
             parts = [(ch.ticket, ch.n, ch.dest, i * bucket)
                      for i, ch in enumerate(group)]
-            return dev, parts, mat.nbytes
+            return dev, parts, mat.nbytes, stall
         ch = group[0]
         codes = self._slice_padded(ch.rows, bucket)
         # np codes go straight into the jit'd gather — its argument
         # transfer is the one host->device code shipment
         dev = ex.gather_device(codes)
-        return dev, [(ch.ticket, ch.n, ch.dest, 0)], int(codes.nbytes)
+        return dev, [(ch.ticket, ch.n, ch.dest, 0)], int(codes.nbytes), \
+            stall
 
     def _retire(self, arr: np.ndarray, parts: list) -> bool:
         """Distribute one retired launch buffer to its tickets (lock held);
@@ -975,12 +1333,20 @@ class FeatureService:
         for its lifetime); multi-chunk requests assemble into a preallocated
         per-ticket (rows, F) buffer via each chunk's destination map — the
         request-order concatenation for routed/sharded splits.
+
+        ``self._retire_prog`` journals how many leading parts are fully
+        distributed (bumped as each part's bookkeeping completes): the
+        pump supervisor re-enqueues exactly the rest of a crashed
+        retire's group. Callers reset it to 0 per launch buffer.
         """
         landed = False
-        for ticket, n, dest, off in parts:
+        for i in range(self._retire_prog, len(parts)):
+            ticket, n, dest, off = parts[i]
             total = self._chunks_total.get(ticket)
             if total is None:
-                continue                    # dropped by shutdown(drain=False)
+                # dropped by shutdown(drain=False)
+                self._retire_prog = i + 1
+                continue
             piece = arr[off:off + n]
             if total == 1:
                 # copy only when the piece is a SLIVER of the coalesced
@@ -1011,6 +1377,7 @@ class FeatureService:
                 done = self._chunks_done.get(ticket, 0) + 1
                 if done < total:
                     self._chunks_done[ticket] = done
+                    self._retire_prog = i + 1
                     continue
                 self._chunks_done.pop(ticket, None)
                 self._results[ticket] = self._out_buf.pop(ticket)
@@ -1024,6 +1391,7 @@ class FeatureService:
                 self.stats["latency_s_total"] += lat
                 self.latencies.append(lat)
                 self.stats["completed"] += 1
+            self._retire_prog = i + 1
         return landed
 
     # -- adaptive shard management ---------------------------------------------------
@@ -1079,6 +1447,8 @@ class FeatureService:
         wake discipline can never drift apart. ``avoid`` (device ids) keeps
         the failover policy from re-replicating ONTO a device whose stream
         breaker is open."""
+        # never place on a DEAD device, whatever the caller avoids
+        avoid = frozenset(avoid) | frozenset(self._device_health.down)
         ex = self._sharded_ex.add_replica(shard, device, avoid=avoid)
         self.stats["replicas_added"] += 1
         self._work.notify_all()         # the shard's window just widened
@@ -1086,6 +1456,7 @@ class FeatureService:
 
     def _drop_replica_locked(self, shard: int):
         ex = self._sharded_ex.drop_replica(shard)
+        self._discard_breaker_locked(ex)
         self.stats["replicas_dropped"] += 1
         return ex.device
 
@@ -1125,15 +1496,16 @@ class FeatureService:
         """Run the load monitor's policy decisions NOW (on the pump thread)
         and return the actions taken: ``{'split': [(old, new, cut)],
         'replicated': [(shard, device)], 'dropped': [(shard, device)],
-        'failover_replicated': [(shard, device)]}``. Safe (a no-op) on
-        unsharded services."""
+        'failover_replicated': [(shard, device)],
+        'rebuilt': [(shard, device)]}``. Safe (a no-op) on unsharded
+        services."""
         return self._run_admin(self._rebalance_locked)
 
     def _unhealthy_devices(self, now: float) -> set[int]:
         """Device ids currently behind an OPEN stream breaker (lock held)
         — placement to avoid when re-replicating for failover."""
         thr = self._policy.breaker_fails
-        bad: set[int] = set()
+        bad: set[int] = set(self._device_health.down)
         for s in range(self._n_shards):
             for ex in self._shard_streams(s):
                 if self._breaker(ex).is_open(thr, now):
@@ -1146,10 +1518,12 @@ class FeatureService:
         apply the adaptive policies — split the tail shard past its row
         budget, replicate the hottest shard / shed replicas of cooled
         ones, and re-replicate shards whose streams went unhealthy
-        (failover). One action of each kind per tick keeps rebalancing
-        incremental (the next tick re-evaluates against the moved load)."""
+        (failover), and — first of all — emergency-rebuild shards that
+        device loss left with no live stream. One action of each kind
+        per tick keeps rebalancing incremental (the next tick
+        re-evaluates against the moved load)."""
         actions: dict = {"split": [], "replicated": [], "dropped": [],
-                         "failover_replicated": []}
+                         "failover_replicated": [], "rebuilt": []}
         sx = self._sharded_ex
         if sx is None:
             return actions
@@ -1168,6 +1542,13 @@ class FeatureService:
             cut = start + max(32, self.row_budget // 32 * 32)
             new = self._apply_split_locked(cut)
             actions["split"].append((old, new, cut))
+        # -- policy 4: emergency rebuild of shards with zero live streams --
+        # a shard orphaned by device loss must get a fresh stream before
+        # normal serving resumes (host gathers cover it meanwhile); runs
+        # before the replication policies so they see the rebuilt set
+        for s in sorted(set(self._needs_rebuild)):
+            if self._rebuild_shard_locked(s):
+                actions["rebuilt"].append((s, sx.devices[s]))
         now = time.perf_counter()
         sick = {s for s in range(self._n_shards)
                 if len(self._healthy_streams(s, now))
@@ -1179,16 +1560,21 @@ class FeatureService:
         ewma = self._mon_ewma
         mean = sum(ewma) / max(len(ewma), 1)
         if mean > 0 and len(ewma) > 1:
-            hot = max(range(len(ewma)), key=lambda s: ewma[s])
+            # an orphaned (rebuild-pending) shard is host-served — its
+            # load picture is not a replication signal
+            hot = max((s for s in range(len(ewma))
+                       if s not in self._needs_rebuild),
+                      key=lambda s: ewma[s], default=None)
             # hot = hot_factor x the mean of the OTHER shards — including
             # the hot shard in the reference would make the threshold
             # unreachable whenever hot_factor >= n_shards (a 4-shard mesh
             # under 100% skew never exceeds 4x its own all-shard mean)
-            others = (sum(ewma) - ewma[hot]) / (len(ewma) - 1)
-            if ewma[hot] > self.hot_factor * others \
-                    and len(sx.replicas[hot]) < cap:
-                actions["replicated"].append(
-                    (hot, self._add_replica_locked(hot)))
+            if hot is not None:
+                others = (sum(ewma) - ewma[hot]) / (len(ewma) - 1)
+                if ewma[hot] > self.hot_factor * others \
+                        and len(sx.replicas[hot]) < cap:
+                    actions["replicated"].append(
+                        (hot, self._add_replica_locked(hot)))
             for s in range(len(ewma)):
                 # never shed a replica of a shard with an unhealthy
                 # stream — the copies are its availability margin
@@ -1205,6 +1591,10 @@ class FeatureService:
         if sick:
             bad = self._unhealthy_devices(now)
             for s in sorted(sick):
+                # rebuild-pending shards are policy 4's problem — a
+                # replica would not make host-serving any healthier
+                if s in self._needs_rebuild:
+                    continue
                 if len(self._healthy_streams(s, now)) < 2 \
                         and len(sx.replicas[s]) < cap:
                     actions["failover_replicated"].append(

@@ -54,6 +54,16 @@ class StragglerDetector:
     def straggler_fraction(self) -> float:
         return len(self.flagged) / max(self.n, 1)
 
+    def hedge_cutoff(self, factor: float, floor: float) -> float:
+        """Latency past which a BACKUP attempt should launch (the
+        speculative-duplicate idiom: past ``factor`` x the EWMA mean a
+        step is probably straggling, so racing a duplicate on healthy
+        hardware beats waiting it out). ``floor`` bounds the cutoff from
+        below so warmup noise (or an untrained mean) never hedges
+        healthy-latency work; before any observation the floor IS the
+        cutoff."""
+        return max(floor, factor * (self.mean or 0.0))
+
 
 @dataclass
 class MeshPlan:

@@ -376,6 +376,288 @@ def test_pump_death_unblocks_concurrent_waiters(monkeypatch):
         assert e.__cause__ is boom or e is boom
 
 
+# -- device-loss recovery ------------------------------------------------------------
+def test_device_loss_serves_via_host_gather():
+    """Killing EVERY serving device must not lose a single ticket: each
+    shard's streams get evicted as their device's DeviceDown arrives, and
+    with no survivor to rebuild on the pump serves the orphaned shards
+    from the host packed words — bit-exact, availability 1.0. (Tier-1's
+    single-device run reaches this with one kill; the 4-device CI lane
+    walks the evict -> rebuild -> re-evict chain until the pool is gone.)"""
+    import jax
+    t, fs = _mixed_table()
+    rng = np.random.default_rng(17)
+    requests = [rng.integers(0, 3000, rng.integers(8, 64))
+                for _ in range(12)]
+    requests += [np.arange(700 * s, 700 * s + 48) for s in range(4)]
+    want = _reference(t, fs, requests)
+    inj = FaultInjector()
+    # retries cover the worst chain: a group re-placed onto another dead
+    # device once per pool member before its shard goes host-served
+    pol = FaultPolicy(max_retries=8, backoff_s=0.001, breaker_fails=100)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=1, faults=inj,
+                        fault_policy=pol) as svc:
+        svc.result(svc.submit(np.arange(0, 32)), timeout=60)   # warm
+        for d in jax.devices():
+            inj.kill_device(d)
+        tickets = [svc.submit(r) for r in requests]
+        got = [svc.result(tk, timeout=120) for tk in tickets]
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+        st = svc.throughput_stats(1.0)
+        assert st["availability"] == 1.0
+        assert st["failed_tickets"] == 0
+        assert st["devices_lost"] >= 1
+        assert st["host_gathers"] > 0
+        # evicted streams surrendered their breaker entries: the table
+        # only holds tokens of streams still in the shard set
+        live = {ex.stream_token
+                for s in range(svc.n_shards)
+                for ex in svc._sharded_ex.stream_executors(s)}
+        assert set(svc._breakers) <= live
+
+
+def test_device_loss_rebuilds_shard_on_survivor():
+    """With a healthy device left in the pool, a dead device's shards are
+    REBUILT there from the host packed words (version-keyed re-put): the
+    miss window is host-served, the rebuild lands automatically (pump
+    policy, no admin call), and post-recovery serving is bit-exact on
+    device again."""
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (CI forces a 4-device host "
+                    "platform)")
+    t, fs = _mixed_table()
+    inj = FaultInjector()
+    pol = FaultPolicy(max_retries=8, backoff_s=0.001, breaker_fails=100)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=1, faults=inj,
+                        fault_policy=pol) as svc:
+        svc.result(svc.submit(np.arange(0, 32)), timeout=60)   # warm
+        dead = svc._sharded_ex.devices[0]
+        inj.kill_device(dead)
+        rows = np.arange(8, 56)
+        np.testing.assert_array_equal(
+            svc.result(svc.submit(rows), timeout=60),
+            _reference(t, fs, [rows])[0])
+        deadline = time.perf_counter() + 30
+        while svc.stats["recoveries"] == 0 and \
+                time.perf_counter() < deadline:
+            time.sleep(0.005)
+        st = dict(svc.stats)
+        assert st["devices_lost"] == 1
+        assert st["recoveries"] >= 1
+        assert svc._sharded_ex.devices[0] is not dead
+        launches0 = st["launches"]
+        again = np.arange(64, 128)
+        np.testing.assert_array_equal(
+            svc.result(svc.submit(again), timeout=60),
+            _reference(t, fs, [again])[0])
+        assert svc.stats["launches"] > launches0   # device path is back
+        assert svc.throughput_stats(1.0)["availability"] == 1.0
+
+
+# -- supervised pump restart ---------------------------------------------------------
+def test_pump_restart_survives_infrastructure_crash(monkeypatch):
+    """ONE pump-infrastructure exception no longer poisons the service:
+    the supervisor restarts the pump with the ledger intact, queued and
+    re-enqueued work completes bit-exact, and only the restart budget
+    separates this from the terminal path the _dying_service tests pin."""
+    t, fs = _mixed_table()
+    rng = np.random.default_rng(23)
+    requests = [rng.integers(0, 3000, rng.integers(8, 64))
+                for _ in range(10)]
+    want = _reference(t, fs, requests)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=1) as svc:
+        svc.result(svc.submit(np.arange(0, 32)), timeout=60)   # warm
+        orig = svc._pick_action
+        state = {"fired": False}
+
+        def crash_once():
+            if not state["fired"]:
+                state["fired"] = True
+                raise RuntimeError("injected pump-infrastructure crash")
+            return orig()
+        monkeypatch.setattr(svc, "_pick_action", crash_once)
+        tickets = [svc.submit(r) for r in requests]
+        got = [svc.result(tk, timeout=60) for tk in tickets]
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+        assert svc.stats["pump_restarts"] == 1
+        assert svc.stats["failed_tickets"] == 0
+        # and the restarted pump is a full citizen: drain/collect work
+        svc.drain(timeout=60)
+
+
+def test_pump_restart_reenqueues_partially_retired_flight(monkeypatch):
+    """A crash INSIDE _retire (after the flight left the launch queue)
+    must not strand its chunks: the retire journal re-enqueues exactly
+    the unretired remainder, the relaunch retires it, and every ticket
+    resolves bit-exact — the restart is invisible to clients."""
+    t, fs = _mixed_table()
+    rng = np.random.default_rng(29)
+    requests = [rng.integers(0, 3000, rng.integers(8, 64))
+                for _ in range(8)]
+    want = _reference(t, fs, requests)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=1) as svc:
+        svc.result(svc.submit(np.arange(0, 32)), timeout=60)   # warm
+        orig = svc._retire
+        state = {"fired": False}
+
+        def crash_once(arr, parts):
+            if not state["fired"]:
+                state["fired"] = True
+                raise RuntimeError("injected crash mid-retire")
+            return orig(arr, parts)
+        monkeypatch.setattr(svc, "_retire", crash_once)
+        tickets = [svc.submit(r) for r in requests]
+        got = [svc.result(tk, timeout=60) for tk in tickets]
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+        assert svc.stats["pump_restarts"] == 1
+        assert svc.stats["failed_tickets"] == 0
+
+
+# -- speculative hedged launches -----------------------------------------------------
+def test_hedged_launch_beats_stalled_primary():
+    """A launch whose retire wait crosses the hedge cutoff gets a
+    duplicate on the shard's other healthy stream; the duplicate retires
+    FIRST (the primary is stalled), resolves the tickets bit-exact, and
+    the straggler's eventual buffer is discarded without double-counting.
+    Latency: the ticket completes in ~the hedge cutoff, far under the
+    stall."""
+    t, fs = _mixed_table()
+    inj = FaultInjector()
+    pol = FaultPolicy(hedge=True, hedge_min_s=0.02, hedge_factor=2.0,
+                      straggler_min_s=10.0, breaker_fails=100)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=1, faults=inj,
+                        fault_policy=pol) as svc:
+        svc.add_replica(0)
+        rows = np.arange(0, 64)
+        for _ in range(10):                        # warm EWMA past warmup
+            svc.result(svc.submit(rows), timeout=60)
+        completed0 = svc.stats["completed"]
+        inj.stall_launches(0.6, 1, shard=0)        # next primary launch
+        t0 = time.perf_counter()
+        out = svc.result(svc.submit(rows), timeout=60)
+        dt = time.perf_counter() - t0
+        np.testing.assert_array_equal(out, _reference(t, fs, [rows])[0])
+        st = dict(svc.stats)
+        assert st["hedges"] >= 1
+        assert st["hedge_wins"] >= 1
+        assert dt < 0.5                            # did not ride the stall
+        assert st["completed"] == completed0 + 1   # no double-count
+        assert st["failed_tickets"] == 0
+
+
+def test_no_hedge_policy_rides_out_the_stall():
+    """hedge=False is the control: the same stall is simply waited out
+    (that contrast is what the hedged serving benchmark measures)."""
+    t, fs = _mixed_table()
+    inj = FaultInjector()
+    pol = FaultPolicy(hedge=False, straggler_min_s=10.0, breaker_fails=100)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=1, faults=inj,
+                        fault_policy=pol) as svc:
+        svc.add_replica(0)
+        rows = np.arange(0, 64)
+        for _ in range(10):
+            svc.result(svc.submit(rows), timeout=60)
+        inj.stall_launches(0.3, 1, shard=0)
+        t0 = time.perf_counter()
+        out = svc.result(svc.submit(rows), timeout=60)
+        dt = time.perf_counter() - t0
+        np.testing.assert_array_equal(out, _reference(t, fs, [rows])[0])
+        assert dt >= 0.28                          # rode the stall
+        assert svc.stats["hedges"] == 0
+
+
+# -- refresh() racing stream loss ----------------------------------------------------
+def test_replica_lost_between_refresh_and_reput_resyncs_lazily():
+    """A stream that fails BETWEEN plan.refresh() and its version-keyed
+    re-put must not serve stale words: the failed launch fails over to a
+    stream that re-puts first (bit-exact vs the refreshed reference), and
+    once the faulted stream heals, its own next launch performs the lazy
+    re-sync — also bit-exact."""
+    t, fs = _mixed_table(n=1400, imcu_rows=700)
+    plan_p = FeaturePlan(t, fs, packed=True)
+    plan_i = FeaturePlan(t, fs)                    # refreshed ground truth
+    ref_ex = FeatureExecutor(plan_i)
+    pol = FaultPolicy(max_retries=4, backoff_s=0.001, breaker_fails=100)
+    inj = FaultInjector()
+    with FeatureService(plan_p, sharded=True, buckets=(64,), coalesce=1,
+                        faults=inj, fault_policy=pol) as svc:
+        svc.add_replica(0)
+        rows = np.arange(8, 56)
+        for _ in range(4):                         # both streams resident
+            svc.result(svc.submit(rows), timeout=60)
+        new = {"age": t["age"].dictionary.add_rows(np.array([150])),
+               "state": t["state"].dictionary.add_rows(np.array(["TX"])),
+               "income": t["income"].dictionary.add_rows(
+                   np.array([1_234_000]))}
+        plan_p.refresh(new)
+        plan_i.refresh(new)
+        # the next shard-0 launch dies before it can re-put its words
+        inj.fail_launches(1, shard=0)
+        want = np.asarray(ref_ex.batch(rows))
+        np.testing.assert_array_equal(
+            svc.result(svc.submit(rows), timeout=60), want)
+        assert svc.stats["failovers"] > 0
+        # the healed stream's own next launches lazily re-sync: serve
+        # enough that round-robin touches BOTH streams post-refresh
+        for _ in range(4):
+            np.testing.assert_array_equal(
+                svc.result(svc.submit(rows), timeout=60), want)
+        assert svc.stats["failed_tickets"] == 0
+
+
+# -- breaker hygiene (regression: table leak + gauge) --------------------------------
+def test_drop_replica_discards_breaker_entry():
+    """_breakers is keyed by stream token and cleaned on drop: dropping a
+    replica removes exactly its entry (the old id()-keyed table leaked
+    one entry per dropped stream and could alias a recycled id onto a
+    NEW stream's state)."""
+    t, fs = _mixed_table(n=1400, imcu_rows=700)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=1) as svc:
+        svc.add_replica(0)
+        dropped_tok = svc._sharded_ex.replicas[0][-1].stream_token
+        for _ in range(4):                         # traffic on both streams
+            svc.result(svc.submit(np.arange(0, 32)), timeout=60)
+        assert dropped_tok in svc._breakers
+        svc.drop_replica(0)
+        assert dropped_tok not in svc._breakers
+        live = {ex.stream_token
+                for s in range(svc.n_shards)
+                for ex in svc._sharded_ex.stream_executors(s)}
+        assert set(svc._breakers) <= live
+        # and the drop never underflows the unhealthy gauge
+        assert svc.stats["unhealthy_shards"] == 0
+
+
+def test_unhealthy_shards_is_a_gauge():
+    """unhealthy_shards DECREMENTS when the probe closes a breaker — it
+    reports streams unhealthy NOW, not trips ever."""
+    t, fs = _mixed_table()
+    inj = FaultInjector().fail_launches(2, shard=0, stream=0)
+    pol = FaultPolicy(max_retries=5, backoff_s=0.001, breaker_fails=2,
+                      breaker_cooldown_s=0.05)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), coalesce=1, faults=inj,
+                        fault_policy=pol) as svc:
+        svc.result(svc.submit(np.arange(0, 32)), timeout=60)
+        assert svc.stats["unhealthy_shards"] == 1  # open: gauge holds
+        time.sleep(0.06)                           # cooldown -> half-open
+        svc.result(svc.submit(np.arange(0, 32)), timeout=60)  # probe
+        assert svc.stats["unhealthy_shards"] == 0  # closed: gauge returns
+        b = svc._breakers[svc._sharded_ex.executors[0].stream_token]
+        assert b.opened == 1 and b.fails == 0
+
+
 # -- seeded randomized sweep (nightly sets CHAOS_SWEEP_SEEDS high) -------------------
 @pytest.mark.parametrize("seed",
                          range(int(os.environ.get("CHAOS_SWEEP_SEEDS", 2))))
@@ -404,3 +686,39 @@ def test_chaos_random_sweep_with_replicas_never_loses_a_ticket(seed):
     st = svc.throughput_stats(1.0)
     assert st["availability"] == 1.0
     assert inj.faults_injected > 0
+
+
+@pytest.mark.parametrize("seed",
+                         range(int(os.environ.get("CHAOS_SWEEP_SEEDS", 2))))
+def test_chaos_sweep_device_loss_mid_traffic(seed):
+    """Random faults PLUS a device killed mid-run: the first wave serves
+    normally, then a device (seed-chosen) dies and the second wave rides
+    eviction + rebuild-or-host-gather. No ticket is ever lost and every
+    result stays bit-exact — the device-loss acceptance bar under the
+    same randomized schedule the nightly lane widens."""
+    import jax
+    t, fs = _mixed_table(n=2100, imcu_rows=700, seed=seed)
+    rng = np.random.default_rng(300 + seed)
+    wave1 = [rng.integers(0, 2100, rng.integers(4, 80)) for _ in range(10)]
+    wave2 = [rng.integers(0, 2100, rng.integers(4, 80)) for _ in range(15)]
+    want1 = _reference(t, fs, wave1)
+    want2 = _reference(t, fs, wave2)
+    inj = FaultInjector(seed=seed).random_faults(p_fail=0.1, p_delay=0.05,
+                                                 delay_s=0.01)
+    pol = FaultPolicy(max_retries=8, backoff_s=0.001, breaker_fails=100)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64, 256), faults=inj,
+                        fault_policy=pol) as svc:
+        for g, w in zip((svc.result(svc.submit(r), timeout=120)
+                         for r in wave1), want1):
+            np.testing.assert_array_equal(g, w)
+        devs = jax.devices()
+        inj.kill_device(devs[seed % len(devs)])
+        tickets = [svc.submit(r) for r in wave2]
+        got = [svc.result(tk, timeout=120) for tk in tickets]
+    for g, w in zip(got, want2):
+        np.testing.assert_array_equal(g, w)
+    st = svc.throughput_stats(1.0)
+    assert st["availability"] == 1.0
+    assert st["failed_tickets"] == 0
+    assert st["devices_lost"] >= 1

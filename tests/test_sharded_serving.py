@@ -540,7 +540,8 @@ def test_adaptive_args_validation():
             svc.split_tail()
         assert svc.rebalance() == {"split": [], "replicated": [],
                                    "dropped": [],
-                                   "failover_replicated": []}  # no-ops
+                                   "failover_replicated": [],
+                                   "rebuilt": []}  # no-ops
 
 
 def test_sharded_service_serves_widened_plan_after_refresh():
