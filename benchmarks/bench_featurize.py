@@ -7,6 +7,7 @@ FeatureService (the ≥1.5x throughput gate) vs the packed fast path
 requests, both served by coalesced index-only launches)."""
 from __future__ import annotations
 
+import os
 from collections import deque
 
 import numpy as np
@@ -15,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.columnar import Dictionary, Table
 from repro.core import (AugmentedDictionary, FeatureExecutor,
-                        FeaturePipeline, FeaturePlan, FeatureSet)
+                        FeaturePipeline, FeaturePlan, FeatureSet,
+                        ShardedFeatureExecutor)
 from repro.core.pipeline import pad_rows_edge
 from repro.kernels.adv_gather import adv_gather
 from repro.kernels.hist import hist
@@ -557,6 +559,152 @@ def _hedged_serve_comparison() -> None:
         s.shutdown()
 
 
+def _tiered_serve_comparison() -> None:
+    """Tiered residency under memory pressure: a table ~10x the per-device
+    HBM byte budget, Zipf(1.2) access, vs a same-run all-hot control.
+
+    The table is cut into 16 IMCU shards but the byte budget only lets a
+    few streams be device-resident at once; the Zipf head is mapped to the
+    END of the table, so the hot blocks land on shards that START off
+    budget (host-warm). During warm-up the monitor promotes the hot
+    shards up (displacing the idle early residents down to warm/cold) and
+    the steady state is timed: hot-tier launches for the head, parallel
+    host-gather misses for the tail, no request ever blocking on a tier
+    change. The all-hot control serves the SAME load with no budget
+    (every stream resident) — the capacity a real mesh cannot afford at
+    this table:budget ratio. The ``compare.py --require`` gate asserts
+    ``table_x_budget>=8``, ``tiered_vs_hot>=0.5`` (throughput within 2x
+    of all-hot while holding 1/10th of the bytes), ``availability=1``,
+    ``bitexact=1``, and at least one observed promotion AND demotion.
+
+    A second, untimed phase measures the miss window itself: two all-warm
+    services (budget=1, so EVERY request is a host-gather miss) differing
+    only in ``host_gather_workers`` (4 vs 1); the fan-out's p99 cut is
+    reported as ``miss_p99_cut`` (not gated: the cut needs spare physical
+    cores — on a 1-core CI host the pool can only lose, which is why the
+    service's worker default is ``min(4, cpu_count)`` — and thread timing
+    is scheduler-sensitive on shared hosts anyway; the record carries
+    ``cpus`` so readers can interpret a cut below 1).
+    """
+    rng = np.random.default_rng(53)
+    n = scaled(256_000, 64_000)
+    n_req = scaled(600, 300)
+    rsz = 64
+    n_shards = 16
+    data = {
+        "age": rng.integers(18, 90, n),
+        "state": rng.integers(0, 50, n),
+        "income": rng.integers(20, 250, n) * 1000,
+    }
+    fs = (FeatureSet().add("age", "zscore").add("state", "onehot")
+          .add("income", "minmax"))
+    table = Table.from_data(data, imcu_rows=n // n_shards)
+
+    # size the budget off the real stream bytes: a probe executor with a
+    # 1-byte budget commits nothing but still projects every stream
+    probe = ShardedFeatureExecutor(
+        FeaturePlan(Table.from_data(data, imcu_rows=n // n_shards), fs,
+                    packed=True), hbm_budget_bytes=1)
+    total_bytes = sum(e.stream_nbytes() for e in probe.executors)
+    budget = max(1, total_bytes // 10)
+    table_x_budget = total_bytes / budget
+
+    # Zipf(1.2) block ranks mapped to the table END: the hot head lives in
+    # the LAST shards — exactly the ones the in-order budget commit left
+    # host-warm, so serving pressure must promote them up the ladder
+    blocks = (n - rsz) // 32
+    ranks = np.minimum(rng.zipf(1.2, n_req), blocks) - 1
+    starts = (blocks - 1 - ranks) * 32
+    reqs = [np.arange(s, s + rsz) for s in starts]
+    rows = n_req * rsz
+
+    plan_t = FeaturePlan(table, fs, packed=True)
+    svc = FeatureService(plan_t, sharded=True, buckets=(rsz,), coalesce=8,
+                         linger_us=1000, rebalance_every=8, max_replicas=0,
+                         hbm_budget_bytes=budget, cold_after=4,
+                         host_gather_workers=4)
+    svc_hot = FeatureService(
+        FeaturePlan(Table.from_data(data, imcu_rows=n // n_shards), fs,
+                    packed=True),
+        sharded=True, buckets=(rsz,), coalesce=8, linger_us=1000,
+        max_replicas=0)
+
+    def tiered_loop():
+        for r in reqs:
+            svc.submit(r)
+        svc.drain()
+
+    def hot_loop():
+        for r in reqs:
+            svc_hot.submit(r)
+        svc_hot.drain()
+
+    loops = [hot_loop, tiered_loop]
+    for loop in loops:
+        loop()                     # compile
+    for _ in range(3):             # monitor converges: head promotes up
+        tiered_loop()
+    assert svc.stats["promotions"] >= 1, \
+        f"monitor never promoted: tiers={svc.tiers} stats={svc.stats}"
+    # bit-exact spot check across all tiers (untimed): service output vs
+    # the parent plan's host featurize path
+    checks = [reqs[0], reqs[-1], np.arange(0, rsz),          # cold/warm head
+              rng.integers(0, n, 200)]                       # scatter
+    bitexact = all(
+        np.array_equal(svc.result(svc.submit(r)), plan_t.host_features(r))
+        for r in checks)
+    hot_s, tier_s = interleaved_best(loops, repeats=2 * MIN_REPEATS)
+    st = svc.throughput_stats(tier_s)
+    tiers = svc.tiers
+    emit("serve/feature_service_tiered_allhot", hot_s / n_req * 1e6,
+         f"rows_per_s={rows/hot_s:.0f};shards={svc_hot.n_shards};"
+         f"devices={len(jax.devices())}")
+    emit("serve/feature_service_tiered", tier_s / n_req * 1e6,
+         f"rows_per_s={rows/tier_s:.0f};"
+         f"tiered_vs_hot={hot_s/tier_s:.2f}x;"
+         f"table_x_budget={table_x_budget:.1f}x;"
+         f"availability={st['availability']:.4f};"
+         f"bitexact={int(bitexact)};"
+         f"promotions={svc.stats['promotions']};"
+         f"demotions={svc.stats['demotions']};"
+         f"rehydrations={svc.stats['rehydrations']};"
+         f"tier_misses={svc.stats['tier_misses']};"
+         f"tier_hot={tiers.count('hot')};tier_warm={tiers.count('warm')};"
+         f"tier_cold={tiers.count('cold')};"
+         f"budget_bytes={budget};stream_bytes={total_bytes};"
+         f"devices={len(jax.devices())}")
+
+    # miss-window phase: all-warm (budget=1) services, pool fan-out 4 vs 1
+    def build_miss(workers: int) -> FeatureService:
+        return FeatureService(
+            FeaturePlan(Table.from_data(data, imcu_rows=n // n_shards), fs,
+                        packed=True),
+            sharded=True, buckets=(rsz,), coalesce=8, linger_us=1000,
+            max_replicas=0, hbm_budget_bytes=1, host_gather_workers=workers)
+
+    svc_m4, svc_m1 = build_miss(4), build_miss(1)
+    p99 = {}
+    for workers, sm in ((4, svc_m4), (1, svc_m1)):
+        for r in reqs[:50]:
+            sm.submit(r)
+        sm.drain()                 # warm the pool + caches
+        sm.latencies.clear()
+        for r in reqs:
+            sm.submit(r)
+        sm.drain()
+        p99[workers] = float(np.percentile(np.array(sm.latencies), 99))
+        assert sm.stats["promotions"] == 0     # nothing ever fits
+    emit("serve/feature_service_tiered_miss_p99",
+         p99[4] * 1e6,
+         f"miss_p99_ms={p99[4]*1e3:.3f};"
+         f"miss_p99_1thread_ms={p99[1]*1e3:.3f};"
+         f"miss_p99_cut={p99[1]/max(p99[4], 1e-9):.2f}x;"
+         f"host_gather_workers=4;cpus={os.cpu_count()};"
+         f"misses={svc_m4.stats['tier_misses']}")
+    for s in (svc, svc_hot, svc_m4, svc_m1):
+        s.shutdown()
+
+
 def run() -> None:
     N = scaled(1 << 16, 1 << 12)   # device-path rows (interpret mode is slow)
     rng = np.random.default_rng(3)
@@ -600,6 +748,7 @@ def run() -> None:
     _skewed_serve_comparison()
     _chaos_serve_comparison()
     _hedged_serve_comparison()
+    _tiered_serve_comparison()
 
 
 if __name__ == "__main__":

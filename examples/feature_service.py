@@ -50,8 +50,23 @@ monitor fed by the per-shard stats deltas (request-rate EWMA over
   table swaps atomically — queued chunks are re-routed (split when they
   straddle the cut) without dropping or reordering a single ticket.
 
+Tiered residency (``hbm_budget_bytes``): the same monitor extends from
+"replicate hot" to a full residency ladder, so the table no longer has
+to fit on device. Every shard is **hot** (device-resident packed words),
+**warm** (host packed words, served by the host-gather slow path — a
+small thread pool fans wide gathers out when the host has spare cores)
+or **cold** (RLE runs only, ~bits/32 of the word bytes on run-heavy
+columns); a per-device byte budget caps what stays hot. Budget pressure
+demotes the coldest-EWMA residents, warm shards idle for ``cold_after``
+monitor ticks compress to runs, and traffic on an off-device shard
+triggers ASYNC promotion on the pump (cold rehydrates first; a full
+device displaces colder residents). Every miss serves bit-exact through
+the host path while the promotion races — availability never dips, and
+tables many times the device budget serve near hot-tier throughput
+under skewed access.
+
 Builds a columnar table, compiles a FeaturePlan (device-resident fused ADV
-tables), then serves featurization requests six ways:
+tables), then serves featurization requests nine ways:
 
 1. request queue with tickets (submit / result),
 2. arbitrary-row ("millions of users") lookups over a packed plan — the
@@ -82,7 +97,10 @@ tables), then serves featurization requests six ways:
 7. streaming double-buffered iteration (serve_stream),
 8. a streaming insert followed by an incremental plan refresh — only the
    columns whose dictionaries changed are re-put on device; appended rows
-   extend the open-ended LAST shard, so sharded services keep serving.
+   extend the open-ended LAST shard, so sharded services keep serving,
+9. tiered residency: the hot/warm/cold shard ladder above, driven by an
+   ``hbm_budget_bytes`` cap half the table's size — explicit demotion
+   down to RLE runs, a bit-exact cold miss, and async promotion back.
 
 Run:  PYTHONPATH=src python examples/feature_service.py
 """
@@ -342,6 +360,40 @@ def main() -> None:
     tail = svc.submit(np.array([n, n + 1]))
     print("features for the inserted rows:\n", svc.result(tail))
     svc.shutdown()                     # join the pump thread when disposing
+
+    # 9. tiered residency: a device byte budget HALF the table's resident
+    # word bytes. Shards commit hot in order while they fit; the rest
+    # start warm (host packed words). We then walk shard 0 down the
+    # ladder by hand — 'warm' frees its device words, 'cold' additionally
+    # compresses the host copy to RLE runs — serve a request through the
+    # cold slow path (bit-exact; the pump may race an async promotion,
+    # misses never wait for it), and promote it back (cold rehydrates
+    # from runs first, then re-commits under the budget, displacing a
+    # colder resident if the device is full).
+    from repro.core import ShardedFeatureExecutor
+    probe = ShardedFeatureExecutor(FeaturePlan(table, features, packed=True),
+                                   hbm_budget_bytes=1)   # commits nothing:
+    total = sum(e.stream_nbytes() for e in probe.executors)  # size the cap
+    with FeatureService(FeaturePlan(table, features, packed=True),
+                        sharded=True, buckets=(512,), coalesce=8,
+                        linger_us=1000, rebalance_every=4, max_replicas=0,
+                        hbm_budget_bytes=max(1, total // 2),
+                        cold_after=3) as svct:
+        print(f"tiers under a {total // 2}B budget (table={total}B): "
+              f"{svct.tiers}, resident="
+              f"{sum(svct.device_bytes().values())}B")
+        freed = svct.demote(0, "warm")     # device words released
+        svct.demote(0, "cold")             # host words -> RLE runs
+        miss = svct.result(svct.submit(np.arange(0, 512)))
+        print(f"cold shard 0 served {miss.shape} bit-exact "
+              f"(freed {freed}B device; tier_misses="
+              f"{svct.stats['tier_misses']})")
+        ok = svct.promote(0)               # rehydrate + re-commit
+        st = svct.stats
+        print(f"promoted back: {ok}; tiers={svct.tiers}; "
+              f"promotions={st['promotions']} demotions={st['demotions']} "
+              f"rehydrations={st['rehydrations']}; resident="
+              f"{sum(svct.device_bytes().values())}B <= {total // 2}B")
 
 
 if __name__ == "__main__":

@@ -42,6 +42,8 @@ def rle_decode_jnp(values: jnp.ndarray, lengths: jnp.ndarray, n: int) -> jnp.nda
 
 
 def rle_nbytes(values: np.ndarray, lengths: np.ndarray, value_bits: int) -> int:
-    """Storage estimate: value_bits per value + 32-bit run lengths."""
+    """Storage estimate: value_bits per value + run lengths at their
+    ACTUAL dtype width (int64 lengths cost 8 B/run, not a flattering 4)."""
     n_runs = int(np.asarray(values).size)
-    return (n_runs * value_bits + 7) // 8 + 4 * n_runs
+    lengths = np.asarray(lengths)
+    return (n_runs * value_bits + 7) // 8 + lengths.dtype.itemsize * n_runs

@@ -75,6 +75,7 @@ import jax.numpy as jnp
 
 from repro.columnar.bitpack import (pack_bits, packed_gather, packed_nbytes,
                                     unpack_bits)
+from repro.columnar.rle import rle_decode, rle_encode, rle_nbytes
 from repro.columnar import query as colquery
 from repro.columnar.table import Table
 from repro.core.adv import AugmentedDictionary
@@ -269,7 +270,7 @@ class FeaturePlan:
         self.packed = packed
         self.stats = {"tables_put": 0, "tables_refreshed": 0,
                       "fused_rebuilds": 0, "words_repacked": 0,
-                      "words_put": 0}
+                      "words_put": 0, "rle_encoded": 0, "rehydrated": 0}
         self.plans: list[ColumnPlan] = []
         for column, aug in self.augmented.items():
             names = [s.adv_name for s in features.specs if s.column == column]
@@ -593,6 +594,11 @@ class _PackedShardPlan(FeaturePlan):
         self._fused_box = parent._fused_box     # shared, co-invalidated
         self.stats = stats                      # rolls up into parent totals
         self._words_cache: dict[int, tuple[int, np.ndarray]] = {}
+        # cold residency tier: col -> (rle values, run lengths, cum ends).
+        # Non-None means this shard holds NO packed copy of its own — host
+        # reads decode the runs directly (see host_codes override)
+        self._rle: dict[int, tuple[np.ndarray, np.ndarray,
+                                   np.ndarray]] | None = None
 
     @property
     def shard_bounds(self) -> tuple[int, int]:
@@ -626,6 +632,14 @@ class _PackedShardPlan(FeaturePlan):
         return [self._shard_words(i) for i in range(len(self.plans))]
 
     def _shard_words(self, i: int) -> np.ndarray:
+        if self._rle is not None:
+            # cold shard: no packed copy is retained — rebuild column i's
+            # words from its runs at the CURRENT device width (codes never
+            # change for existing rows, so runs survive width repacks).
+            # Deliberately uncached: rehydrate() is the bulk warm-up path
+            values, lengths, _ = self._rle[i]
+            return pack_bits(rle_decode(values, lengths),
+                             self._parent.device_bits[i])
         parent = self._parent
         version = self.packed_versions[i]
         hit = self._words_cache.get(i)
@@ -647,6 +661,71 @@ class _PackedShardPlan(FeaturePlan):
     def refresh(self, new_codes=None) -> int:
         raise RuntimeError("shard plans are views — refresh the parent "
                            "FeaturePlan; every shard re-syncs automatically")
+
+    # -- residency ladder: cold tier (RLE runs, no packed copy) ------------------
+    @property
+    def is_cold(self) -> bool:
+        return self._rle is not None
+
+    def demote_cold(self) -> int:
+        """Demote this CLOSED shard to the cold tier: encode every column's
+        codes as RLE runs and drop the host packed slice — the shard's only
+        storage becomes the runs (plus zero-copy parent views it can always
+        re-derive from). Returns the run bytes held. Correctness rests on
+        codes being immutable for existing rows (dictionaries only grow):
+        the runs stay valid across any later width repack, and rehydration
+        simply packs them at the then-current device width. The open tail
+        is refused — appends extend it and would stale the runs."""
+        if self._last:
+            raise ValueError("the open tail shard cannot go cold: streaming "
+                             "appends extend it and would stale the runs")
+        if self._rle is not None:
+            return self.rle_bytes()
+        runs = {}
+        for i in range(len(self.plans)):
+            codes = unpack_bits(self._shard_words(i),
+                                self._parent.device_bits[i], self._n_rows)
+            values, lengths = rle_encode(codes)
+            runs[i] = (values, lengths, np.cumsum(lengths))
+        self._rle = runs
+        self._words_cache.clear()               # the packed copy is dropped
+        self.stats["rle_encoded"] += 1
+        return self.rle_bytes()
+
+    def rehydrate(self) -> None:
+        """Promote out of the cold tier: decode every column's runs and
+        repack at the CURRENT device width, priming the slice cache so the
+        executor's next version-keyed re-put finds host words ready."""
+        if self._rle is None:
+            return
+        for i in range(len(self.plans)):
+            values, lengths, _ = self._rle[i]
+            words = pack_bits(rle_decode(values, lengths),
+                              self._parent.device_bits[i])
+            self._words_cache[i] = (self.packed_versions[i], words)
+        self._rle = None
+        self.stats["rehydrated"] += 1
+
+    def rle_bytes(self) -> int:
+        """Host bytes held by the cold runs (0 when not cold)."""
+        if self._rle is None:
+            return 0
+        return sum(rle_nbytes(v, l, self._parent.device_bits[i])
+                   for i, (v, l, _) in self._rle.items())
+
+    def host_codes(self, rows: np.ndarray) -> np.ndarray:
+        """Cold shards gather codes straight from the runs — one
+        searchsorted per column against the cumulative run ends, never
+        materializing a packed or decoded stream. Warm/hot shards use the
+        inherited packed-word gather."""
+        if self._rle is None:
+            return super().host_codes(rows)
+        rows = np.asarray(rows)
+        out = np.empty((len(self.plans), rows.shape[0]), np.int32)
+        for i, (values, lengths, ends) in self._rle.items():
+            run = np.searchsorted(ends, rows, side="right")
+            out[i] = values[np.minimum(run, values.size - 1)]
+        return out
 
     def close_at(self, cut: int) -> None:
         """Close this open tail shard at parent row ``cut`` (it becomes an
@@ -709,7 +788,8 @@ class FeatureExecutor:
 
     def __init__(self, plan: FeaturePlan, use_kernel: bool = False,
                  prefetch: int = 2, autotune: bool = False, device=None,
-                 table_cache: _DeviceTableCache | None = None):
+                 table_cache: _DeviceTableCache | None = None,
+                 commit: bool = True):
         if prefetch < 1:
             raise ValueError("prefetch depth must be >= 1")
         self.plan = plan
@@ -753,7 +833,12 @@ class FeatureExecutor:
             self._capacity = 0
             self._blocks: dict[int, tuple[int, int, int]] = {}
             self._rows_blocks_cache: dict[int, tuple[int, int]] = {}
-            self.ensure_range_capacity(plan.n_rows)
+            # commit=False defers the word-stream device put (tiered
+            # residency: a warm shard's executor exists but holds no HBM
+            # until promotion calls ensure_range_capacity — any direct
+            # launch still self-commits through the same call)
+            if commit:
+                self.ensure_range_capacity(plan.n_rows)
         if self.kernel_active:
             plan.fused_tables()        # build eagerly, not inside the jit trace
 
@@ -883,6 +968,34 @@ class FeatureExecutor:
         self._word_offs = tuple(offs)
         self._words_sig = sig
         plan.stats["words_put"] += 1
+
+    # -- tiered residency: per-stream HBM accounting ------------------------------
+    def resident_bytes(self) -> int:
+        """Device bytes currently held by this stream's resident words."""
+        if not self.packed or self._flat_words is None:
+            return 0
+        return int(self._flat_words.size) * 4
+
+    def stream_nbytes(self) -> int:
+        """Projected device bytes of a FULL commit at the current capacity
+        (what a promotion would charge) — defined whether or not the words
+        are resident right now."""
+        if not self.packed:
+            return 0
+        plan = self.plan
+        cap = max(self._capacity, _pad32(plan.n_rows))
+        return sum(cap * db // 32 * 4 for db in plan.device_bits)
+
+    def evict_words(self) -> int:
+        """Release the resident word stream (demotion to a host tier);
+        returns the bytes freed. The device buffer is dereferenced, NOT
+        deleted: an in-flight launch may still hold it, and refcounting
+        frees it the moment the last launch retires. Any later launch (or
+        an explicit promotion) re-puts through the version-keyed sync."""
+        freed = self.resident_bytes()
+        self._flat_words = None
+        self._words_sig = None
+        return freed
 
     def _kernel_blocks(self, batch: int) -> tuple[int, int, int]:
         """(bn, bk, bw) for the fused packed RANGE kernel — autotuned per
@@ -1263,15 +1376,17 @@ class ShardedFeatureExecutor:
     """
 
     def __init__(self, plan: FeaturePlan, use_kernel: bool = False,
-                 prefetch: int = 2, autotune: bool = False, devices=None):
+                 prefetch: int = 2, autotune: bool = False, devices=None,
+                 hbm_budget_bytes: int | None = None):
         if not plan.packed:
             raise ValueError("sharded executors serve packed plans; int32 "
                              "plans route host code slices instead")
-        from repro.distributed.sharding import serve_devices
+        from repro.distributed.sharding import DeviceBudget, serve_devices
         self.plan = plan
         self.use_kernel = use_kernel
         self.prefetch = prefetch
         self.autotune = autotune
+        self.hbm_budget_bytes = hbm_budget_bytes
         self.shards = plan.imcu_shards()
         self.device_pool = (list(devices) if devices is not None
                             else jax.devices())
@@ -1281,11 +1396,22 @@ class ShardedFeatureExecutor:
         # the cache dict persists so replicas/splits landing on a device
         # later reuse the same placed tables (place_fused reuse)
         self._caches = {id(dev): _DeviceTableCache() for dev in self.devices}
-        self.executors = [
-            FeatureExecutor(sp, use_kernel=use_kernel, prefetch=prefetch,
-                            autotune=autotune, device=dev,
-                            table_cache=self._caches[id(dev)])
-            for sp, dev in zip(self.shards, self.devices)]
+        # tiered residency at build time: walk the shards in order and
+        # commit each stream only while it fits the per-device byte budget
+        # (DeviceBudget ledger); the rest stay WARM — executor built, no
+        # HBM held — and the serving layer's promotion ladder takes over.
+        # No budget (the default) commits everything, today's behavior.
+        ledger = DeviceBudget(hbm_budget_bytes)
+        self.executors = []
+        for sp, dev in zip(self.shards, self.devices):
+            ex = FeatureExecutor(sp, use_kernel=use_kernel, prefetch=prefetch,
+                                 autotune=autotune, device=dev,
+                                 table_cache=self._caches[id(dev)],
+                                 commit=False)
+            if ledger.fits(id(dev), ex.stream_nbytes()):
+                ex.ensure_range_capacity(sp.n_rows)
+                ledger.charge(id(dev), ex.resident_bytes())
+            self.executors.append(ex)
         self.replicas: list[list[FeatureExecutor]] = [[] for _ in self.shards]
         self._rr = [0] * len(self.shards)   # read-fan-out cursor per shard
         self._set_routing()
@@ -1334,6 +1460,31 @@ class ShardedFeatureExecutor:
             for ex in reps:
                 load[id(ex.device)] = load.get(id(ex.device), 0) + 1
         return load
+
+    def device_bytes(self) -> dict[int, int]:
+        """LIVE resident word-stream bytes per device (``id(dev)`` keyed),
+        summed over every launch stream (primaries + replicas). Computed
+        from the buffers actually held — never a ledger that could drift —
+        so budget enforcement and tests measure ground truth. Replicated
+        ADV tables are excluded by design: K-row constants shared per
+        device, while the budget governs what scales with table rows."""
+        out: dict[int, int] = {}
+        for s in range(self.n_shards):
+            for ex in self.stream_executors(s):
+                b = ex.resident_bytes()
+                if b:
+                    out[id(ex.device)] = out.get(id(ex.device), 0) + b
+        return out
+
+    def budget_ledger(self):
+        """A :class:`repro.distributed.sharding.DeviceBudget` seeded from
+        the live per-device bytes — the fits/headroom view the promotion
+        and demotion policies consult."""
+        from repro.distributed.sharding import DeviceBudget
+        ledger = DeviceBudget(self.hbm_budget_bytes)
+        for dev_id, n in self.device_bytes().items():
+            ledger.charge(dev_id, n)
+        return ledger
 
     def add_replica(self, shard: int, device=None,
                     avoid=frozenset()) -> FeatureExecutor:

@@ -241,6 +241,58 @@ def surviving_devices(devices, lost=frozenset()) -> list:
     return [d for d in devices if id(d) not in lost]
 
 
+class DeviceBudget:
+    """Per-device HBM byte ledger for tiered shard residency.
+
+    Tracks the bytes of resident packed word streams charged to each device
+    (keyed ``id(device)``, like every load map in this module) against an
+    optional uniform per-device budget. ``budget_bytes=None`` disables the
+    cap — every ``fits`` succeeds and the ledger is pure accounting. The
+    replicated ADV tables are deliberately NOT charged: they are K-row
+    constants shared by every stream on the device, while the budget
+    governs what scales with table rows (the word streams).
+    """
+
+    def __init__(self, budget_bytes: int | None = None):
+        if budget_bytes is not None and budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0, got {budget_bytes}")
+        self.budget_bytes = budget_bytes
+        self._bytes: dict[int, int] = {}
+
+    def bytes(self, dev_id: int) -> int:
+        return self._bytes.get(dev_id, 0)
+
+    def charge(self, dev_id: int, n: int) -> None:
+        self._bytes[dev_id] = self._bytes.get(dev_id, 0) + int(n)
+
+    def release(self, dev_id: int, n: int) -> None:
+        left = self._bytes.get(dev_id, 0) - int(n)
+        if left < 0:
+            raise ValueError(
+                f"release of {n}B underflows device {dev_id} "
+                f"({self._bytes.get(dev_id, 0)}B charged)")
+        if left:
+            self._bytes[dev_id] = left
+        else:
+            self._bytes.pop(dev_id, None)
+
+    def fits(self, dev_id: int, n: int) -> bool:
+        return (self.budget_bytes is None
+                or self.bytes(dev_id) + int(n) <= self.budget_bytes)
+
+    def headroom(self, dev_id: int) -> int | None:
+        if self.budget_bytes is None:
+            return None
+        return self.budget_bytes - self.bytes(dev_id)
+
+    def over_budget(self) -> dict[int, int]:
+        """Devices currently above the cap -> bytes over (empty if uncapped)."""
+        if self.budget_bytes is None:
+            return {}
+        return {d: b - self.budget_bytes for d, b in self._bytes.items()
+                if b > self.budget_bytes}
+
+
 def replica_device(devices, load: dict[int, int] | None = None,
                    exclude=frozenset(), unhealthy=frozenset()):
     """Placement rule for an ADAPTIVE stream (shard replica or fresh tail

@@ -148,12 +148,45 @@ Fault tolerance, phase 2 (component death, not just launch faults):
   (only ``hedges``/``hedge_wins``). A hedge win also strikes the
   straggling primary's breaker, feeding the same unhealthy-stream
   machinery as a thrown launch.
+
+Tiered residency (HBM-hot / host-warm / RLE-cold, ``hbm_budget_bytes``):
+mesh services are no longer capped at tables that fit HBM. Every shard
+carries a residency TIER — **hot** (device-resident packed words,
+today's path), **warm** (host packed words only; served through the
+host-gather path device loss already uses), **cold** (RLE runs from
+:mod:`repro.columnar.rle`; the host packed copy is dropped too and
+rehydrated on promotion) — and the load monitor moves shards up and
+down the ladder under a per-device HBM byte budget
+(:class:`repro.distributed.sharding.DeviceBudget`; live bytes are
+always measured from the buffers actually held, never a drifting
+ledger). Construction commits shards in order until the budget is
+spent; the rest start warm. A request for an off-device shard is a
+**tier miss**: it serves IMMEDIATELY through the host path — bit-exact
+with the device gather by construction — and marks the shard
+promotion-pending; promotion itself is ASYNCHRONOUS on the pump (a
+free-beat action, like emergency rebuilds), re-committing the stream
+through the same version-keyed put a refresh uses, displacing the
+coldest resident shard first when the device is full (EWMA order,
+strict — equal-heat shards never thrash). Warm shards quiet for
+``cold_after`` consecutive monitor ticks compress to RLE runs. The
+host-gather path itself fans a multi-chunk group out over a small
+thread pool (``host_gather_workers``), cutting the miss-window p99.
+Tier state: ``stats['tier_hot'/'tier_warm'/'tier_cold']`` (gauges),
+``promotions``/``demotions``/``rehydrations``/``tier_misses``
+(counters), :attr:`tiers`, :meth:`device_bytes`, and manual
+:meth:`promote`/:meth:`demote` (admin actions on the pump, like every
+shard-set mutation). Replication, device-loss rebuild and pushdown all
+compose: policies skip off-device shards, a dead device's demoted
+shards stay demoted (no rebuild — they were host-served anyway), and
+promotion of a shard whose home device died rebuilds on a survivor.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -220,6 +253,8 @@ class FeatureService:
                  linger_us: float = 0.0, devices=None,
                  rebalance_every: int = 0, row_budget: int | None = None,
                  hot_factor: float = 4.0, max_replicas: int | None = None,
+                 hbm_budget_bytes: int | None = None, cold_after: int = 2,
+                 host_gather_workers: int | None = None,
                  faults: FaultInjector | None = None,
                  fault_policy: FaultPolicy | None = None):
         if isinstance(plan, FeaturePipeline):
@@ -240,6 +275,17 @@ class FeatureService:
             raise ValueError("adaptive shard management (rebalance_every / "
                              "row_budget) needs sharded=True over a packed "
                              "plan")
+        if hbm_budget_bytes is not None and not (sharded and plan.packed):
+            raise ValueError("tiered residency (hbm_budget_bytes) needs "
+                             "sharded=True over a packed plan")
+        if cold_after < 1:
+            raise ValueError("cold_after must be >= 1 monitor tick")
+        if host_gather_workers is None:
+            # fan-out can only cut the miss window when there are spare
+            # cores for the pool to land on; a 1-core host stays sequential
+            host_gather_workers = min(4, os.cpu_count() or 1)
+        if host_gather_workers < 1:
+            raise ValueError("host_gather_workers must be >= 1")
         self.plan = plan
         self.packed = plan.packed
         self.prefetch = prefetch
@@ -252,7 +298,7 @@ class FeatureService:
             # + one launch queue/window per shard, all fed by the one pump
             self._sharded_ex = ShardedFeatureExecutor(
                 plan, use_kernel=use_kernel, prefetch=prefetch,
-                devices=devices)
+                devices=devices, hbm_budget_bytes=hbm_budget_bytes)
             self._executors = self._sharded_ex.executors
             self._executor = self._executors[0]
             self._n_shards = self._sharded_ex.n_shards
@@ -337,6 +383,20 @@ class FeatureService:
         self._mon_mark = 0              # launches at the last monitor tick
         self._route_gen = 0             # bumped on every routing-table swap
         self._admin_q: deque = deque()  # (fn, event, result_box) for the pump
+        # -- tiered residency state --
+        # construction committed shards in order while the budget lasted;
+        # everything the ledger left uncommitted starts WARM
+        self.cold_after = cold_after
+        self._tier = (["hot" if ex.resident_bytes() > 0 else "warm"
+                       for ex in self._executors]
+                      if self._sharded_ex is not None
+                      else ["hot"] * self._n_shards)
+        self._offdevice = {s for s, t in enumerate(self._tier) if t != "hot"}
+        self._promote_pending: set[int] = set()   # tier misses awaiting a beat
+        self._warm_ticks = [0] * self._n_shards   # quiet ticks while warm
+        self._host_served = [0] * self._n_shards  # host-path chunks (EWMA feed)
+        self._host_workers = host_gather_workers
+        self._host_pool: ThreadPoolExecutor | None = None   # lazy fan-out
         self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
                       "batches": 0, "launches": 0, "max_inflight": 0,
                       "latency_s_total": 0.0, "completed": 0,
@@ -350,6 +410,11 @@ class FeatureService:
                       "devices_lost": 0, "host_gathers": 0,
                       "rebalances": 0, "replicas_added": 0,
                       "replicas_dropped": 0, "shard_splits": 0,
+                      "promotions": 0, "demotions": 0, "rehydrations": 0,
+                      "tier_misses": 0,
+                      "tier_hot": self._tier.count("hot"),
+                      "tier_warm": self._tier.count("warm"),
+                      "tier_cold": 0,
                       "shard_launches": [0] * self._n_shards,
                       "shard_batches": [0] * self._n_shards,
                       "shard_bytes_h2d": [0] * self._n_shards}
@@ -427,6 +492,8 @@ class FeatureService:
             self._shutdown = True
             self._notify_everyone()
         self._pump.join()
+        if self._host_pool is not None:
+            self._host_pool.shutdown(wait=True)   # idempotent
 
     def _notify_everyone(self) -> None:
         """Wake every waiter class (lock held) — shutdown/error paths."""
@@ -653,6 +720,11 @@ class FeatureService:
         for _s, rex in removed:
             self._discard_breaker_locked(rex)
         for s in orphans:
+            # a shard the tier ladder already demoted was host-served
+            # before the device died — no emergency rebuild; promotion
+            # (if its load comes back) rebuilds on a survivor
+            if s in self._offdevice:
+                continue
             self._needs_rebuild.add(s)
         self._work.notify_all()
 
@@ -674,24 +746,68 @@ class FeatureService:
         self._work.notify_all()
         return True
 
-    def _serve_host_locked(self, s: int, group: list) -> None:
-        """Degraded-mode serving for a shard with no live stream (lock
-        held): compute the group's features from the HOST packed words +
-        host ADV tables (:meth:`FeaturePlan.host_features` — the same
-        codes and the same OOB clamp as the device gather, so results
-        are bit-exact) and retire the tickets directly. Never double-
-        counts launch stats — only ``host_gathers``."""
+    def _host_features_group(self, s: int, group: list) -> list[np.ndarray]:
+        """Compute a host-gather group's features (pump thread, NO lock
+        held): one :meth:`FeaturePlan.host_features` per chunk — the same
+        codes and the same OOB clamp as the device gather, so results are
+        bit-exact — fanned out over a small lazy thread pool so a multi-
+        chunk miss window costs ~one gather of wall time instead of
+        ``len(group)``. Single-chunk groups (and ``host_gather_workers=1``)
+        skip the pool. Safe concurrently: per-column word/RLE reads are
+        pure, and the caches the gathers may populate are idempotent
+        (equal values; last write wins). Tier mutations can't race — they
+        run only on the pump thread, which is blocked here."""
         plan = (self._sharded_ex.shards[s]
                 if self._sharded_ex is not None else self.plan)
-        self.stats["host_gathers"] += 1
-        landed = False
-        for ch in group:
-            feats = plan.host_features(ch.rows)
-            self._retire_prog = 0
-            if self._retire(feats, [(ch.ticket, ch.n, ch.dest, 0)]):
-                landed = True
-        if landed:
-            self._cv.notify_all()
+        if len(group) == 1 or self._host_workers == 1:
+            return [plan.host_features(ch.rows) for ch in group]
+        if self._host_pool is None:
+            self._host_pool = ThreadPoolExecutor(
+                max_workers=self._host_workers,
+                thread_name_prefix="feature-service-hostgather")
+        return list(self._host_pool.map(
+            lambda ch: plan.host_features(ch.rows), group))
+
+    def _host_serve(self, s: int, group: list) -> None:
+        """Serve one taken host-gather group end to end (pump thread, lock
+        NOT held on entry): degraded-mode serving for shards with no live
+        stream (device loss) and the TIER-MISS path for warm/cold shards.
+        Never double-counts launch stats — only ``host_gathers`` (and
+        ``tier_misses`` when the shard is off-device by tier rather than
+        loss; a miss also marks the shard promotion-pending, the async
+        promotion the pump picks up on a free beat). Crash-safe via the
+        ``_pump_taken`` journal: a chunk leaves the journaled group only
+        after its retire completes, so a pump restart re-serves exactly
+        the unserved tail."""
+        feats_list = self._host_features_group(s, group)
+        with self._lock:
+            self.stats["host_gathers"] += 1
+            self._host_served[s] += len(group)
+            miss = s in self._offdevice and s not in self._needs_rebuild
+            if miss:
+                self.stats["tier_misses"] += 1
+                self._warm_ticks[s] = 0
+                self._promote_pending.add(s)
+            landed = False
+            for feats in feats_list:
+                ch = group[0]
+                self._retire_prog = 0
+                if self._retire(feats, [(ch.ticket, ch.n, ch.dest, 0)]):
+                    landed = True
+                del group[0]
+            if landed:
+                self._cv.notify_all()
+            self._pump_taken = None
+            self._busy[s] -= 1
+            if self.rebalance_every and (
+                    self.stats["launches"]
+                    + self.stats["host_gathers"] - self._mon_mark
+                    >= self.rebalance_every):
+                self._rebalance_locked()
+            if miss:
+                self._work.notify_all()   # the promote arm has work now
+            if self._all_idle():
+                self._idle.notify_all()
 
     # -- request intake -------------------------------------------------------------
     def _route(self, rows: np.ndarray, lo: int, hi: int):
@@ -927,7 +1043,7 @@ class FeatureService:
             queue = self._queues[s]
             if not queue or held:
                 continue
-            if s in self._needs_rebuild:
+            if s in self._needs_rebuild or s in self._offdevice:
                 return "hostserve", s
             if len(self._inflights[s]) >= self.prefetch * self._streams(s):
                 continue
@@ -970,6 +1086,14 @@ class FeatureService:
             if any(id(d) not in down
                    for d in self._sharded_ex.device_pool):
                 return "rebuild", min(self._needs_rebuild)
+        if self._promote_pending and not held and not self._shutdown \
+                and self._sharded_ex is not None:
+            # async promotion on a free beat: hottest pending miss first.
+            # Never blocks a request — misses keep host-serving while the
+            # re-put runs, and a failed attempt (no budget headroom yet)
+            # just clears pending until the next miss re-marks it
+            return "promote", max(self._promote_pending,
+                                  key=lambda i: self._mon_ewma[i])
         if self._shutdown and self._all_idle() and not self._admin_q:
             return "exit", None
         return "wait", linger_min
@@ -1068,23 +1192,36 @@ class FeatureService:
                     return
                 s = arg
                 if action == "hostserve":
-                    # degraded mode — the shard has no live stream. Retry
-                    # backoffs are void (the host path cannot fail the
-                    # way a launch did): take everything queued and serve
-                    # it from the host words, bit-exact
+                    # degraded/off-device mode — the shard has no live
+                    # stream (device loss) or lives in a warm/cold tier.
+                    # Retry backoffs are void (the host path cannot fail
+                    # the way a launch did): take everything queued, then
+                    # gather OUTSIDE the lock (thread-pool fan-out) and
+                    # retire, journaled like a launch
                     for ch in self._queues[s]:
                         ch.not_before = 0.0
-                    job = self._take_group(self._queues[s],
-                                           time.perf_counter())
-                    if job:
-                        self._serve_host_locked(s, job)
+                    hjob = self._take_group(self._queues[s],
+                                            time.perf_counter())
+                    if not hjob:
+                        if self._all_idle():
+                            self._idle.notify_all()
+                        continue
+                    self._pump_taken = (s, hjob)
+                    self._busy[s] += 1
+                elif action == "rebuild":
+                    self._rebuild_shard_locked(s)
+                    continue
+                elif action == "promote":
+                    # pending is cleared WHATEVER the outcome: a promotion
+                    # that could not fit leaves the shard warm/cold and the
+                    # next tier miss re-marks it — no spinning on a full
+                    # device, no lost promotions
+                    self._try_promote_locked(s)
+                    self._promote_pending.discard(s)
                     if self._all_idle():
                         self._idle.notify_all()
                     continue
-                if action == "rebuild":
-                    self._rebuild_shard_locked(s)
-                    continue
-                if action == "launch":
+                elif action == "launch":
                     job = self._take_group(self._queues[s],
                                            time.perf_counter())
                     if not job:
@@ -1105,7 +1242,13 @@ class FeatureService:
                     _, fl = self._inflights[s].popleft()
                     self._pump_retiring = (s, fl)
                     self._retire_prog = 0
-                self._busy[s] += 1
+                if action != "hostserve":
+                    self._busy[s] += 1
+            if action == "hostserve":
+                # gather + retire outside the lock (the pool does the
+                # per-chunk host_features); crash-safe via _pump_taken
+                self._host_serve(s, hjob)
+                continue
             if job is not None:
                 t0 = time.perf_counter()
                 try:
@@ -1136,7 +1279,8 @@ class FeatureService:
                         sum(len(i) for i in self._inflights))
                     self._busy[s] -= 1
                     if self.rebalance_every and (
-                            self.stats["launches"] - self._mon_mark
+                            self.stats["launches"]
+                            + self.stats["host_gathers"] - self._mon_mark
                             >= self.rebalance_every):
                         self._rebalance_locked()
             else:
@@ -1523,17 +1667,25 @@ class FeatureService:
         per tick keeps rebalancing incremental (the next tick
         re-evaluates against the moved load)."""
         actions: dict = {"split": [], "replicated": [], "dropped": [],
-                         "failover_replicated": [], "rebuilt": []}
+                         "failover_replicated": [], "rebuilt": [],
+                         "demoted": [], "promoted": []}
         sx = self._sharded_ex
         if sx is None:
             return actions
         self.stats["rebalances"] += 1
-        self._mon_mark = self.stats["launches"]
+        # host-gather groups count as monitor work too: a miss-heavy
+        # workload (everything off-device) must still tick, or nothing
+        # would ever promote
+        self._mon_mark = self.stats["launches"] + self.stats["host_gathers"]
         sb = self.stats["shard_batches"]
         a = self._mon_alpha
         for s in range(len(sb)):
-            delta = sb[s] - self._mon_last[s]
-            self._mon_last[s] = sb[s]
+            # launched batches + host-served chunks: a warm/cold shard's
+            # misses never bump shard_batches, but they ARE load — the
+            # promotion ladder orders by exactly this heat
+            total = sb[s] + self._host_served[s]
+            delta = total - self._mon_last[s]
+            self._mon_last[s] = total
             self._mon_ewma[s] = a * delta + (1 - a) * self._mon_ewma[s]
         # -- policy 1: tail re-shard under streaming growth --
         if self.row_budget is not None and sx.tail_rows() > self.row_budget:
@@ -1560,10 +1712,12 @@ class FeatureService:
         ewma = self._mon_ewma
         mean = sum(ewma) / max(len(ewma), 1)
         if mean > 0 and len(ewma) > 1:
-            # an orphaned (rebuild-pending) shard is host-served — its
-            # load picture is not a replication signal
+            # an orphaned (rebuild-pending) or off-device (warm/cold)
+            # shard is host-served — its load picture is a PROMOTION
+            # signal, not a replication one
             hot = max((s for s in range(len(ewma))
-                       if s not in self._needs_rebuild),
+                       if s not in self._needs_rebuild
+                       and s not in self._offdevice),
                       key=lambda s: ewma[s], default=None)
             # hot = hot_factor x the mean of the OTHER shards — including
             # the hot shard in the reference would make the threshold
@@ -1573,8 +1727,15 @@ class FeatureService:
                 others = (sum(ewma) - ewma[hot]) / (len(ewma) - 1)
                 if ewma[hot] > self.hot_factor * others \
                         and len(sx.replicas[hot]) < cap:
-                    actions["replicated"].append(
-                        (hot, self._add_replica_locked(hot)))
+                    # a replica is stream bytes too: route placement
+                    # around devices without budget headroom, and skip
+                    # the action entirely when nowhere fits
+                    bavoid = self._budget_avoid_locked(
+                        sx.executors[hot].stream_nbytes())
+                    if any(id(d) not in bavoid for d in sx.device_pool):
+                        actions["replicated"].append(
+                            (hot, self._add_replica_locked(
+                                hot, avoid=bavoid)))
             for s in range(len(ewma)):
                 # never shed a replica of a shard with an unhealthy
                 # stream — the copies are its availability margin
@@ -1592,13 +1753,20 @@ class FeatureService:
             bad = self._unhealthy_devices(now)
             for s in sorted(sick):
                 # rebuild-pending shards are policy 4's problem — a
-                # replica would not make host-serving any healthier
-                if s in self._needs_rebuild:
+                # replica would not make host-serving any healthier;
+                # off-device shards host-serve by design (stale breaker
+                # state from before their demotion is not a failover
+                # signal either)
+                if s in self._needs_rebuild or s in self._offdevice:
                     continue
                 if len(self._healthy_streams(s, now)) < 2 \
                         and len(sx.replicas[s]) < cap:
+                    avoid = bad | self._budget_avoid_locked(
+                        sx.executors[s].stream_nbytes())
                     actions["failover_replicated"].append(
-                        (s, self._add_replica_locked(s, avoid=bad)))
+                        (s, self._add_replica_locked(s, avoid=avoid)))
+        # -- policies 5-7: the tiered-residency ladder --
+        self._tier_policy_locked(actions)
         return actions
 
     def _apply_split_locked(self, cut: int | None = None,
@@ -1626,6 +1794,13 @@ class FeatureService:
         self._mon_last.append(0)
         self._stream_rr.append(0)
         self._stragglers.append(self._new_straggler())
+        # the fresh tail commits hot (splits happen on the open, appending
+        # shard — always device-resident); if that overflows the device
+        # budget the next tier-policy tick demotes the coldest resident
+        self._tier.append("hot")
+        self.stats["tier_hot"] += 1
+        self._warm_ticks.append(0)
+        self._host_served.append(0)
         self._n_shards += 1
         self.stats["shard_splits"] += 1
         self._reroute_after_split(old, new)
@@ -1677,6 +1852,247 @@ class FeatureService:
         q.clear()
         q.extend(keep)
         self._queues[new].extend(moved)
+
+    # -- tiered residency (HBM-hot / host-warm / RLE-cold ladder) ---------------------
+    def _set_tier_locked(self, s: int, tier: str) -> None:
+        """Flip one shard's tier label + the gauge stats + the off-device
+        routing set (lock held). The ONE place tier state changes, so the
+        gauges can never drift from the labels."""
+        old = self._tier[s]
+        if old == tier:
+            return
+        self.stats["tier_" + old] -= 1
+        self.stats["tier_" + tier] += 1
+        self._tier[s] = tier
+        if tier == "hot":
+            self._offdevice.discard(s)
+        else:
+            self._offdevice.add(s)
+
+    def _budget_avoid_locked(self, need: int) -> frozenset:
+        """Device ids WITHOUT headroom for ``need`` more stream bytes
+        (empty when uncapped) — the placement-avoid set replica adds pass
+        so read fan-out respects the same budget residency does."""
+        sx = self._sharded_ex
+        if sx is None or sx.hbm_budget_bytes is None:
+            return frozenset()
+        ledger = sx.budget_ledger()
+        return frozenset(id(d) for d in sx.device_pool
+                         if not ledger.fits(id(d), need))
+
+    def _demote_shard_locked(self, s: int, tier: str = "warm") -> int:
+        """Move shard ``s`` down the ladder (lock held, pump thread).
+        Returns the device bytes freed.
+
+        ``warm``: every replica is dropped and the primary's resident
+        words are dereferenced (in-flight launches finish — they hold
+        their operands; the buffer frees when the last reference drops).
+        ``cold``: additionally the host packed copy compresses to RLE
+        runs (:meth:`_PackedShardPlan.demote_cold`) — misses then decode
+        runs on the fly, still bit-exact. The open tail shard cannot go
+        cold (its row range is still growing under appends); demote it
+        to warm or :meth:`split_tail` first. Queued and future requests
+        for the shard serve through the host path the moment the tier
+        flips (:meth:`_pick_action` routes off-device shards to
+        hostserve before considering launches)."""
+        sx = self._sharded_ex
+        sp = sx.shards[s]
+        if tier == "cold" and sp._last:
+            raise ValueError("the open tail shard cannot go cold (its RLE "
+                             "runs would close a still-appending range); "
+                             "demote to 'warm' or split_tail() first")
+        if self._tier[s] == "cold" and tier == "warm":
+            # UP-ladder within the host tiers: restore the packed copy,
+            # drop the runs — not a demotion, nothing device-side changes
+            if sp.is_cold:
+                sp.rehydrate()
+                self.stats["rehydrations"] += 1
+            self._set_tier_locked(s, "warm")
+            return 0
+        if self._tier[s] == tier:
+            return 0
+        while sx.replicas[s]:
+            self._drop_replica_locked(s)
+        freed = sx.executors[s].evict_words()
+        if tier == "cold" and not sp.is_cold:
+            sp.demote_cold()
+        self._set_tier_locked(s, tier)
+        self._warm_ticks[s] = 0
+        # a demoted shard host-serves by DESIGN — it no longer needs the
+        # emergency rebuild a device loss may have queued for it
+        self._needs_rebuild.discard(s)
+        self.stats["demotions"] += 1
+        return freed
+
+    def _promote_shard_locked(self, s: int) -> bool:
+        """Re-commit shard ``s``'s resident word stream (lock held, pump
+        thread) — the UP move of the ladder. Cold shards rehydrate their
+        host packed copy from the RLE runs first; the device commit is
+        the same version-keyed put a refresh uses, and when the shard's
+        home device died it rebuilds on a survivor instead
+        (:meth:`ShardedFeatureExecutor.rebuild_on`). False when no device
+        survives — the shard stays host-served (a cold one has still
+        moved up to warm: its packed copy is back)."""
+        sx = self._sharded_ex
+        if self._tier[s] == "hot":
+            return True
+        sp = sx.shards[s]
+        if sp.is_cold:
+            sp.rehydrate()
+            self.stats["rehydrations"] += 1
+            if self._tier[s] == "cold":
+                self._set_tier_locked(s, "warm")
+        ex = sx.executors[s]
+        down = set(self._device_health.down)
+        if ex.device is not None and id(ex.device) in down:
+            try:
+                sx.rebuild_on(s, lost=down)
+            except ValueError:
+                return False        # no surviving device — stay host-served
+            self._discard_breaker_locked(ex)
+        else:
+            ex.ensure_range_capacity(sp.n_rows)
+        self._set_tier_locked(s, "hot")
+        self._warm_ticks[s] = 0
+        self._promote_pending.discard(s)
+        self.stats["promotions"] += 1
+        self._work.notify_all()     # the shard's queue is launchable again
+        return True
+
+    def _try_promote_locked(self, s: int) -> bool:
+        """Budget-respecting promotion (lock held, pump thread): displace
+        COLDER resident shards (strictly lower EWMA — equal-heat shards
+        never thrash) off the target device until ``s`` fits, then
+        promote. False when the stream can never fit, nothing colder can
+        be displaced, or no device survives."""
+        sx = self._sharded_ex
+        if sx is None or s in self._needs_rebuild:
+            return False
+        if self._tier[s] == "hot":
+            return True                   # idempotent (a free-beat promote
+                                          # may have beaten this call)
+        budget = sx.hbm_budget_bytes
+        if budget is not None:
+            ex = sx.executors[s]
+            need = ex.stream_nbytes()
+            if need > budget:
+                return False              # a stream that can NEVER fit
+            dev_id = id(ex.device) if ex.device is not None else None
+            if dev_id is not None and dev_id in self._device_health.down:
+                # the promote will rebuild on the least-loaded survivor;
+                # post-promotion enforcement settles any overshoot there
+                dev_id = None
+            guard = 0
+            while dev_id is not None \
+                    and not sx.budget_ledger().fits(dev_id, need):
+                victims = [v for v in range(self._n_shards)
+                           if v != s and self._tier[v] == "hot"
+                           and self._mon_ewma[v] < self._mon_ewma[s]
+                           and any(id(e.device) == dev_id
+                                   and e.resident_bytes() > 0
+                                   for e in sx.stream_executors(v))]
+                guard += 1
+                if not victims or guard > self._n_shards:
+                    return False          # nothing colder to displace
+                self._demote_shard_locked(
+                    min(victims, key=lambda v: self._mon_ewma[v]), "warm")
+        ok = self._promote_shard_locked(s)
+        if ok and budget is not None:
+            self._enforce_budget_locked()
+        return ok
+
+    def _enforce_budget_locked(self, actions: dict | None = None) -> None:
+        """Settle every device back under the byte budget (lock held):
+        demote the coldest (min-EWMA) hot shard holding a stream on an
+        over-budget device, repeat until under. Ground truth comes from
+        :meth:`ShardedFeatureExecutor.device_bytes` (live buffers, never
+        a ledger), so transients from splits, rebuilds and replica adds
+        all settle here."""
+        sx = self._sharded_ex
+        if sx is None or sx.hbm_budget_bytes is None:
+            return
+        budget = sx.hbm_budget_bytes
+        for _ in range(4 * self._n_shards + 8):
+            over = {d: b for d, b in sx.device_bytes().items() if b > budget}
+            if not over:
+                return
+            dev_id = next(iter(over))
+            victims = [v for v in range(self._n_shards)
+                       if self._tier[v] == "hot"
+                       and any(id(e.device) == dev_id
+                               and e.resident_bytes() > 0
+                               for e in sx.stream_executors(v))]
+            if not victims:
+                return
+            v = min(victims, key=lambda x: self._mon_ewma[x])
+            self._demote_shard_locked(v, "warm")
+            if actions is not None:
+                actions["demoted"].append((v, "warm"))
+
+    def _tier_policy_locked(self, actions: dict) -> None:
+        """The monitor's residency policies (lock held, pump thread), run
+        at the end of every rebalance tick:
+
+        - **budget enforcement** — settle over-budget devices (coldest
+          resident demotes to warm);
+        - **cold aging** — a warm, closed, non-rebuilding shard quiet for
+          ``cold_after`` consecutive ticks compresses to RLE runs (the
+          host packed copy is the next-biggest residency after HBM);
+        - **promotion** — the hottest off-device shard with real load
+          moves up, displacing colder residents under the budget (misses
+          also promote sooner through the pump's free-beat promote arm —
+          this tick-side policy catches load the beat missed)."""
+        sx = self._sharded_ex
+        if sx is None:
+            return
+        self._enforce_budget_locked(actions)
+        for s in range(self._n_shards):
+            if self._tier[s] != "warm" or s in self._needs_rebuild \
+                    or sx.shards[s]._last:
+                continue
+            self._warm_ticks[s] += 1
+            if self._warm_ticks[s] >= self.cold_after:
+                self._demote_shard_locked(s, "cold")
+                actions["demoted"].append((s, "cold"))
+        cand = [s for s in self._offdevice
+                if s not in self._needs_rebuild and self._mon_ewma[s] > 0]
+        if cand:
+            s = max(cand, key=lambda i: self._mon_ewma[i])
+            if self._try_promote_locked(s):
+                actions["promoted"].append(s)
+
+    @property
+    def tiers(self) -> list[str]:
+        """Residency tier per shard: 'hot' / 'warm' / 'cold'."""
+        with self._lock:
+            return list(self._tier)
+
+    def device_bytes(self) -> dict[int, int]:
+        """LIVE resident word-stream bytes per device (``id(device)``
+        keyed) — what the budget is enforced against. Empty for
+        unsharded services."""
+        with self._lock:
+            return ({} if self._sharded_ex is None
+                    else self._sharded_ex.device_bytes())
+
+    def demote(self, shard: int, tier: str = "warm") -> int:
+        """Manually move ``shard`` down the ladder ('warm' frees its
+        device words, 'cold' additionally compresses the host copy to RLE
+        runs). Runs on the pump like every shard-set mutation; returns
+        the device bytes freed. Requests keep serving bit-exact through
+        the host path throughout."""
+        if tier not in ("warm", "cold"):
+            raise ValueError(f"tier must be 'warm' or 'cold', got {tier!r}")
+        self._require_mesh()
+        return self._run_admin(lambda: self._demote_shard_locked(shard, tier))
+
+    def promote(self, shard: int) -> bool:
+        """Manually promote ``shard`` to the hot tier (budget-respecting:
+        colder residents are displaced to warm when the device is full).
+        Returns False when it cannot fit or no device survives — the
+        shard keeps host-serving."""
+        self._require_mesh()
+        return self._run_admin(lambda: self._try_promote_locked(shard))
 
     # -- result retrieval ----------------------------------------------------------
     def poll(self, ticket: int) -> bool:

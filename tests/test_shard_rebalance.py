@@ -2,7 +2,8 @@
 
 The adaptive shard manager mutates the serving layout while traffic is in
 flight — streaming appends (``FeaturePlan.refresh``), tail re-shard at
-aligned AND unaligned cuts, replica add/drop with read fan-out. Every test
+aligned AND unaligned cuts, replica add/drop with read fan-out, and tier
+transitions (demote to host-warm / RLE-cold, promote back). Every test
 here drives seeded random interleavings of those mutations with
 aligned-range and arbitrary-row serving and asserts BIT-exactness
 (``assert_array_equal``) against the unsharded int32 host reference: a
@@ -155,11 +156,32 @@ def _run_interleaving(seed, table, fs, via_service, n_ops=16):
                 return
             s = int(rng.choice(cands))
             svc.drop_replica(s) if via_service else sx.drop_replica(s)
+        elif kind == "demote":
+            s = int(rng.integers(0, sx.n_shards))
+            # the open tail refuses cold (appends would stale the runs)
+            tier = ("cold" if rng.random() < 0.5
+                    and not sx.shards[s]._last else "warm")
+            if via_service:
+                svc.demote(s, tier)
+            else:
+                # bare-executor ladder: evict the primary's device words
+                # (replicas keep serving hot — reads fan out regardless)
+                sx.executors[s].evict_words()
+                if tier == "cold":
+                    sx.shards[s].demote_cold()
+        elif kind == "promote":
+            s = int(rng.integers(0, sx.n_shards))
+            if via_service:
+                svc.promote(s)
+            else:
+                sx.shards[s].rehydrate()
+                sx.executors[s].ensure_range_capacity(sx.shards[s].n_rows)
 
     try:
         for _ in range(n_ops):
             op = rng.choice(["serve", "serve", "serve", "append", "split",
-                             "replica_add", "replica_drop"])
+                             "replica_add", "replica_drop",
+                             "demote", "promote"])
             if op == "serve":
                 serve_check()
             elif op == "append":

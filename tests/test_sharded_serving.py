@@ -541,7 +541,8 @@ def test_adaptive_args_validation():
         assert svc.rebalance() == {"split": [], "replicated": [],
                                    "dropped": [],
                                    "failover_replicated": [],
-                                   "rebuilt": []}  # no-ops
+                                   "rebuilt": [], "demoted": [],
+                                   "promoted": []}  # no-ops
 
 
 def test_sharded_service_serves_widened_plan_after_refresh():

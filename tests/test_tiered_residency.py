@@ -1,0 +1,321 @@
+"""Tiered residency: HBM-hot / host-warm / RLE-cold shard ladder.
+
+Layers under test, bottom-up:
+
+- ``DeviceBudget`` ledger semantics (``distributed/sharding.py``);
+- ``_PackedShardPlan`` cold round-trips (``demote_cold``/``rehydrate``) and
+  ``FeatureExecutor`` residency accounting (``commit=False``, ``evict_words``);
+- ``ShardedFeatureExecutor(hbm_budget_bytes=...)`` budget-gated commits;
+- ``FeatureService`` tier transitions: warm shards host-serve bit-exact
+  while the monitor promotes hot traffic and demotes idle residents, the
+  device byte budget is never exceeded, and explicit ``demote``/``promote``
+  admin ops interleave safely with serving.
+
+The invariant everywhere mirrors the sharded-serving suite: tiering changes
+WHERE bytes live, never the math — every ticket is bit-exact against the
+unsharded reference. A seeded sweep is keyed by ``TIER_SWEEP_SEEDS``
+(nightly sets it high; the default keeps tier-1 quick).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.columnar import Table
+from repro.core import (FeatureSet, FeaturePipeline, FeaturePlan,
+                        FeatureExecutor, ShardedFeatureExecutor)
+from repro.distributed.sharding import DeviceBudget
+from repro.serve import FeatureService
+
+N_SEEDS = int(os.environ.get("TIER_SWEEP_SEEDS", "2"))
+
+
+def _mixed_table(n=3000, imcu_rows=700, seed=0):
+    rng = np.random.default_rng(seed)
+    t = Table.from_data({
+        "age": rng.integers(18, 80, n),
+        "state": np.array(["CA", "OR", "WA", "NY"])[rng.integers(0, 4, n)],
+        "income": rng.integers(20, 200, n) * 1000,
+    }, imcu_rows=imcu_rows)
+    fs = (FeatureSet().add("age", "zscore").add("state", "onehot")
+          .add("income", "minmax"))
+    return t, fs
+
+
+# -- DeviceBudget ledger -------------------------------------------------------------
+def test_device_budget_semantics():
+    b = DeviceBudget(100)
+    assert b.fits(1, 100) and not b.fits(1, 101)
+    b.charge(1, 60)
+    b.charge(2, 40)
+    assert b.bytes(1) == 60 and b.bytes(2) == 40 and b.bytes(3) == 0
+    assert b.headroom(1) == 40
+    assert b.fits(1, 40) and not b.fits(1, 41)
+    b.release(1, 20)
+    assert b.bytes(1) == 40
+    with pytest.raises(ValueError):
+        b.release(1, 41)                        # underflow is a bug
+    b.charge(2, 70)                             # charge may overshoot...
+    assert b.over_budget() == {2: 10}           # ...but the ledger says so
+    # budget=None disables enforcement entirely
+    free = DeviceBudget(None)
+    free.charge(1, 1 << 40)
+    assert free.fits(1, 1 << 40) and free.headroom(1) is None
+    assert free.over_budget() == {}
+
+
+# -- shard-plan cold tier ------------------------------------------------------------
+def test_shard_plan_cold_roundtrip():
+    t, fs = _mixed_table()
+    plan = FeaturePlan(t, fs, packed=True)
+    shards = plan.imcu_shards()
+    sp = shards[1]
+    ref = sp.host_codes(np.arange(sp.n_rows))
+    assert not sp.is_cold and sp.rle_bytes() == 0
+    held = sp.demote_cold()
+    assert sp.is_cold and held == sp.rle_bytes() > 0
+    assert sp.demote_cold() == held             # idempotent
+    # host reads stay bit-exact straight from the runs
+    np.testing.assert_array_equal(sp.host_codes(np.arange(sp.n_rows)), ref)
+    rng = np.random.default_rng(3)
+    rows = rng.integers(0, sp.n_rows, 200)
+    np.testing.assert_array_equal(sp.host_codes(rows), ref[:, rows])
+    # _shard_words repacks on demand, so a device commit works while cold
+    words = sp._shard_words(0)
+    assert words.dtype == np.uint32
+    sp.rehydrate()
+    assert not sp.is_cold and sp.rle_bytes() == 0
+    assert sp.stats["rehydrated"] >= 1
+    np.testing.assert_array_equal(sp.host_codes(np.arange(sp.n_rows)), ref)
+    # the open tail refuses cold: appends would stale the runs
+    with pytest.raises(ValueError):
+        shards[-1].demote_cold()
+
+
+def test_executor_residency_accounting():
+    t, fs = _mixed_table(n=1400, imcu_rows=1400)
+    plan = FeaturePlan(t, fs, packed=True)
+    ref = plan.host_features(np.arange(64))
+    ex = FeatureExecutor(plan, commit=False)
+    assert ex.resident_bytes() == 0
+    need = ex.stream_nbytes()
+    assert need > 0
+    ex.ensure_range_capacity(plan.n_rows)
+    np.testing.assert_array_equal(np.asarray(ex.batch(np.arange(64))), ref)
+    assert ex.resident_bytes() == ex.stream_nbytes() > 0
+    freed = ex.evict_words()
+    assert freed > 0 and ex.resident_bytes() == 0
+    assert ex.stream_nbytes() == need           # projection survives eviction
+    # next launch re-puts through the version-keyed sync, bit-exact
+    np.testing.assert_array_equal(np.asarray(ex.batch(np.arange(64))), ref)
+    assert ex.resident_bytes() > 0
+
+
+def test_sharded_executor_budget_gates_commits():
+    t, fs = _mixed_table()
+    plan = FeaturePlan(t, fs, packed=True)
+    full = ShardedFeatureExecutor(FeaturePlan(t, fs, packed=True))
+    per_shard = [e.stream_nbytes() for e in full.executors]
+    # budget below the first shard's stream: nothing commits anywhere
+    sx = ShardedFeatureExecutor(plan, hbm_budget_bytes=1)
+    assert all(e.resident_bytes() == 0 for e in sx.executors)
+    assert sx.device_bytes() == {} or \
+        all(v == 0 for v in sx.device_bytes().values())
+    # budget for exactly one shard per device: earlier shards win, and the
+    # live device bytes never exceed the budget
+    budget = max(per_shard)
+    sx2 = ShardedFeatureExecutor(FeaturePlan(t, fs, packed=True),
+                                 hbm_budget_bytes=budget)
+    assert any(e.resident_bytes() > 0 for e in sx2.executors)
+    assert all(v <= budget for v in sx2.device_bytes().values())
+    ledger = sx2.budget_ledger()
+    assert ledger.over_budget() == {}
+    # no budget -> everything resident (the pre-tiering behaviour)
+    assert all(e.resident_bytes() > 0 for e in full.executors)
+
+
+# -- FeatureService tier transitions -------------------------------------------------
+def _budget_one_stream(t, fs):
+    """Byte budget that fits the largest single shard stream exactly."""
+    sx = ShardedFeatureExecutor(FeaturePlan(t, fs, packed=True))
+    return max(e.stream_nbytes() for e in sx.executors)
+
+
+def test_service_all_warm_serves_bitexact():
+    """budget=1: nothing fits on device, every shard host-serves — misses
+    count, availability stays 1.0, outputs are bit-exact."""
+    t, fs = _mixed_table()
+    pipe = FeaturePipeline(t, fs)
+    rng = np.random.default_rng(11)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        hbm_budget_bytes=1, buckets=(64,),
+                        max_replicas=0) as svc:
+        assert all(tr != "hot" for tr in svc.tiers)
+        reqs = [rng.integers(0, 3000, 128) for _ in range(12)]
+        tickets = [svc.submit(r) for r in reqs]
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(svc.result(tk),
+                                          np.asarray(pipe.batch(r)))
+        st = svc.stats
+        assert st["host_gathers"] > 0 and st["tier_misses"] > 0
+        assert st["promotions"] == 0            # nothing can ever fit
+        assert all(v == 0 for v in svc.device_bytes().values())
+        assert (st["tier_hot"] + st["tier_warm"] + st["tier_cold"]
+                == svc.n_shards)
+
+
+def test_monitor_promotes_hot_and_demotes_idle():
+    """One-stream budget + skewed traffic at a warm shard: the monitor
+    promotes it (displacing colder residents when its device is full), an
+    idle warm shard ages to cold, the budget holds at every observation
+    point, and every ticket is bit-exact. Shards are demoted explicitly up
+    front so the scenario is identical at any process device count (on a
+    wide mesh every shard fits its own device and starts hot)."""
+    t, fs = _mixed_table()
+    pipe = FeaturePipeline(t, fs)
+    budget = _budget_one_stream(t, fs)
+    rng = np.random.default_rng(12)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        hbm_budget_bytes=budget + 1, buckets=(64,),
+                        rebalance_every=4, cold_after=2,
+                        max_replicas=0) as svc:
+        tail = svc.n_shards - 1
+        svc.demote(tail, "warm")                 # the shard we will hammer
+        svc.demote(1, "warm")                    # idle: should age to cold
+        base_demotions = svc.stats["demotions"]
+        # hammer the (now warm) tail shard
+        tail_lo = 700 * (svc.n_shards - 1)
+        reqs = [np.sort(rng.integers(tail_lo, 3000, 64)) for _ in range(40)]
+        tickets, outs = [], {}
+        for i, r in enumerate(reqs):
+            tickets.append(svc.submit(r))
+            if i % 8 == 7:
+                outs.update(svc.drain())
+                assert all(v <= budget + 1
+                           for v in svc.device_bytes().values())
+        outs.update(svc.drain())
+        for r, tk in zip(reqs, tickets):
+            np.testing.assert_array_equal(outs[tk], np.asarray(pipe.batch(r)))
+        st = svc.stats
+        assert st["promotions"] >= 1, f"tiers={svc.tiers} stats={st}"
+        # the idle warm shard aged to cold under the monitor
+        assert st["demotions"] > base_demotions, \
+            f"tiers={svc.tiers} stats={st}"
+        assert svc.tiers[1] == "cold", f"tiers={svc.tiers} stats={st}"
+        assert svc.tiers[tail] == "hot"
+        assert all(v <= budget + 1 for v in svc.device_bytes().values())
+        assert (st["tier_hot"] + st["tier_warm"] + st["tier_cold"]
+                == svc.n_shards)
+        assert st["tier_hot"] == sum(1 for x in svc.tiers if x == "hot")
+
+
+def test_explicit_demote_promote_roundtrip():
+    t, fs = _mixed_table()
+    pipe = FeaturePipeline(t, fs)
+    rng = np.random.default_rng(13)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        buckets=(64,), max_replicas=0) as svc:
+        assert svc.tiers == ["hot"] * svc.n_shards   # no budget: all hot
+        rows = np.arange(700, 764)                   # shard 1 only
+        base = np.asarray(pipe.batch(rows))
+        freed = svc.demote(1, "warm")
+        assert freed > 0 and svc.tiers[1] == "warm"
+        np.testing.assert_array_equal(svc.result(svc.submit(rows)), base)
+        # warm -> cold drops the host packed copy too
+        svc.demote(1, "cold")
+        assert svc.tiers[1] == "cold"
+        np.testing.assert_array_equal(svc.result(svc.submit(rows)), base)
+        assert svc.promote(1) and svc.tiers[1] == "hot"
+        assert svc.stats["rehydrations"] >= 1
+        np.testing.assert_array_equal(svc.result(svc.submit(rows)), base)
+        assert svc.promote(1)                        # idempotent
+        assert svc.stats["demotions"] == 2
+        with pytest.raises(ValueError):
+            svc.demote(svc.n_shards - 1, "cold")     # open tail stays warm+
+        with pytest.raises(ValueError):
+            svc.demote(0, "lukewarm")
+        # scattered traffic over all tiers stays bit-exact
+        r = rng.integers(0, 3000, 300)
+        np.testing.assert_array_equal(svc.result(svc.submit(r)),
+                                      np.asarray(pipe.batch(r)))
+
+
+def test_demoted_shard_serves_through_refresh():
+    """Appends land in the open tail while other shards sit warm/cold; the
+    demoted shards keep serving the enlarged table bit-exact."""
+    t, fs = _mixed_table(n=2000, imcu_rows=800)
+    pipe = FeaturePipeline(t, fs)
+    plan_p = FeaturePlan(t, fs, packed=True)
+    with FeatureService(plan_p, sharded=True, buckets=(64,),
+                        max_replicas=0) as svc:
+        svc.demote(0, "cold")
+        svc.demote(1, "warm")
+        assert svc.tiers[0] == "cold" and svc.tiers[1] == "warm"
+        new = {"age": t["age"].dictionary.add_rows(np.array([150, 151])),
+               "state": t["state"].dictionary.add_rows(
+                   np.array(["CA", "OR"])),
+               "income": t["income"].dictionary.add_rows(
+                   np.array([40000, 60000]))}
+        plan_p.refresh(new)
+        pipe.plan.refresh(new)
+        mixed = np.array([0, 799, 800, 1999, 2000, 2001])
+        np.testing.assert_array_equal(svc.result(svc.submit(mixed)),
+                                      np.asarray(pipe.batch(mixed)))
+        # the monitor may already have promoted the loaded shards back
+        # (self-healing under no budget); promote() is idempotent either way
+        assert svc.promote(0)
+        np.testing.assert_array_equal(svc.result(svc.submit(mixed)),
+                                      np.asarray(pipe.batch(mixed)))
+
+
+def test_tiered_stats_validation():
+    t, fs = _mixed_table(n=1400, imcu_rows=700)
+    with pytest.raises(ValueError):
+        FeatureService(FeaturePlan(t, fs, packed=True),
+                       hbm_budget_bytes=1 << 20)     # needs sharded+packed
+    with pytest.raises(ValueError):
+        FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                       hbm_budget_bytes=1 << 20, cold_after=0)
+    with pytest.raises(ValueError):
+        FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                       host_gather_workers=0)
+
+
+# -- seeded chaos sweep (nightly sets TIER_SWEEP_SEEDS high) -------------------------
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_tier_chaos_sweep(seed):
+    """Randomized promote/demote admin ops interleaved with skewed serving:
+    no ticket is ever dropped, every result is bit-exact, the budget holds,
+    and the tier gauges stay consistent."""
+    rng = np.random.default_rng(100 + seed)
+    t, fs = _mixed_table(seed=seed)
+    pipe = FeaturePipeline(t, fs)
+    budget = _budget_one_stream(t, fs)
+    with FeatureService(FeaturePlan(t, fs, packed=True), sharded=True,
+                        hbm_budget_bytes=budget + 1, buckets=(64,),
+                        rebalance_every=3, cold_after=2,
+                        max_replicas=0) as svc:
+        closed = [s for s in range(svc.n_shards) if s != svc.n_shards - 1]
+        pending: list[tuple[np.ndarray, int]] = []
+        for op in range(30):
+            r = np.sort(rng.integers(0, 3000, int(rng.integers(16, 128))))
+            pending.append((r, svc.submit(r)))
+            k = rng.integers(0, 5)
+            if k == 0:
+                svc.demote(int(rng.choice(closed)),
+                           "cold" if rng.integers(0, 2) else "warm")
+            elif k == 1:
+                svc.promote(int(rng.integers(0, svc.n_shards)))
+            if op % 10 == 9:
+                out = svc.drain()
+                assert {tk for _, tk in pending} <= set(out)
+                for r, tk in pending:
+                    np.testing.assert_array_equal(out[tk],
+                                                  np.asarray(pipe.batch(r)))
+                pending.clear()
+                assert all(v <= budget + 1
+                           for v in svc.device_bytes().values())
+        st = svc.stats
+        assert (st["tier_hot"] + st["tier_warm"] + st["tier_cold"]
+                == svc.n_shards)
+        assert st["failed_tickets"] == 0
