@@ -21,7 +21,8 @@ from repro.core import (AugmentedDictionary, FeatureExecutor,
 from repro.core.pipeline import pad_rows_edge
 from repro.kernels.adv_gather import adv_gather
 from repro.kernels.hist import hist
-from repro.serve import FaultInjector, FaultPolicy, FeatureService
+from repro.serve import (FaultInjector, FaultPolicy, FeatureFrontend,
+                         FeatureService, Overloaded, RequestClass)
 from benchmarks.common import (MIN_REPEATS, time_call, emit, scaled,
                                interleaved_best)
 
@@ -705,6 +706,140 @@ def _tiered_serve_comparison() -> None:
         s.shutdown()
 
 
+def _frontend_serve_comparison() -> None:
+    """Per-class SLOs through the multi-tenant front door under saturation.
+
+    The Zipf 'user block' workload split across request classes and
+    pushed through :class:`FeatureFrontend` as a saturating burst (every
+    submit lands before the pump can drain, so queues build and the
+    scheduler's choices decide who waits): ``interactive`` (priority 3,
+    singleton groups, no linger) interleaved 1:3 into a ``batch`` stream
+    (priority 2, coalesce 8, 1 ms linger) plus a trickle of ``background``
+    scavenger work. The per-class p99s come from the service's streaming
+    latency histograms (reset after the compile warmup, so they cover
+    only steady-state tickets); the CI ``--require`` gates assert the
+    SLO ordering ``p99_interactive_vs_batch < 1`` (priority scheduling
+    actually protects the interactive tail — a same-run ratio, machine
+    speed cancels), ``availability=1`` over every ADMITTED ticket,
+    ``background_completed >= 1`` (anti-starvation aging drains the
+    scavenger class under pressure) and ``overloaded >= 1`` (the
+    admission probe below really exercised typed rejection). The FIFO
+    control record serves the identical mixed burst classless through the
+    same-shaped service — the one-queue world whose tail every class
+    shares.
+    """
+    rng = np.random.default_rng(47)
+    n = scaled(128_000, 32_000)
+    n_inter = scaled(120, 60)
+    n_batch = scaled(360, 180)
+    n_bg = 8
+    rsz = 64
+    n_shards = 4
+    data = {
+        "age": rng.integers(18, 90, n),
+        "state": rng.integers(0, 50, n),
+        "income": rng.integers(20, 250, n) * 1000,
+    }
+    fs = (FeatureSet().add("age", "zscore").add("state", "onehot")
+          .add("income", "minmax"))
+    blocks = (n - rsz) // 32
+
+    def zipf_reqs(count):
+        ranks = np.minimum(rng.zipf(1.2, count), blocks) - 1
+        return [np.arange(s, s + rsz) for s in ranks * 32]
+
+    reqs_batch = zipf_reqs(n_batch)
+    reqs_inter = zipf_reqs(n_inter)
+    reqs_bg = zipf_reqs(n_bg)
+    n_req = n_batch + n_inter + n_bg
+    table = Table.from_data(data, imcu_rows=n // n_shards)
+
+    classes = (
+        RequestClass("interactive", priority=3, coalesce=1, linger_us=0.0,
+                     max_inflight=512, queue_depth=512),
+        RequestClass("batch", priority=2, coalesce=8, linger_us=1000.0,
+                     max_inflight=1024, queue_depth=1024),
+        # tiny admission window: the post-timing probe overflows it to
+        # prove typed Overloaded rejection (the timed trickle fits)
+        RequestClass("background", priority=1, aging_s=0.05,
+                     max_inflight=16, queue_depth=16),
+    )
+
+    def build(klasses):
+        return FeatureService(FeaturePlan(table, fs, packed=True),
+                              sharded=True, buckets=(rsz,), coalesce=8,
+                              linger_us=1000, classes=klasses)
+
+    svc = build(classes)
+    fe = FeatureFrontend(svc)
+    svc_fifo = build(None)
+
+    bg_step = n_batch // n_bg
+
+    def fe_loop():
+        k = 0
+        for i, r in enumerate(reqs_batch):
+            fe.submit(r, klass="batch", tenant="analytics")
+            if i % 3 == 0 and k < n_inter:
+                fe.submit(reqs_inter[k], klass="interactive",
+                          tenant="app")
+                k += 1
+            if i % bg_step == 0 and i // bg_step < n_bg:
+                fe.submit(reqs_bg[i // bg_step],
+                          klass="background", tenant="scavenger")
+        while k < n_inter:
+            fe.submit(reqs_inter[k], klass="interactive", tenant="app")
+            k += 1
+        fe.collect()
+
+    def fifo_loop():
+        for i, r in enumerate(reqs_batch):
+            svc_fifo.submit(r)
+            if i % 3 == 0:
+                svc_fifo.submit(reqs_inter[i // 3 % n_inter])
+        svc_fifo.drain()
+
+    loops = [fifo_loop, fe_loop]
+    for loop in loops:
+        loop()                                             # compile each
+    svc.reset_latency_window()
+    svc_fifo.reset_latency_window()
+    fifo_s, fe_s = interleaved_best(loops, repeats=MIN_REPEATS)
+
+    inter_p99 = svc.latency_percentile(99, "interactive")
+    batch_p99 = svc.latency_percentile(99, "batch")
+    cs = svc.class_stats()
+    # admission probe: overflow the background window while the pump is
+    # held — every submit past window + depth must raise typed Overloaded
+    svc.pause()
+    overloaded, retry_hint = 0, 0.0
+    for _ in range(64):
+        try:
+            fe.submit(reqs_bg[0], klass="background", tenant="scavenger")
+        except Overloaded as e:
+            overloaded += 1
+            retry_hint = e.retry_after_s
+    svc.resume()
+    fe.collect()
+    st = fe.stats()
+    emit("serve/feature_service_frontend_fifo", fifo_s / n_req * 1e6,
+         f"p99_ms={svc_fifo.latency_percentile(99)*1e3:.3f};"
+         f"rows_per_s={(n_batch + n_inter)*rsz/fifo_s:.0f}")
+    emit("serve/feature_service_frontend", fe_s / n_req * 1e6,
+         f"interactive_p99_ms={inter_p99*1e3:.3f};"
+         f"batch_p99_ms={batch_p99*1e3:.3f};"
+         f"p99_interactive_vs_batch={inter_p99/max(batch_p99, 1e-9):.3f}x;"
+         f"availability={st['availability_admitted']:.4f};"
+         f"background_completed={cs['background']['completed']};"
+         f"overloaded={overloaded};"
+         f"retry_after_ms={retry_hint*1e3:.3f};"
+         f"admitted={sum(c['admitted'] for c in st['classes'].values())};"
+         f"latency_samples={svc.stats['latency_samples_total']};"
+         f"devices={len(jax.devices())}")
+    fe.shutdown()
+    svc_fifo.shutdown()
+
+
 def run() -> None:
     N = scaled(1 << 16, 1 << 12)   # device-path rows (interpret mode is slow)
     rng = np.random.default_rng(3)
@@ -749,6 +884,7 @@ def run() -> None:
     _chaos_serve_comparison()
     _hedged_serve_comparison()
     _tiered_serve_comparison()
+    _frontend_serve_comparison()
 
 
 if __name__ == "__main__":

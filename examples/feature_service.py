@@ -66,7 +66,7 @@ tables many times the device budget serve near hot-tier throughput
 under skewed access.
 
 Builds a columnar table, compiles a FeaturePlan (device-resident fused ADV
-tables), then serves featurization requests nine ways:
+tables), then serves featurization requests ten ways:
 
 1. request queue with tickets (submit / result),
 2. arbitrary-row ("millions of users") lookups over a packed plan — the
@@ -100,7 +100,15 @@ tables), then serves featurization requests nine ways:
    extend the open-ended LAST shard, so sharded services keep serving,
 9. tiered residency: the hot/warm/cold shard ladder above, driven by an
    ``hbm_budget_bytes`` cap half the table's size — explicit demotion
-   down to RLE runs, a bit-exact cold miss, and async promotion back.
+   down to RLE runs, a bit-exact cold miss, and async promotion back,
+10. the production front door: a ``FeatureFrontend`` over per-tenant
+    request classes (``interactive``/``batch``/``background``) — the
+    pump schedules launches by class priority with anti-starvation
+    aging and per-class coalescing/linger, admission is bounded per
+    class (``max_inflight`` + ``queue_depth``, then a typed
+    ``Overloaded`` with a retry-after hint), and per-class streaming
+    latency histograms feed the stats/SLO endpoint (unbiased p99s —
+    every completed ticket, not a sliding sample window).
 
 Run:  PYTHONPATH=src python examples/feature_service.py
 """
@@ -110,7 +118,7 @@ import numpy as np
 
 from repro.columnar import Table
 from repro.core import FeatureSet, FeaturePlan
-from repro.serve import FeatureService
+from repro.serve import FeatureFrontend, FeatureService, Overloaded
 
 
 def main() -> None:
@@ -394,6 +402,46 @@ def main() -> None:
               f"promotions={st['promotions']} demotions={st['demotions']} "
               f"rehydrations={st['rehydrations']}; resident="
               f"{sum(svct.device_bytes().values())}B <= {total // 2}B")
+
+    # 10. the production front door. for_plan() builds the service with
+    # the preset three-tier class ladder (interactive: priority 3,
+    # singleton immediate launches, 5s deadline; batch: priority 2,
+    # normal coalescing; background: priority 1, small admission window,
+    # aged up so it drains but never starves anyone) and wraps it in the
+    # admission-controlled FeatureFrontend. Tenants share the service;
+    # classes bound what each can have outstanding.
+    with FeatureFrontend.for_plan(FeaturePlan(table, features, packed=True),
+                                  sharded=True, buckets=(512,),
+                                  coalesce=8, linger_us=500) as fe:
+        tickets = [fe.submit(rng.integers(0, n, 512), klass="batch",
+                             tenant="analytics") for _ in range(12)]
+        tickets += [fe.submit(np.arange(s, s + 512), klass="interactive",
+                              tenant="app") for s in (0, 4096)]
+        tickets.append(fe.submit(rng.integers(0, n, 512),
+                                 klass="background", tenant="scavenger"))
+        fe.collect()
+        # overload: hold the pump and flood the background window — the
+        # bound rejects with a typed Overloaded + retry-after hint
+        # instead of growing an unbounded queue
+        fe.service.pause()
+        rejected, hint = 0, 0.0
+        try:
+            for _ in range(2048):
+                fe.submit(np.arange(0, 64), klass="background",
+                          tenant="scavenger")
+        except Overloaded as e:
+            rejected, hint = 1, e.retry_after_s
+        fe.service.resume()
+        fe.collect()
+        st = fe.stats()
+        lat = {k: f"p99={v['p99_ms']:.2f}ms" for k, v in
+               st["classes"].items() if v["samples"]}
+        print(f"front door: {lat}; admitted="
+              f"{ {k: v['admitted'] for k, v in st['classes'].items()} }, "
+              f"rejected typed Overloaded={rejected} "
+              f"(retry in ~{hint * 1e3:.1f}ms), availability="
+              f"{st['availability_admitted']:.3f}, tenants="
+              f"{sorted(st['tenants'])}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
+from repro.serve.classes import (LatencyHistogram, Overloaded, RequestClass,
+                                 default_classes)
 from repro.serve.engine import ServeEngine, Request
 from repro.serve.faults import (DeadlineExceeded, DeviceDown, DeviceHealth,
                                 FaultInjector, FaultPolicy, InjectedFault,
                                 ServeError, StreamBreaker)
 from repro.serve.feature_service import FeatureService
+from repro.serve.frontend import FeatureFrontend
 
-__all__ = ["ServeEngine", "Request", "FeatureService", "FaultInjector",
+__all__ = ["ServeEngine", "Request", "FeatureService", "FeatureFrontend",
+           "RequestClass", "Overloaded", "LatencyHistogram",
+           "default_classes", "FaultInjector",
            "FaultPolicy", "ServeError", "DeadlineExceeded", "InjectedFault",
            "StreamBreaker", "DeviceDown", "DeviceHealth"]

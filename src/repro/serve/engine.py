@@ -86,5 +86,9 @@ class ServeEngine:
     def throughput_stats(self, requests: list[Request],
                          wall_s: float) -> dict:
         new = sum(len(r.out_tokens) for r in requests)
+        # wall_s <= 0 cannot yield a rate: 0.0 + flag, not float('inf')
+        # (json.dump renders inf as the non-standard Infinity token)
+        wall_ok = wall_s > 0
         return {"requests": len(requests), "new_tokens": new,
-                "tok_per_s": new / wall_s if wall_s > 0 else float("inf")}
+                "wall_s_invalid": not wall_ok,
+                "tok_per_s": new / wall_s if wall_ok else 0.0}

@@ -248,6 +248,7 @@ class _Rule:
     every: int = 1              # fire on every j-th matching launch
     delay_s: float = 0.0
     seen: int = 0               # matching launches observed so far
+    klass: str | None = None    # None = any request class
 
 
 class FaultInjector:
@@ -277,27 +278,33 @@ class FaultInjector:
     # -- scripting -----------------------------------------------------------------
     def fail_launches(self, n: int = 1, *, shard: int | None = None,
                       stream: int | None = None, after: int = 0,
-                      every: int = 1) -> "FaultInjector":
+                      every: int = 1,
+                      klass: str | None = None) -> "FaultInjector":
         """Fail the next ``n`` matching launches (then heal). ``shard``/
         ``stream`` restrict the blast radius ('fail replica ``stream`` of
-        shard k ``n`` times then heal'); ``after`` skips that many
+        shard k ``n`` times then heal'); ``klass`` restricts to launches
+        serving one request class ('fail only batch-class groups' — the
+        front door's per-class chaos axis); ``after`` skips that many
         matching launches first; ``every=j`` fires on every j-th match
         (periodic faults). Returns self for chaining."""
-        self._rules.append(_Rule("fail", shard, stream, n, after, every))
+        self._rules.append(_Rule("fail", shard, stream, n, after, every,
+                                 klass=klass))
         return self
 
     def delay_launches(self, seconds: float, n: int = 1, *,
                        shard: int | None = None, stream: int | None = None,
-                       after: int = 0, every: int = 1) -> "FaultInjector":
+                       after: int = 0, every: int = 1,
+                       klass: str | None = None) -> "FaultInjector":
         """Sleep ``seconds`` on the next ``n`` matching launches —
         straggler simulation (the launch SUCCEEDS, late)."""
         self._rules.append(_Rule("delay", shard, stream, n, after, every,
-                                 delay_s=seconds))
+                                 delay_s=seconds, klass=klass))
         return self
 
     def stall_launches(self, seconds: float, n: int = 1, *,
                        shard: int | None = None, stream: int | None = None,
-                       after: int = 0, every: int = 1) -> "FaultInjector":
+                       after: int = 0, every: int = 1,
+                       klass: str | None = None) -> "FaultInjector":
         """ASYNC straggler: the next ``n`` matching launches dispatch
         normally but their result buffers are treated as not-ready for
         ``seconds`` (the service gates the retire on the stall). Unlike
@@ -305,7 +312,7 @@ class FaultInjector:
         device compute a hedged duplicate launch can actually race and
         beat, where a delay blocks the dispatcher itself."""
         self._rules.append(_Rule("stall", shard, stream, n, after, every,
-                                 delay_s=seconds))
+                                 delay_s=seconds, klass=klass))
         return self
 
     def kill_device(self, device) -> "FaultInjector":
@@ -337,18 +344,22 @@ class FaultInjector:
         return self
 
     # -- the pump-side hook --------------------------------------------------------
-    def _match(self, rule: _Rule, shard: int, stream: int) -> bool:
+    def _match(self, rule: _Rule, shard: int, stream: int,
+               klass: str | None) -> bool:
         if rule.remaining <= 0:
             return False
         if rule.shard is not None and rule.shard != shard:
             return False
+        if rule.klass is not None and rule.klass != klass:
+            return False
         return rule.stream is None or rule.stream == stream
 
     def before_launch(self, shard: int, stream: int,
-                      device=None) -> float:
+                      device=None, klass: str | None = None) -> float:
         """Called by the pump for every launch, BEFORE dispatch: (shard,
         stream index within the shard — 0 is the primary, i>0 replica
-        i-1, ``device`` the stream's placement). May sleep (delay rule) or
+        i-1, ``device`` the stream's placement, ``klass`` the request
+        class of the group being launched). May sleep (delay rule) or
         raise (:class:`InjectedFault` fail rules; :class:`DeviceDown` when
         the device was killed). Returns the launch's injected STALL in
         seconds (0.0 normally) — the service gates the launch's retire on
@@ -364,7 +375,7 @@ class FaultInjector:
                     f"injected device loss under shard {shard} "
                     f"stream {stream}")
             for rule in self._rules:
-                if not self._match(rule, shard, stream):
+                if not self._match(rule, shard, stream, klass):
                     continue
                 rule.seen += 1
                 if rule.seen <= rule.after or \

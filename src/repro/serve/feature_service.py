@@ -195,6 +195,7 @@ import jax.numpy as jnp
 from repro.core.pipeline import (FeatureExecutor, FeaturePipeline,
                                  FeaturePlan, ShardedFeatureExecutor,
                                  pad_rows_edge)
+from repro.serve.classes import LatencyHistogram, RequestClass
 from repro.serve.faults import (DeadlineExceeded, DeviceDown, DeviceHealth,
                                 FaultInjector, FaultPolicy, ServeError,
                                 StreamBreaker)
@@ -219,6 +220,7 @@ class _Chunk:
     attempts: int = 0               # launches tried so far
     not_before: float = 0.0         # retry backoff deadline (perf_counter)
     avoid: frozenset = frozenset()  # stream tokens this chunk failed on
+    klass: str = "default"          # request class (pump scheduling key)
 
 
 @dataclass
@@ -256,7 +258,8 @@ class FeatureService:
                  hbm_budget_bytes: int | None = None, cold_after: int = 2,
                  host_gather_workers: int | None = None,
                  faults: FaultInjector | None = None,
-                 fault_policy: FaultPolicy | None = None):
+                 fault_policy: FaultPolicy | None = None,
+                 classes: tuple[RequestClass, ...] | None = None):
         if isinstance(plan, FeaturePipeline):
             plan = plan.plan
         if prefetch < 2:
@@ -371,7 +374,30 @@ class FeatureService:
         self._retire_prog = 0       # parts fully retired of current flight
         self._stragglers = [self._new_straggler()
                             for _ in range(self._n_shards)]
+        # -- latency accounting --
+        # the deque is the BENCH-COMPAT window (np.percentile over it is
+        # biased toward the most recent 8192 tickets on long runs); the
+        # histograms below see every completed ticket and back
+        # latency_percentile()/class_stats() — the SLO-gate reading.
+        # stats['latency_samples_total'] makes the window's truncation
+        # detectable (> len(latencies) means the deque wrapped)
         self.latencies: deque[float] = deque(maxlen=8192)  # per-ticket s
+        self._lat_hist = LatencyHistogram()
+        # -- request classes (priority pump scheduling + per-class SLOs) --
+        # every service carries a 'default' class (service-wide coalesce/
+        # linger, priority 1, no deadline) so classless submits flow
+        # exactly as before; the front door registers real classes here
+        self._classes: dict[str, RequestClass] = {
+            "default": RequestClass("default")}
+        for rc in (classes or ()):
+            if rc.name in self._classes and rc.name != "default":
+                raise ValueError(f"duplicate request class {rc.name!r}")
+            self._classes[rc.name] = rc
+        self._ticket_class: dict[int, str] = {}
+        self._class_stats: dict[str, dict] = {
+            name: {"requests": 0, "completed": 0, "failed": 0, "rows": 0,
+                   "hist": LatencyHistogram()}
+            for name in self._classes}
         # -- adaptive shard management state --
         self.rebalance_every = rebalance_every
         self.row_budget = row_budget
@@ -400,6 +426,7 @@ class FeatureService:
         self.stats = {"requests": 0, "rows": 0, "padded_rows": 0,
                       "batches": 0, "launches": 0, "max_inflight": 0,
                       "latency_s_total": 0.0, "completed": 0,
+                      "latency_samples_total": 0,
                       "packed_ranges": 0, "bytes_h2d": 0, "split_requests": 0,
                       "filtered_requests": 0,
                       "retries": 0, "failovers": 0, "timeouts": 0,
@@ -489,6 +516,7 @@ class FeatureService:
                     self._out_buf.pop(t, None)
                     self._submitted_at.pop(t, None)
                     self._deadlines.pop(t, None)
+                    self._ticket_class.pop(t, None)
             self._shutdown = True
             self._notify_everyone()
         self._pump.join()
@@ -651,6 +679,9 @@ class FeatureService:
         self._dead.add(ticket)
         self._errors[ticket] = err
         self.stats["failed_tickets"] += 1
+        k = self._ticket_class.pop(ticket, None)
+        if k is not None:
+            self._class_stats[k]["failed"] += 1
         if timeout:
             self.stats["timeouts"] += 1
         self._cv.notify_all()
@@ -823,7 +854,8 @@ class FeatureService:
         return self._sharded_ex.route(rows, lo, hi)
 
     def submit(self, rows: np.ndarray | None = None, *, where=None,
-               deadline_ms: float | None = None) -> int:
+               deadline_ms: float | None = None,
+               klass: str = "default") -> int:
         """Enqueue a featurization request; returns a ticket for the result.
 
         Only queues: the background pumps pick the chunks up, coalesce them
@@ -841,7 +873,18 @@ class FeatureService:
         ticket resolves to :class:`DeadlineExceeded` (chunks already in
         flight retire normally — a deadline evicts queued work, it does
         not cancel device work).
+
+        ``klass`` names a registered :class:`RequestClass` (construct the
+        service with ``classes=``): it sets the pump's scheduling
+        priority, coalescing policy and — when ``deadline_ms`` is not
+        passed — the class's default deadline.
         """
+        rc = self._classes.get(klass)
+        if rc is None:
+            raise ValueError(f"unknown request class {klass!r} "
+                             f"(registered: {sorted(self._classes)})")
+        if deadline_ms is None:
+            deadline_ms = rc.deadline_ms
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError("deadline_ms must be > 0")
         filtered = where is not None
@@ -868,6 +911,9 @@ class FeatureService:
                     self.stats["requests"] += 1
                     self.stats["filtered_requests"] += 1
                     self.stats["completed"] += 1
+                    cs = self._class_stats[klass]
+                    cs["requests"] += 1
+                    cs["completed"] += 1
                     self._results[ticket] = np.zeros(
                         (0, self.plan.out_dim), np.float32)
                     self._cv.notify_all()
@@ -923,10 +969,15 @@ class FeatureService:
                     self.stats["split_requests"] += 1
                 self._chunks_total[ticket] = len(pieces)
                 self._ticket_rows[ticket] = rows.size
+                self._ticket_class[ticket] = klass
+                cs = self._class_stats[klass]
+                cs["requests"] += 1
+                cs["rows"] += rows.size
                 before = {}
                 for ch in pieces:
                     ch.ticket = ticket
                     ch.t_enq = now
+                    ch.klass = klass
                     q = self._queues[ch.shard]
                     before.setdefault(ch.shard, len(q))
                     q.append(ch)
@@ -934,11 +985,16 @@ class FeatureService:
                     # wake discipline (each wake steals GIL time from XLA):
                     # the parked pump needs a wake when a shard queue goes
                     # empty -> nonempty (to start serving, or arm its linger
-                    # timer) or when this submit completed a coalescing
-                    # group; chunks landing mid-group are picked up by the
-                    # pending tick
-                    n1 = len(self._queues[s])
-                    if n0 == 0 or (n0 < self.coalesce <= n1):
+                    # timer), when this submit completed a coalescing
+                    # group, or when it OUTRANKS the queue's current head —
+                    # a lingering low-priority group must not make a
+                    # fresh high-priority chunk wait out its hold; chunks
+                    # landing mid-group otherwise ride the pending tick
+                    q = self._queues[s]
+                    n1 = len(q)
+                    preempt = n0 > 0 and rc.priority > \
+                        self._classes[q[0].klass].priority
+                    if n0 == 0 or preempt or (n0 < self.coalesce <= n1):
                         self._work.notify_all()
                         break
                 return ticket
@@ -992,21 +1048,73 @@ class FeatureService:
         return bool((np.diff(rows) == 1).all())
 
     # -- the background pumps ---------------------------------------------------------
-    def _linger_left(self, queue: deque) -> float:
-        """Seconds shard ``queue``'s head launch group should stay open.
+    def _coalesce_for(self, rc: RequestClass) -> int:
+        """Effective coalescing depth for one class: the class's own when
+        set, else the service-wide depth — capped at the service depth
+        either way (launch buffers are sized ``(coalesce, bucket)``) and
+        forced to 1 on unpacked plans (no coalesced launches there)."""
+        if not self.packed:
+            return 1
+        c = rc.coalesce if rc.coalesce is not None else self.coalesce
+        return max(1, min(c, self.coalesce))
 
-        0 when the group is already full (``coalesce`` same-bucket chunks
-        queued) or the head chunk has aged past the linger deadline —
-        lingering trades a BOUNDED latency for fuller groups, it never
-        holds work indefinitely."""
-        head = queue[0]
+    def _linger_for(self, rc: RequestClass) -> float:
+        return rc.linger_us * 1e-6 if rc.linger_us is not None \
+            else self._linger_s
+
+    def _select_class(self, queue: deque, now: float):
+        """Pick the request class shard ``queue`` serves next (lock held).
+
+        Scores each class PRESENT in the queue by its oldest chunk:
+        ``priority + waited / aging_s`` — static priority plus
+        anti-starvation aging, so a starving ``background`` head
+        eventually outranks a fresh ``interactive`` one and low-priority
+        work always drains. Classes whose head chunk is still in retry
+        backoff are not candidates. Returns ``(klass, head, 0.0)`` for
+        the winner, or ``(None, None, hold)`` when every present class is
+        backing off (``hold`` = seconds until the nearest backoff ends,
+        the caller's wait bound). O(queue) with early exit once every
+        registered class was seen.
+        """
+        heads: dict[str, _Chunk] = {}
+        n_classes = len(self._classes)
+        for ch in queue:
+            if ch.klass not in heads:
+                heads[ch.klass] = ch
+                if len(heads) == n_classes:
+                    break
+        best = best_head = None
+        best_eff = 0.0
+        hold = None
+        for name, ch in heads.items():
+            if ch.not_before > now:
+                h = ch.not_before - now
+                hold = h if hold is None else min(hold, h)
+                continue
+            rc = self._classes[name]
+            eff = rc.priority + (now - ch.t_enq) / rc.aging_s
+            if best is None or eff > best_eff:
+                best, best_head, best_eff = name, ch, eff
+        if best is None:
+            return None, None, hold if hold is not None else 0.0
+        return best, best_head, 0.0
+
+    def _linger_left(self, queue: deque, klass: str, head: _Chunk,
+                     now: float) -> float:
+        """Seconds the selected class's head launch group should stay
+        open. 0 when the group is already full (the CLASS's coalesce
+        depth of same-bucket chunks queued) or the head chunk has aged
+        past the class's linger deadline — lingering trades a BOUNDED
+        latency for fuller groups, it never holds work indefinitely."""
+        rc = self._classes[klass]
+        cap = self._coalesce_for(rc)
         n_match = 0
         for ch in queue:
-            if ch.bucket == head.bucket:
+            if ch.klass == klass and ch.bucket == head.bucket:
                 n_match += 1
-                if n_match >= self.coalesce:
+                if n_match >= cap:
                     return 0.0
-        return head.t_enq + self._linger_s - time.perf_counter()
+        return head.t_enq + self._linger_for(rc) - now
 
     def _all_idle(self) -> bool:
         return not any(q or i or b for q, i, b in
@@ -1047,16 +1155,17 @@ class FeatureService:
                 return "hostserve", s
             if len(self._inflights[s]) >= self.prefetch * self._streams(s):
                 continue
-            hold = queue[0].not_before - now
-            if hold > 0:
-                # head group is backing off after a failed launch: bound
-                # the wait like a linger deadline and skip the shard
+            klass, head, hold = self._select_class(queue, now)
+            if klass is None:
+                # every queued class's head is backing off after a failed
+                # launch: bound the wait like a linger deadline and skip
                 linger_min = hold if linger_min is None \
                     else min(linger_min, hold)
                 continue
-            if self._linger_s > 0 and self.coalesce > 1 \
+            rc = self._classes[klass]
+            if self._linger_for(rc) > 0 and self._coalesce_for(rc) > 1 \
                     and not self._shutdown and not self._flushes:
-                left = self._linger_left(queue)
+                left = self._linger_left(queue, klass, head, now)
                 if left > 0:
                     linger_min = left if linger_min is None \
                         else min(linger_min, left)
@@ -1390,21 +1499,28 @@ class FeatureService:
             self.stats["hedges"] += 1
 
     def _take_group(self, queue: deque, now: float) -> list[_Chunk]:
-        """Pop up to ``coalesce`` queued chunks sharing the head chunk's
-        bucket shape (FIFO otherwise preserved) — one launch group. Stops
-        scanning once the group is full and splices the tail back in bulk,
-        so a long queued burst costs O(Q) per tick, not O(Q) per chunk.
+        """Pop one launch group: the :meth:`_select_class` winner's
+        chunks, up to the CLASS's coalesce depth, sharing the class
+        head's bucket shape (FIFO preserved within the class; other
+        classes' chunks are skipped in place). Stops scanning once the
+        group is full and splices the tail back in bulk, so a long
+        queued burst costs O(Q) per tick, not O(Q) per chunk.
 
         The eviction point for dead work (lock held): chunks of already-
         failed tickets are dropped on sight, a chunk whose ticket's
         ``deadline_ms`` expired resolves it to :class:`DeadlineExceeded`
-        and is dropped BEFORE launch, and the scan stops at a chunk still
-        in retry backoff (``not_before`` ahead of ``now``) — so the group
-        may come back empty."""
+        and is dropped BEFORE launch, and the take stops at a selected-
+        class chunk still in retry backoff (``not_before`` ahead of
+        ``now``) — so the group may come back empty."""
+        klass, _head, _hold = self._select_class(queue, now)
+        if klass is None:
+            return []
+        rc = self._classes[klass]
+        cap = self._coalesce_for(rc)
         group: list[_Chunk] = []
         rest: deque[_Chunk] = deque()
         bucket = None
-        while queue and len(group) < self.coalesce:
+        while queue:
             ch = queue[0]
             if ch.ticket in self._dead:
                 queue.popleft()
@@ -1415,6 +1531,11 @@ class FeatureService:
                 self._fail_ticket_locked(ch.ticket, DeadlineExceeded(
                     f"ticket {ch.ticket} missed its deadline before launch",
                     ticket=ch.ticket, shard=ch.shard), timeout=True)
+                continue
+            if len(group) >= cap:
+                break
+            if ch.klass != klass:
+                rest.append(queue.popleft())
                 continue
             if ch.not_before > now:
                 break
@@ -1449,7 +1570,8 @@ class FeatureService:
         stall = 0.0
         if self._faults is not None:
             stall = self._faults.before_launch(s, stream,
-                                               device=ex.device)
+                                               device=ex.device,
+                                               klass=group[0].klass)
         bucket = group[0].bucket
         if self.packed:
             mat = np.empty((self.coalesce, bucket), np.int32)
@@ -1489,6 +1611,7 @@ class FeatureService:
             total = self._chunks_total.get(ticket)
             if total is None:
                 # dropped by shutdown(drain=False)
+                self._ticket_class.pop(ticket, None)
                 self._retire_prog = i + 1
                 continue
             piece = arr[off:off + n]
@@ -1535,6 +1658,13 @@ class FeatureService:
                 self.stats["latency_s_total"] += lat
                 self.latencies.append(lat)
                 self.stats["completed"] += 1
+                self.stats["latency_samples_total"] += 1
+                self._lat_hist.record(lat)
+                cs = self._class_stats.get(
+                    self._ticket_class.pop(ticket, "default"))
+                if cs is not None:
+                    cs["completed"] += 1
+                    cs["hist"].record(lat)
             self._retire_prog = i + 1
         return landed
 
@@ -1834,10 +1964,11 @@ class FeatureService:
                    if isinstance(ch.dest, (int, np.integer)) else ch.dest)
             ra, rb = ch.rows[below], ch.rows[~below] - cut_local
             ka = _Chunk(ch.ticket, ra, ra.shape[0],
-                        self._bucket(ra.shape[0]), old, pos[below], ch.t_enq)
+                        self._bucket(ra.shape[0]), old, pos[below],
+                        ch.t_enq, klass=ch.klass)
             kb = _Chunk(ch.ticket, rb, rb.shape[0],
                         self._bucket(rb.shape[0]), new, pos[~below],
-                        ch.t_enq)
+                        ch.t_enq, klass=ch.klass)
             keep.append(ka)
             moved.append(kb)
             self._chunks_total[ch.ticket] += 1
@@ -2271,16 +2402,78 @@ class FeatureService:
         return gen()
 
     # -- reporting --------------------------------------------------------------
+    @property
+    def classes(self) -> dict[str, RequestClass]:
+        """The registered request classes (always includes 'default')."""
+        return dict(self._classes)
+
+    def latency_percentile(self, q: float,
+                           klass: str | None = None) -> float:
+        """The q-th per-ticket latency percentile in SECONDS from the
+        streaming histogram — every completed ticket since construction,
+        not the ``latencies`` deque's most-recent-8192 window (which is
+        what ``np.percentile(svc.latencies, ...)`` silently reports once
+        ``stats['latency_samples_total']`` exceeds the window).
+        ``klass`` narrows to one request class."""
+        with self._lock:
+            h = self._lat_hist if klass is None \
+                else self._class_stats[klass]["hist"]
+            return h.percentile(q)
+
+    def class_stats(self) -> dict[str, dict]:
+        """Per-request-class serving picture: counts (requests /
+        completed / failed / pending / rows) plus the class's streaming
+        latency summary (p50/p99/min/max/mean ms over ALL its completed
+        tickets). JSON-safe — what the front door's stats endpoint and
+        the per-class SLO gates read."""
+        with self._lock:
+            out = {}
+            for name, cs in self._class_stats.items():
+                resolved = cs["completed"] + cs["failed"]
+                out[name] = {
+                    "requests": cs["requests"],
+                    "completed": cs["completed"],
+                    "failed": cs["failed"],
+                    "pending": max(cs["requests"] - resolved, 0),
+                    "rows": cs["rows"],
+                    **cs["hist"].summary()}
+            return out
+
+    def reset_latency_window(self) -> None:
+        """Start a fresh latency observation window: clears the
+        bench-compat ``latencies`` deque, the streaming histograms
+        (global and per class) and ``stats['latency_samples_total']``.
+        The serving ledger (requests/completed/failed counters) is NOT
+        touched — this resets what the percentiles COVER (post-warmup
+        benching, scrape intervals), not what happened."""
+        with self._lock:
+            self.latencies.clear()
+            self._lat_hist = LatencyHistogram()
+            self.stats["latency_samples_total"] = 0
+            for cs in self._class_stats.values():
+                cs["hist"] = LatencyHistogram()
+
     def throughput_stats(self, wall_s: float) -> dict:
         rows = self.stats["rows"]
         done = self.stats["completed"]
+        failed = self.stats["failed_tickets"]
         req = self.stats["requests"]
+        resolved = done + failed
+        wall_ok = wall_s > 0
         return {**self.stats, "wall_s": wall_s,
-                "rows_per_s": rows / wall_s if wall_s > 0 else float("inf"),
+                # wall_s <= 0 cannot yield a rate: report 0.0 with the
+                # flag set rather than float('inf'), which json.dump
+                # renders as the non-standard Infinity token downstream
+                # parsers reject
+                "wall_s_invalid": not wall_ok,
+                "rows_per_s": rows / wall_s if wall_ok else 0.0,
                 "mean_latency_s": (self.stats["latency_s_total"] / done
                                    if done else 0.0),
-                # the availability the chaos gate asserts on: completed /
-                # submitted (drain first — pending tickets count against)
-                "availability": done / req if req else 1.0,
+                # the availability the chaos gates assert on: completed
+                # over RESOLVED tickets (completed + failed) — calling
+                # this mid-flight no longer counts still-pending work as
+                # failures; `pending` reports it explicitly
+                "pending": max(req - resolved, 0),
+                "availability": done / resolved if resolved else 1.0,
                 "pad_overhead": (self.stats["padded_rows"] /
                                  max(rows + self.stats["padded_rows"], 1))}

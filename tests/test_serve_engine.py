@@ -1,0 +1,151 @@
+"""ServeEngine slot semantics: ghost slots, per-request stops, truncation.
+
+The engine serves a FIXED (batch_size, max_len) slot array whatever the
+real request count — so the invariants worth locking down are the edge
+behaviors of that padding: ghost (empty) slots must be bit-invisible to
+real requests, per-slot stop conditions (``max_new_tokens`` / ``eos_id``)
+must act per slot without perturbing neighbors, and the ``max_len``
+ceiling must truncate deterministically. Plus the stats-accounting fix:
+``throughput_stats`` stays JSON-safe at ``wall_s == 0``.
+"""
+import json
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = reduced(get_config("glm4-9b"))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(cfg, n=6, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab, n).astype(np.int32)
+
+
+def _greedy(cfg, params, prompt, max_new, *, batch_size, max_len=24):
+    eng = ServeEngine(cfg, params, batch_size=batch_size, max_len=max_len)
+    return eng.run_batch([Request(prompt=prompt.copy(),
+                                  max_new_tokens=max_new)])[0].out_tokens
+
+
+# -- ghost slots ---------------------------------------------------------------------
+def test_ghost_slots_do_not_perturb_real_outputs(engine_setup):
+    """A partially-filled batch zero-pads the unused slots; the real
+    request's greedy decode must be bit-identical to a batch_size=1 run —
+    ghost slots decode garbage into themselves, never into neighbors."""
+    cfg, params = engine_setup
+    p = _prompt(cfg)
+    want = _greedy(cfg, params, p, 6, batch_size=1)
+    for b in (2, 4):
+        got = _greedy(cfg, params, p, 6, batch_size=b)
+        assert got == want, f"ghost slots leaked at batch_size={b}"
+
+
+def test_two_real_slots_match_their_solo_runs(engine_setup):
+    cfg, params = engine_setup
+    pa, pb = _prompt(cfg, seed=1), _prompt(cfg, seed=2)
+    want_a = _greedy(cfg, params, pa, 5, batch_size=1)
+    want_b = _greedy(cfg, params, pb, 5, batch_size=1)
+    eng = ServeEngine(cfg, params, batch_size=4, max_len=24)
+    ra, rb = eng.run_batch([Request(prompt=pa.copy(), max_new_tokens=5),
+                            Request(prompt=pb.copy(), max_new_tokens=5)])
+    assert ra.out_tokens == want_a
+    assert rb.out_tokens == want_b
+
+
+# -- per-request stop conditions -----------------------------------------------------
+def test_per_request_max_new_tokens(engine_setup):
+    """Mixed budgets in one batch: the short request stops at ITS budget
+    (a prefix of the long request's stream for identical prompts), the
+    long one keeps decoding to its own."""
+    cfg, params = engine_setup
+    p = _prompt(cfg, seed=3)
+    eng = ServeEngine(cfg, params, batch_size=4, max_len=24)
+    short, long = eng.run_batch(
+        [Request(prompt=p.copy(), max_new_tokens=2),
+         Request(prompt=p.copy(), max_new_tokens=6)])
+    assert len(short.out_tokens) == 2
+    assert len(long.out_tokens) == 6
+    assert short.out_tokens == long.out_tokens[:2]
+
+
+def test_eos_stops_one_slot_not_its_neighbor(engine_setup):
+    cfg, params = engine_setup
+    p = _prompt(cfg, seed=4)
+    want = _greedy(cfg, params, p, 6, batch_size=4)
+    eos = want[0]
+    eng = ServeEngine(cfg, params, batch_size=4, max_len=24)
+    stopped, full = eng.run_batch(
+        [Request(prompt=p.copy(), max_new_tokens=6, eos_id=eos),
+         Request(prompt=p.copy(), max_new_tokens=6)])
+    # the eos slot emits exactly the stop token, the other decodes on
+    # unperturbed to its full budget
+    assert stopped.out_tokens == [eos]
+    assert full.out_tokens == want
+
+
+def test_all_slots_eos_ends_batch_early(engine_setup):
+    cfg, params = engine_setup
+    p = _prompt(cfg, seed=5)
+    eos = _greedy(cfg, params, p, 1, batch_size=1)[0]
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=24)
+    done = eng.run_batch(
+        [Request(prompt=p.copy(), max_new_tokens=8, eos_id=eos)
+         for _ in range(2)])
+    for r in done:
+        assert r.out_tokens == [eos]
+
+
+# -- max_len truncation --------------------------------------------------------------
+def test_max_len_truncates_decode(engine_setup):
+    """The slot array is (B, max_len): decode stops once the write head
+    hits the ceiling, yielding exactly max_len - plen + 1 new tokens (the
+    prefill's first sample lands before the position check)."""
+    cfg, params = engine_setup
+    plen, max_len = 6, 10
+    p = _prompt(cfg, n=plen, seed=6)
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=max_len)
+    r = eng.run_batch([Request(prompt=p, max_new_tokens=64)])[0]
+    assert len(r.out_tokens) == max_len - plen + 1
+    # the truncated stream is a prefix of a roomier engine's
+    roomy = _greedy(cfg, params, p, 64, batch_size=1, max_len=24)
+    assert r.out_tokens == roomy[:len(r.out_tokens)]
+
+
+# -- input validation ----------------------------------------------------------------
+def test_engine_rejects_bad_batches(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=16)
+    with pytest.raises(ValueError):
+        eng.run_batch([Request(prompt=_prompt(cfg)) for _ in range(3)])
+    with pytest.raises(ValueError):
+        eng.run_batch([Request(prompt=_prompt(cfg, n=4)),
+                       Request(prompt=_prompt(cfg, n=6))])
+
+
+# -- stats accounting ----------------------------------------------------------------
+def test_engine_throughput_stats_json_safe(engine_setup):
+    """Regression: wall_s == 0 used to return tok_per_s = inf, which
+    json.dump emits as the non-standard ``Infinity`` token."""
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, batch_size=1, max_len=16)
+    done = eng.run_batch([Request(prompt=_prompt(cfg),
+                                  max_new_tokens=4)])
+    for wall in (0.0, -0.5):
+        st = eng.throughput_stats(done, wall)
+        assert st["wall_s_invalid"] is True
+        assert st["tok_per_s"] == 0.0
+        json.dumps(st, allow_nan=False)
+    ok = eng.throughput_stats(done, 2.0)
+    assert ok["wall_s_invalid"] is False
+    assert ok["tok_per_s"] == pytest.approx(ok["new_tokens"] / 2.0)
+    assert ok["new_tokens"] == 4
